@@ -1,0 +1,125 @@
+"""Compression-ratio benchmarks: Fig. 6 (vs Sim-Piece/APCA), Fig. 7
+(vs LFZip/HIRE), Fig. 8 (lossless vs GZip/BZip2/zstd/TRC/Gorilla/GD)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines import LOSSLESS, LOSSY
+from repro.core import ShrinkCodec
+from repro.data.synthetic import DATASETS
+
+from .datasets import EPS_FIG6, EPS_FIG7, NINE, Timer, bench_series, cr, eps_values, save_result
+
+
+def _shrink_sizes(v, eps_abs_list, decimals, frac, include_lossless=True):
+    codec = ShrinkCodec.from_fraction(v, frac=frac, backend="best")
+    targets = list(eps_abs_list) + ([0.0] if include_lossless else [])
+    with Timer() as t:
+        cs = codec.compress(v, eps_targets=targets, decimals=decimals)
+    out = {float(e): cs.size_at(e) for e in targets}
+    return out, t.seconds, cs
+
+
+def fig6_piecewise_lossy(n=100_000, datasets=NINE) -> dict:
+    """SHRINK (eps_b = 5% range) vs Sim-Piece vs APCA at the paper's nine
+    error resolutions; dashed line = lossless SHRINK."""
+    results = {}
+    for name in datasets:
+        v = bench_series(name, n)
+        d = DATASETS[name].decimals
+        eps_list = eps_values(name, EPS_FIG6)
+        shrink_sizes, _, _ = _shrink_sizes(v, eps_list, d, frac=0.05)
+        row = {
+            "eps": eps_list,
+            "SHRINK": [cr(len(v), shrink_sizes[e]) for e in eps_list],
+            "SHRINK_lossless": cr(len(v), shrink_sizes[0.0]),
+        }
+        for method in ("SimPiece", "APCA"):
+            crs = []
+            for e in eps_list:
+                blob = LOSSY[method](v, e)
+                crs.append(cr(len(v), len(blob)))
+            row[method] = crs
+        results[name] = row
+    save_result("fig6_piecewise_lossy", results)
+    return results
+
+
+def fig7_general_lossy(n=50_000, datasets=NINE) -> dict:
+    """SHRINK (eps_b = 15% range: compression is the goal) vs LFZip / HIRE
+    at 1e-2..1e-5 of range."""
+    results = {}
+    for name in datasets:
+        v = bench_series(name, n)
+        d = DATASETS[name].decimals
+        eps_list = eps_values(name, EPS_FIG7)
+        shrink_sizes, _, _ = _shrink_sizes(v, eps_list, d, frac=0.15)
+        row = {
+            "eps": eps_list,
+            "SHRINK": [cr(len(v), shrink_sizes[e]) for e in eps_list],
+            "SHRINK_lossless": cr(len(v), shrink_sizes[0.0]),
+        }
+        for method in ("LFZip", "HIRE"):
+            crs = []
+            for e in eps_list:
+                blob = LOSSY[method](v, e)
+                crs.append(cr(len(v), len(blob)))
+            row[method] = crs
+        results[name] = row
+    save_result("fig7_general_lossy", results)
+    return results
+
+
+def fig8_lossless(n=100_000, datasets=NINE) -> dict:
+    """Lossless SHRINK vs the five general-purpose lossless baselines."""
+    results = {}
+    for name in datasets:
+        v = bench_series(name, n)
+        d = DATASETS[name].decimals
+        sizes, _, _ = _shrink_sizes(v, [], d, frac=0.05)
+        row = {"SHRINK": cr(len(v), sizes[0.0])}
+        for method in sorted(LOSSLESS):
+            from repro.baselines import LOSSLESS_D  # noqa
+
+            blob = LOSSLESS[method](v, d)
+            row[method] = cr(len(v), len(blob))
+        results[name] = row
+    save_result("fig8_lossless", results)
+    return results
+
+
+def validate_claims(fig6, fig7, fig8) -> dict:
+    """The paper's headline claims (C1, C2) as checks over our tables."""
+    checks = {}
+    # C1: at the strictest shared eps, SHRINK >= 2x Sim-Piece CR on most sets
+    gains = []
+    for name, row in fig6.items():
+        if not row["eps"]:
+            continue
+        gains.append(row["SHRINK"][-1] / max(row["SimPiece"][-1], 1e-9))
+    checks["C1_strict_eps_gain_vs_simpiece"] = {
+        "median_gain": float(np.median(gains)),
+        "min_gain": float(np.min(gains)),
+        "pass": bool(np.median(gains) >= 2.0),
+    }
+    # C1b: lossy methods degrade below lossless SHRINK at strict eps
+    below = [
+        row["SimPiece"][-1] < row["SHRINK_lossless"]
+        for row in fig6.values()
+        if len(row["eps"]) == len(EPS_FIG6)
+    ]
+    checks["C1b_simpiece_below_lossless_at_1e-4"] = {
+        "fraction": float(np.mean(below)) if below else None,
+        "pass": bool(np.mean(below) >= 0.5) if below else False,
+    }
+    # C2: lossless SHRINK beats every general-purpose lossless on most sets
+    wins = []
+    for name, row in fig8.items():
+        best_other = max(v for k, v in row.items() if k != "SHRINK")
+        wins.append(row["SHRINK"] > best_other)
+    checks["C2_lossless_beats_all"] = {
+        "fraction": float(np.mean(wins)),
+        "pass": bool(np.mean(wins) >= 0.5),
+    }
+    save_result("claims_compression", checks)
+    return checks

@@ -1,0 +1,89 @@
+"""Roofline table assembly: reads artifacts/dryrun/*.json (produced by
+``python -m repro.launch.dryrun``) and renders the EXPERIMENTS.md §Roofline
+table plus the compressed-exchange comparison."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .datasets import save_result
+
+DRYRUN = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def collect(mesh: str = "16x16") -> dict:
+    rows = {}
+    for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        d = json.loads(p.read_text())
+        if d.get("compressed"):
+            continue
+        key = f"{d['arch']}|{d['shape']}"
+        r = d["roofline"]
+        rows[key] = {
+            "arch": d["arch"],
+            "shape": d["shape"],
+            "kind": d["kind"],
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "model_flops_total": r["model_flops_total"],
+            "flops_per_device": d["cost"]["flops_per_device"],
+            "bytes_per_device": d["cost"]["bytes_per_device"],
+            "collective_bytes": d["collectives"]["total_bytes"],
+            "arg_bytes": (d.get("memory") or {}).get("argument_bytes"),
+            "compile_s": d["seconds"]["compile"],
+        }
+    return rows
+
+
+def collect_exchange() -> dict:
+    out = {}
+    for p in sorted(DRYRUN.glob("*__comp.json")):
+        d = json.loads(p.read_text())
+        if "exchange" not in d:
+            continue
+        out[d["arch"]] = {
+            "compressed_bytes": d["exchange"]["compressed"]["collective_bytes"],
+            "plain_bytes": d["exchange"]["plain_psum"]["collective_bytes"],
+            "wire_reduction": d["exchange"]["plain_psum"]["collective_bytes"]
+            / max(d["exchange"]["compressed"]["collective_bytes"], 1),
+            "analytic": d.get("analytic_wire"),
+        }
+    return out
+
+
+def render_table(rows: dict) -> str:
+    hdr = (
+        f"| {'arch':26s} | {'shape':11s} | {'compute s':>10s} | {'memory s':>10s} "
+        f"| {'collect s':>10s} | {'dominant':>10s} | {'useful':>6s} |"
+    )
+    sep = "|" + "-" * 28 + "|" + "-" * 13 + "|" + "-" * 12 + "|" + "-" * 12 + "|" + "-" * 12 + "|" + "-" * 12 + "|" + "-" * 8 + "|"
+    lines = [hdr, sep]
+    for key in sorted(rows):
+        r = rows[key]
+        u = f"{r['useful_flops_ratio']:.3f}" if r["useful_flops_ratio"] else "-"
+        lines.append(
+            f"| {r['arch']:26s} | {r['shape']:11s} | {r['compute_s']:10.3e} | {r['memory_s']:10.3e} "
+            f"| {r['collective_s']:10.3e} | {r['dominant']:>10s} | {u:>6s} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> dict:
+    single = collect("16x16")
+    multi = collect("2x16x16")
+    exchange = collect_exchange()
+    payload = {"single_pod": single, "multi_pod": multi, "exchange": exchange}
+    save_result("roofline", payload)
+    print(f"single-pod cells: {len(single)}   multi-pod cells: {len(multi)}")
+    print(render_table(single))
+    if exchange:
+        print("\ncross-pod exchange (per-device bytes):")
+        for arch, e in exchange.items():
+            print(
+                f"  {arch:28s} plain {e['plain_bytes']/1e6:8.2f}MB -> compressed "
+                f"{e['compressed_bytes']/1e6:8.2f}MB  ({e['wire_reduction']:.2f}x)"
+            )
+    return payload

@@ -1,0 +1,77 @@
+"""Hyper-parameter sensitivity: Fig. 9 (base error threshold eps_b) and
+Fig. 12 (default interval length lambda)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ShrinkCodec
+from repro.data.synthetic import DATASETS
+
+from .datasets import Timer, bench_series, cr, save_result
+
+
+def fig9_eps_b_effect(n=200_000, dataset="WindSpeed") -> dict:
+    """CR vs eps_b in {5%, 8%, 10%} of range at several eps (paper: CR
+    rises as eps_b relaxes — base/residual trade-off)."""
+    v = bench_series(dataset, n)
+    d = DATASETS[dataset].decimals
+    rng = float(v.max() - v.min())
+    eps_list = [e * rng for e in (0.01, 0.005, 0.001)]
+    out = {"eps": eps_list}
+    for frac in (0.05, 0.08, 0.10):
+        codec = ShrinkCodec.from_fraction(v, frac=frac, backend="zstd")
+        cs = codec.compress(v, eps_targets=eps_list)
+        out[f"eps_b={int(frac*100)}%"] = {
+            "cr": [cr(len(v), cs.size_at(e)) for e in eps_list],
+            "base_bytes": len(cs.base_bytes),
+            "k_subbases": cs.base.k,
+        }
+    save_result("fig9_eps_b", out)
+    return out
+
+
+def fig12_lambda_effect(n=200_000, dataset="WindSpeed") -> dict:
+    """CR + compression latency vs lambda (paper: smaller lambda -> higher
+    CR and lower latency)."""
+    v = bench_series(dataset, n)
+    rng = float(v.max() - v.min())
+    eps = 0.001 * rng
+    out = {}
+    for lam in (1e-6, 1e-5, 1e-4, 1e-3, 1e-2):
+        codec = ShrinkCodec(
+            config=type(ShrinkCodec.from_fraction(v).config)(
+                eps_b=0.05 * rng, lam=lam
+            ),
+            backend="zstd",
+        )
+        with Timer() as t:
+            cs = codec.compress(v, eps_targets=[eps])
+        out[f"{lam:.0e}"] = {
+            "cr": cr(len(v), cs.size_at(eps)),
+            "latency_s": t.seconds,
+            "k_subbases": cs.base.k,
+            "segments": cs.base.segment_count(),
+        }
+    save_result("fig12_lambda", out)
+    return out
+
+
+def validate_claims(fig9, fig12) -> dict:
+    checks = {}
+    # C4: CR rises as eps_b relaxes (at the loosest eps)
+    crs = [fig9[f"eps_b={p}%"]["cr"][0] for p in (5, 8, 10)]
+    checks["C4_cr_rises_with_eps_b"] = {
+        "crs": crs,
+        "pass": bool(crs[0] <= crs[2] * 1.05),
+    }
+    lam_keys = sorted(fig12.keys(), key=float)
+    crs12 = [fig12[k]["cr"] for k in lam_keys]
+    lats = [fig12[k]["latency_s"] for k in lam_keys]
+    # C5: smaller lambda -> CR no worse, latency no worse (monotone trend)
+    checks["C5_small_lambda_better"] = {
+        "cr_by_lambda": dict(zip(lam_keys, crs12)),
+        "latency_by_lambda": dict(zip(lam_keys, lats)),
+        "pass": bool(crs12[0] >= crs12[-1] * 0.95),
+    }
+    save_result("claims_sensitivity", checks)
+    return checks

@@ -1,0 +1,69 @@
+"""Shared benchmark plumbing: dataset loading at benchmark sizes, the CR
+accounting rule, and result IO.
+
+CR denominator: S = 16 bytes/row (timestamp f64 + value f64), identical for
+every method — matching the paper's file-size accounting (Table II is
+~16-18 B/row).  Timestamps are a regular grid and are stored by no method.
+
+Default sizes: comparison figures run on 100k-row prefixes (the paper's
+smaller datasets are this size; the pure-Python LFZip/HIRE replays make
+full-size sweeps impractical on 1 CPU — full sizes remain available via
+``--full`` and the scaling study exercises growth explicitly).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import original_size_bytes
+from repro.data.synthetic import DATASETS, load
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+NINE = [
+    "FaceFour", "MoteStrain", "Lightning", "ECG", "Cricket",
+    "WindDirection", "Wafer", "WindSpeed", "Pressure",
+]
+
+# error thresholds of Fig. 6 (piecewise-lossy comparison)
+EPS_FIG6 = [0.01, 0.0075, 0.005, 0.0025, 0.001, 0.00075, 0.0005, 0.00025, 0.0001]
+# Fig. 7 (general-purpose lossy): 1e-2 .. 1e-5 log scale
+EPS_FIG7 = [1e-2, 1e-3, 1e-4, 1e-5]
+
+
+def bench_series(name: str, n: int | None = 100_000) -> np.ndarray:
+    spec = DATASETS[name]
+    rows = spec.rows if n is None else min(n, spec.rows)
+    return load(name, n=rows)
+
+
+def eps_values(name: str, eps_list: list[float]) -> list[float]:
+    """Absolute eps from relative thresholds; 2-decimal datasets stop at
+    1e-3 of range (the paper does the same for WindSpeed/WindDirection)."""
+    spec = DATASETS[name]
+    rng = spec.vmax - spec.vmin
+    floor = 10.0 ** (-spec.decimals) / rng
+    return [e * rng for e in eps_list if e >= floor * 0.99]
+
+
+def cr(n_rows: int, nbytes: int) -> float:
+    return original_size_bytes(n_rows) / max(nbytes, 1)
+
+
+def save_result(name: str, payload: dict) -> Path:
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    p = ARTIFACTS / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=2, default=float))
+    return p
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,115 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs one benchmark per paper table/figure + the roofline assembly, prints
+compact tables, validates the paper's claims (C1..C6), and writes JSON to
+artifacts/bench/.  ``--quick`` shrinks sizes for CI-speed runs; ``--full``
+uses Table II row counts where tractable.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import bench_compression, bench_roofline, bench_scaling, bench_sensitivity, bench_throughput
+
+
+def _fmt_cr_table(fig, methods) -> str:
+    lines = []
+    for name, row in fig.items():
+        if not row["eps"]:
+            continue
+        strict = {m: row[m][-1] for m in methods if m in row}
+        loose = {m: row[m][0] for m in methods if m in row}
+        lines.append(
+            f"  {name:14s} loosest: "
+            + "  ".join(f"{m}={loose[m]:7.1f}" for m in loose)
+            + f"   strictest: "
+            + "  ".join(f"{m}={strict[m]:7.1f}" for m in strict)
+            + f"   lossless(SHRINK)={row['SHRINK_lossless']:.1f}"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small sizes (CI)")
+    ap.add_argument("--full", action="store_true", help="Table II row counts")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args(argv)
+
+    n6 = 20_000 if args.quick else (None if args.full else 100_000)
+    n7 = 10_000 if args.quick else (50_000 if not args.full else 200_000)
+    n8 = 20_000 if args.quick else (100_000 if not args.full else None)
+    n_sens = 30_000 if args.quick else 200_000
+    sizes10 = (
+        (20_000, 50_000, 100_000)
+        if args.quick
+        else (50_000, 100_000, 250_000, 500_000, 1_000_000, 2_000_000)
+    )
+    n11 = 10_000 if args.quick else 50_000
+
+    t0 = time.time()
+    print("== Fig 6: vs Sim-Piece / APCA (piecewise lossy) ==")
+    fig6 = bench_compression.fig6_piecewise_lossy(n=n6)
+    print(_fmt_cr_table(fig6, ["SHRINK", "SimPiece", "APCA"]))
+
+    print("\n== Fig 7: vs LFZip / HIRE (general lossy) ==")
+    fig7 = bench_compression.fig7_general_lossy(n=n7)
+    print(_fmt_cr_table(fig7, ["SHRINK", "LFZip", "HIRE"]))
+
+    print("\n== Fig 8: lossless ==")
+    fig8 = bench_compression.fig8_lossless(n=n8)
+    for name, row in fig8.items():
+        print("  " + name.ljust(14) + "  ".join(f"{k}={v:6.2f}" for k, v in sorted(row.items())))
+
+    checks = bench_compression.validate_claims(fig6, fig7, fig8)
+
+    print("\n== Fig 9: eps_b sensitivity ==")
+    fig9 = bench_sensitivity.fig9_eps_b_effect(n=n_sens)
+    for k, v in fig9.items():
+        if k != "eps":
+            print(f"  {k}: CR={['%.1f' % c for c in v['cr']]} base={v['base_bytes']}B k={v['k_subbases']}")
+
+    print("\n== Fig 12: lambda sensitivity ==")
+    fig12 = bench_sensitivity.fig12_lambda_effect(n=n_sens)
+    for k, v in fig12.items():
+        print(f"  lambda={k}: CR={v['cr']:.1f} latency={v['latency_s']:.2f}s segments={v['segments']}")
+    checks.update(bench_sensitivity.validate_claims(fig9, fig12))
+
+    print("\n== Fig 10: size scaling ==")
+    fig10 = bench_scaling.fig10_size_scaling(sizes=sizes10)
+    for i, n in enumerate(fig10["sizes"]):
+        print(
+            f"  n={n:9d} dict={fig10['dict_bytes'][i]:7d}B (k={fig10['k_subbases'][i]:5d}) "
+            f"timestamps={fig10['timestamp_bytes'][i]:9d}B residual={fig10['residual_bytes'][i]:10d}B "
+            f"CR(lossless)={fig10['cr_lossless'][i]:6.2f}"
+        )
+    checks.update(bench_scaling.validate_claims(fig10))
+
+    print("\n== Fig 11 / Table III: throughput ==")
+    fig11 = bench_throughput.fig11_throughput(n=n11)
+    for name, row in fig11.items():
+        print("  " + name.ljust(14) + "  ".join(f"{k}={v:6.2f}MB/s" for k, v in sorted(row.items())))
+    t3 = bench_throughput.table3_latency(n=n11)
+    checks.update(bench_throughput.validate_claims(fig11))
+
+    if not args.skip_roofline:
+        print("\n== Roofline (from dry-run artifacts) ==")
+        try:
+            bench_roofline.run()
+        except Exception as e:  # dry-run artifacts may not exist yet
+            print(f"  (skipped: {e})")
+
+    print("\n== Paper-claim checks ==")
+    ok = True
+    for k, v in checks.items():
+        status = "PASS" if v.get("pass") else "FAIL"
+        ok = ok and v.get("pass", False)
+        print(f"  [{status}] {k}: { {kk: vv for kk, vv in v.items() if kk != 'pass'} }")
+    print(f"\ntotal bench time: {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

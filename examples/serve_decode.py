@@ -1,0 +1,69 @@
+"""Serving example: continuous batching + SHRINK-quantized KV cache.
+
+    PYTHONPATH=src python examples/serve_decode.py
+
+Boots a reduced qwen3-family model, submits a stream of requests through
+the continuous batcher (more requests than slots -> slot recycling), then
+shows the SHRINK residual-quantized KV block store: ~3.7x cache memory at a
+bounded L-infinity error.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced_config
+from repro.core.jaxshrink import TensorCodecConfig
+from repro.models import build_model
+from repro.serving import ContinuousBatcher, Request, dequantize_cache, quantize_cache
+
+
+def main():
+    cfg = reduced_config(ARCHS["qwen3-0.6b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    decode = jax.jit(model.decode_step)
+    rng = np.random.default_rng(0)
+
+    batcher = ContinuousBatcher(
+        decode_fn=lambda t, c, i: decode(params, t, c, i),
+        make_caches=lambda: model.make_decode_caches(8, 128),
+        n_slots=8,
+        eos_token=-1,
+    )
+    n_requests = 20
+    for rid in range(n_requests):
+        batcher.submit(Request(
+            rid=rid,
+            prompt=rng.integers(1, cfg.vocab_size, size=int(rng.integers(4, 12))).astype(np.int32),
+            max_new_tokens=8,
+        ))
+    t0 = time.perf_counter()
+    done = batcher.run()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(r.prompt) + len(r.generated) for r in done)
+    print(f"served {len(done)} requests / {total_tokens} tokens in {dt:.1f}s "
+          f"({total_tokens/dt:.1f} tok/s on 1 CPU core, 8 slots)")
+    for r in done[:3]:
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.generated}")
+
+    # --- SHRINK-quantized KV block ---
+    caches = batcher.caches
+    c0 = jax.tree.map(lambda a: a[0], caches["groups"]["pos0"])  # first group
+    cache = c0["self"]
+    q = quantize_cache(cache, TensorCodecConfig(block=128, bits=8))
+    back = dequantize_cache(q)
+    raw_bits = cache.k.size * 16 + cache.v.size * 16 + cache.kpos.size * 32
+    err = float(jnp.max(jnp.abs(back.k.astype(jnp.float32) - cache.k.astype(jnp.float32))))
+    print(f"\nquantized KV block: {raw_bits/8/1e3:.1f}KB -> {q.memory_bits()/8/1e3:.1f}KB "
+          f"({raw_bits/q.memory_bits():.2f}x), max dequant err {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end training driver: a small LM through the full framework stack.
+
+    PYTHONPATH=src python examples/train_lm_e2e.py [--steps 200] [--resume]
+
+Exercises: ModelConfig -> build_model -> sharded AdamW train step ->
+deterministic TokenPipeline -> TrainingRunner with async SHRINK-compressed
+checkpoints -> crash-free resume.  On this container it runs a ~9M-param
+qwen3-family model on the single CPU device; the identical code path jits
+onto the 256-chip mesh (launch/train.py).
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.data.pipeline import TokenPipeline
+from repro.models import build_model
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_step import make_train_step
+from repro.training.fault_tolerance import TrainingRunner
+from repro.launch.mesh import make_local_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = ModelConfig(
+        name="lm-9m", family="dense", n_layers=4, d_model=256, n_heads=8,
+        n_kv_heads=4, d_ff=1024, vocab_size=8192, head_dim=32, qk_norm=True,
+        tie_embeddings=True,
+    )
+    model = build_model(cfg)
+    mesh = make_local_mesh(1, 1)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  {n_params/1e6:.1f}M params")
+
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=20, decay_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, mesh, opt_cfg))
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, batch=args.batch, seq_len=args.seq, seed=7)
+
+    def runner_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        params, opt, metrics = step_fn(params, opt, batch)
+        return {"params": params, "opt": opt}, metrics
+
+    def data_fn(step):
+        return jax.tree.map(jnp.asarray, pipe.batch_at(step))
+
+    runner = TrainingRunner(
+        runner_step, data_fn,
+        {"params": params, "opt": adamw_init(params)},
+        ckpt_dir=args.ckpt_dir, ckpt_every=50, codec="shrink:1e-4",
+    )
+    print(f"starting at step {runner.start_step} (resume-aware)")
+    hist = runner.run(args.steps)
+    first = np.mean([h["loss"] for h in hist[:10]])
+    last = np.mean([h["loss"] for h in hist[-10:]])
+    for h in hist[:: max(1, len(hist) // 10)]:
+        print(f"  step {h['step']:4d}  loss {h['loss']:.4f}  gnorm {h['grad_norm']:.3f}")
+    print(f"\nloss: {first:.4f} -> {last:.4f}  ({'IMPROVED' if last < first else 'no improvement'})")
+    assert last < first, "training failed to reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Multi-pod training with the SHRINK-compressed cross-pod exchange.
+
+    PYTHONPATH=src python examples/train_multipod_compressed.py [--steps 30]
+
+Trains the same model twice:
+
+  A. plain f32 cross-pod mean of per-pod gradients
+  B. SHRINK exchange: per-block linear base + int8 residuals quantized on a
+     pod-shared step, error feedback carried across steps (the paper's
+     two-phase decomposition on the DCN wire)
+
+and prints both loss curves + the wire bytes.  The point: ~4x less
+cross-pod traffic with indistinguishable convergence.
+
+NOTE: this container exposes ONE physical core; XLA:CPU's collective
+rendezvous deadlocks when several virtual device threads time-share it, so
+the exchange here runs in single-device EMULATION (bit-identical math to
+``training.grad_compress._compress_leaf``: shared quantization step across
+pods, per-pod int8 residuals, summed then dequantized).  The real
+shard_map collective version of the same code is exercised by
+``python -m repro.launch.dryrun --multi-pod --compressed`` (512 devices)
+and unit-tested in tests/test_sharding.py.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.data.pipeline import TokenPipeline
+from repro.models import build_model
+from repro.training.grad_compress import GradCompressConfig, compression_wire_bytes
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+
+N_PODS = 2
+
+
+def emulated_exchange(grads_stacked, ef, cfg: GradCompressConfig):
+    """Single-device emulation of the compressed pod exchange: same math as
+    grad_compress._compress_leaf, with the psum/pmax/all_gather replaced by
+    explicit axis-0 reductions over the pod dim."""
+    from repro.core.jaxshrink import linear_base_fit
+
+    def one(gs, e):  # gs [P, ...], e [...]
+        p = gs.shape[0]
+        flat = gs.astype(jnp.float32).reshape(p, -1) + e.reshape(1, -1)
+        size = flat.shape[1]
+        pad = (-size) % cfg.block
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((p, pad), jnp.float32)], axis=1)
+        xb = flat.reshape(p, -1, cfg.block)
+        theta, slope = jax.vmap(linear_base_fit)(xb)
+        theta = theta.astype(jnp.bfloat16).astype(jnp.float32)
+        slope = slope.astype(jnp.bfloat16).astype(jnp.float32)
+        t = jnp.arange(cfg.block, dtype=jnp.float32)[None, None, :]
+        r = xb - (theta + slope * t)
+        step = jnp.max(jnp.abs(r), axis=(0, 2), keepdims=True) / cfg.qmax  # pod-shared
+        step = jnp.maximum(step, 1e-12)
+        q = jnp.clip(jnp.round(r / step), -cfg.qmax, cfg.qmax).astype(jnp.int8)
+        local_deq = theta + slope * t + q.astype(jnp.float32) * step
+        new_ef = (xb[0] - local_deq[0]).reshape(-1)[:size].reshape(e.shape)
+        base_sum = theta.sum(0) + slope.sum(0) * t[0]
+        g_sum = base_sum + q.astype(jnp.float32).sum(0) * step[0]
+        return (g_sum.reshape(-1)[:size].reshape(gs.shape[1:]) / p), new_ef
+
+    outs = [one(g, e) for g, e in zip(jax.tree.leaves(grads_stacked), jax.tree.leaves(ef))]
+    td = jax.tree.structure(ef)
+    return (
+        jax.tree.unflatten(td, [o[0] for o in outs]),
+        jax.tree.unflatten(td, [o[1] for o in outs]),
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args(argv)
+
+    cfg = ModelConfig(
+        name="lm-2m", family="dense", n_layers=2, d_model=96, n_heads=4,
+        n_kv_heads=2, d_ff=384, vocab_size=2048, head_dim=24,
+    )
+    model = build_model(cfg)
+    params0 = model.init(jax.random.PRNGKey(0))
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, batch=8, seq_len=128, seed=3)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=5, decay_steps=args.steps)
+    comp_cfg = GradCompressConfig(block=256, bits=8, min_leaf_size=0)
+
+    @jax.jit
+    def pod_grads(params, batch):
+        def one(b):
+            return jax.value_and_grad(lambda p: model.loss(p, b)[0])(params)
+        return jax.vmap(one)(batch)
+
+    exchange_c = jax.jit(lambda g, e: emulated_exchange(g, e, comp_cfg))
+
+    @jax.jit
+    def exchange_p(g, e):
+        return jax.tree.map(lambda x: x.astype(jnp.float32).mean(0), g), e
+
+    def run(compressed: bool):
+        params = jax.tree.map(jnp.copy, params0)
+        opt = adamw_init(params)
+        ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        losses = []
+        for step in range(args.steps):
+            gb = pipe.batch_at(step)
+            batch = jax.tree.map(
+                lambda a: jnp.asarray(a).reshape(N_PODS, -1, *a.shape[1:]), gb
+            )
+            losses_pod, grads_stacked = pod_grads(params, batch)
+            grads, ef = (exchange_c if compressed else exchange_p)(grads_stacked, ef)
+            grads, _ = clip_by_global_norm(grads, opt_cfg.grad_clip)
+            params, opt = adamw_update(opt_cfg, params, grads, opt)
+            losses.append(float(jnp.mean(losses_pod)))
+        return losses
+
+    print(f"training {N_PODS} pods (emulated exchange), ~1.6M params ...")
+    plain = run(False)
+    comp = run(True)
+    cb, rb = compression_wire_bytes(jax.tree.leaves(params0), comp_cfg)
+    print(f"\n{'step':>4s} {'plain':>9s} {'compressed':>11s}")
+    for i in range(0, args.steps, max(1, args.steps // 10)):
+        print(f"{i:4d} {plain[i]:9.4f} {comp[i]:11.4f}")
+    print(f"\nfinal loss: plain {plain[-1]:.4f}  compressed {comp[-1]:.4f} "
+          f"(gap {abs(plain[-1]-comp[-1]):.4f})")
+    print(f"cross-pod wire: {rb/1e6:.2f}MB f32 -> {cb/1e6:.2f}MB SHRINK ({rb/cb:.2f}x)")
+    assert comp[-1] < comp[0], "compressed run failed to learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Every comparator in the paper's evaluation, reimplemented.
+
+Lossy (error-bounded):  Sim-Piece, APCA, LFZip, HIRE
+Lossless:               GZip, BZip2, zstd, TRC, Gorilla, GD
+
+Uniform registry interface for the benchmark harness:
+
+    LOSSY[name](values, eps)          -> bytes
+    LOSSY_D[name](blob)               -> values
+    LOSSLESS[name](values, decimals)  -> bytes
+    LOSSLESS_D[name](blob)            -> values
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import apca, gd, gorilla, hire, lfzip, simpiece, standard
+
+__all__ = ["LOSSY", "LOSSY_D", "LOSSLESS", "LOSSLESS_D"]
+
+LOSSY = {
+    "SimPiece": lambda v, eps: simpiece.compress(v, eps),
+    "APCA": lambda v, eps: apca.compress(v, eps),
+    "LFZip": lambda v, eps: lfzip.compress(v, eps),
+    "HIRE": lambda v, eps: hire.compress(v, eps),
+}
+
+LOSSY_D = {
+    "SimPiece": simpiece.decompress,
+    "APCA": apca.decompress,
+    "LFZip": lfzip.decompress,
+    "HIRE": hire.decompress,
+}
+
+LOSSLESS = {
+    "GZip": lambda v, d: standard.gzip_c.compress(v),
+    "BZip2": lambda v, d: standard.bzip2_c.compress(v),
+    "zstd": lambda v, d: standard.zstd_c.compress(v),
+    "TRC": lambda v, d: standard.trc_c.compress(v),
+    "Gorilla": lambda v, d: gorilla.compress(v),
+    "GD": lambda v, d: gd.compress(v, d),
+}
+
+LOSSLESS_D = {
+    "GZip": standard.gzip_c.decompress,
+    "BZip2": standard.bzip2_c.decompress,
+    "zstd": standard.zstd_c.decompress,
+    "TRC": standard.trc_c.decompress,
+    "Gorilla": gorilla.decompress,
+    "GD": gd.decompress,
+}

@@ -1,0 +1,70 @@
+"""Bit-level IO helpers shared by the Gorilla and GD baselines."""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["BitWriter", "BitReader", "pack_fixed", "unpack_fixed"]
+
+
+class BitWriter:
+    """MSB-first bit writer; ~O(1) amortized per write call."""
+
+    def __init__(self) -> None:
+        self.buf = bytearray()
+        self.acc = 0
+        self.nacc = 0
+
+    def write(self, value: int, nbits: int) -> None:
+        if nbits == 0:
+            return
+        self.acc = (self.acc << nbits) | (value & ((1 << nbits) - 1))
+        self.nacc += nbits
+        while self.nacc >= 8:
+            self.nacc -= 8
+            self.buf.append((self.acc >> self.nacc) & 0xFF)
+        self.acc &= (1 << self.nacc) - 1
+
+    def finish(self) -> bytes:
+        if self.nacc:
+            self.buf.append((self.acc << (8 - self.nacc)) & 0xFF)
+            self.acc = 0
+            self.nacc = 0
+        return bytes(self.buf)
+
+
+class BitReader:
+    def __init__(self, data: bytes) -> None:
+        self.data = data
+        self.pos = 0  # bit position
+
+    def read(self, nbits: int) -> int:
+        if nbits == 0:
+            return 0
+        out = 0
+        pos = self.pos
+        data = self.data
+        for _ in range(nbits):
+            byte = data[pos >> 3] if (pos >> 3) < len(data) else 0
+            bit = (byte >> (7 - (pos & 7))) & 1
+            out = (out << 1) | bit
+            pos += 1
+        self.pos = pos
+        return out
+
+
+def pack_fixed(vals: np.ndarray, width: int) -> bytes:
+    """Vectorized fixed-width bit packing of non-negative ints."""
+    if width == 0 or vals.size == 0:
+        return b""
+    v = vals.astype(np.uint64)
+    bitmat = ((v[:, None] >> np.arange(width - 1, -1, -1, dtype=np.uint64)) & 1).astype(np.uint8)
+    return np.packbits(bitmat.reshape(-1)).tobytes()
+
+
+def unpack_fixed(data: bytes, count: int, width: int) -> np.ndarray:
+    if width == 0 or count == 0:
+        return np.zeros(count, dtype=np.int64)
+    bits = np.unpackbits(np.frombuffer(data, dtype=np.uint8))[: count * width]
+    bitmat = bits.reshape(count, width).astype(np.uint64)
+    weights = np.left_shift(np.uint64(1), np.arange(width - 1, -1, -1, dtype=np.uint64))
+    return (bitmat * weights).sum(axis=1).astype(np.int64)

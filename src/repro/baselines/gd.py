@@ -1,0 +1,95 @@
+"""Generalized Deduplication baseline (Vestergaard et al., INFOCOM 2020;
+GreedyGD, Hurst et al., 2024) — lossless, random-access-friendly.
+
+Values with d decimals are lifted to integers at scale 10^d; each integer is
+split into a high-bit *base* and a low-bit *deviation*.  Bases deduplicate
+through a dictionary; the stream stores per-value (base id, deviation).  The
+deviation width is chosen per dataset by exhaustive cost scan — the greedy
+bit-selection of GreedyGD specialised to contiguous low-bit deviations.
+"""
+from __future__ import annotations
+
+import math
+import struct
+
+import numpy as np
+
+from .bitio import pack_fixed, unpack_fixed
+from ..core.serialize import read_varint, write_varint
+
+__all__ = ["compress", "decompress", "choose_deviation_bits"]
+
+_MAGIC = b"GDDP"
+
+
+def _to_ints(values: np.ndarray, decimals: int) -> np.ndarray:
+    return np.round(np.asarray(values, dtype=np.float64) * 10.0**decimals).astype(np.int64)
+
+
+def choose_deviation_bits(ints: np.ndarray) -> tuple[int, int]:
+    """Scan deviation widths; return (bits, estimated_total_bytes)."""
+    off = ints - ints.min()
+    max_bits = max(1, int(off.max()).bit_length()) if off.size else 1
+    best = (0, math.inf)
+    for b in range(0, max_bits + 1):
+        bases = off >> b
+        u = int(np.unique(bases).size)
+        id_bits = max(1, (u - 1).bit_length()) if u > 1 else 1
+        cost = u * 8 + (off.size * (id_bits + b)) / 8
+        if cost < best[1]:
+            best = (b, cost)
+    return best[0], int(best[1])
+
+
+def compress(values: np.ndarray, decimals: int) -> bytes:
+    ints = _to_ints(values, decimals)
+    lo = int(ints.min()) if ints.size else 0
+    off = (ints - lo).astype(np.uint64)
+    b, _ = choose_deviation_bits(ints)
+    bases = (off >> np.uint64(b)).astype(np.int64)
+    devs = (off & np.uint64((1 << b) - 1)).astype(np.int64) if b else np.zeros_like(bases)
+    uniq, ids = np.unique(bases, return_inverse=True)
+    id_bits = max(1, (len(uniq) - 1).bit_length()) if len(uniq) > 1 else 1
+
+    buf = bytearray()
+    buf += _MAGIC
+    write_varint(buf, len(ints))
+    buf += struct.pack("<qBB", lo, decimals, b)
+    write_varint(buf, len(uniq))
+    prev = 0
+    for u in uniq.tolist():  # sorted ascending -> delta varint
+        write_varint(buf, u - prev)
+        prev = u
+    ids_packed = pack_fixed(ids.astype(np.uint64), id_bits)
+    devs_packed = pack_fixed(devs.astype(np.uint64), b)
+    buf.append(id_bits)
+    write_varint(buf, len(ids_packed))
+    buf += ids_packed
+    write_varint(buf, len(devs_packed))
+    buf += devs_packed
+    return bytes(buf)
+
+
+def decompress(blob: bytes) -> np.ndarray:
+    if blob[:4] != _MAGIC:
+        raise ValueError("bad GD magic")
+    pos = 4
+    n, pos = read_varint(blob, pos)
+    lo, decimals, b = struct.unpack_from("<qBB", blob, pos)
+    pos += 10
+    u, pos = read_varint(blob, pos)
+    uniq = np.empty(u, dtype=np.int64)
+    prev = 0
+    for i in range(u):
+        d, pos = read_varint(blob, pos)
+        prev += d
+        uniq[i] = prev
+    id_bits = blob[pos]
+    pos += 1
+    ids_len, pos = read_varint(blob, pos)
+    ids = unpack_fixed(blob[pos : pos + ids_len], n, id_bits)
+    pos += ids_len
+    devs_len, pos = read_varint(blob, pos)
+    devs = unpack_fixed(blob[pos : pos + devs_len], n, b)
+    ints = (uniq[ids] << b) + devs + lo
+    return ints.astype(np.float64) / 10.0**decimals

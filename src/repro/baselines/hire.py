@@ -1,0 +1,82 @@
+"""HIRE-style baseline (Barbarioli et al., SIGMOD/PACMMOD 2023) —
+hierarchical residual encoding with max-error pruning.
+
+Top-down dyadic decomposition: a node covering [lo, hi) stores its mid-range
+value; if every point is within eps of it the node is a leaf, otherwise it
+splits in half and the children encode residual structure.  Leaf values are
+quantized onto the eps grid and entropy-coded; the tree shape is a bit per
+node.  This captures HIRE's hierarchical-residual/multiresolution mechanism
+in a compact reimplementation (documented deviation: HIRE fits per-level
+affine functions; we use mid-range constants, which matches its behaviour on
+the piecewise-flat IoT series benchmarked here).
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from .bitio import BitReader, BitWriter
+from ..core import entropy
+
+__all__ = ["compress", "decompress"]
+
+_MAGIC = b"HIRE"
+
+
+def compress(values: np.ndarray, eps: float) -> bytes:
+    values = np.asarray(values, dtype=np.float64)
+    n = len(values)
+    structure = BitWriter()
+    leaf_vals: list[int] = []
+
+    # iterative DFS, preorder; grid-quantize leaf mid-ranges to step eps
+    stack: list[tuple[int, int]] = [(0, n)]
+    while stack:
+        lo, hi = stack.pop()
+        seg = values[lo:hi]
+        vmin = float(seg.min())
+        vmax = float(seg.max())
+        mid = 0.5 * (vmin + vmax)
+        qmid = int(round(mid / eps)) if eps > 0 else 0
+        ok = (vmax - vmin) <= 2 * eps and abs(qmid * eps - mid) + 0.5 * (vmax - vmin) <= eps
+        if ok or hi - lo == 1:
+            structure.write(1, 1)
+            if hi - lo == 1:
+                qmid = int(round(float(seg[0]) / eps))
+            leaf_vals.append(qmid)
+        else:
+            structure.write(0, 1)
+            m = (lo + hi) // 2
+            stack.append((m, hi))  # preorder: left first -> push right first
+            stack.append((lo, m))
+    sbits = structure.finish()
+    payload = entropy.encode_ints(np.array(leaf_vals, dtype=np.int64), backend="best")
+    return (
+        _MAGIC
+        + struct.pack("<Qd I", n, eps, len(sbits))
+        + sbits
+        + payload
+    )
+
+
+def decompress(blob: bytes) -> np.ndarray:
+    if blob[:4] != _MAGIC:
+        raise ValueError("bad HIRE magic")
+    n, eps, slen = struct.unpack_from("<QdI", blob, 4)
+    off = 4 + 20
+    sbits = BitReader(blob[off : off + slen])
+    leaf_vals = entropy.decode_ints(blob[off + slen :])
+    out = np.empty(n, dtype=np.float64)
+    li = 0
+    stack: list[tuple[int, int]] = [(0, n)]
+    while stack:
+        lo, hi = stack.pop()
+        if sbits.read(1) == 1:
+            out[lo:hi] = leaf_vals[li] * eps
+            li += 1
+        else:
+            m = (lo + hi) // 2
+            stack.append((m, hi))
+            stack.append((lo, m))
+    return out

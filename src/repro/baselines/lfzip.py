@@ -1,0 +1,86 @@
+"""LFZip baseline (Chandak et al., DCC 2020) — lossy floating-point
+compression via an adaptive (NLMS) linear predictor + uniform quantization of
+the prediction error + entropy coding.
+
+We use filter order 8 (the original defaults to 32; order 8 keeps the pure
+-Python replay tractable on multi-hundred-k series and costs little CR at the
+error levels benchmarked — noted in EXPERIMENTS.md).  Quantization uses step
+2*eps with round-to-nearest, so |v - v_hat| <= eps.
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from ..core import entropy
+
+__all__ = ["compress", "decompress", "ORDER"]
+
+_MAGIC = b"LFZP"
+ORDER = 8
+_MU = 0.5
+_EPS_NORM = 1e-6
+
+
+def _nlms_quantize(values: np.ndarray, eps: float) -> tuple[np.ndarray, float]:
+    """Replay NLMS on reconstructed values; return quantized error ints."""
+    n = len(values)
+    step = 2.0 * eps
+    w = [0.0] * ORDER
+    hist = [0.0] * ORDER  # most recent first
+    q = np.empty(n, dtype=np.int64)
+    vals = values.tolist()
+    for i in range(n):
+        pred = 0.0
+        for j in range(ORDER):
+            pred += w[j] * hist[j]
+        e = vals[i] - pred
+        qi = int(round(e / step))
+        q[i] = qi
+        recon = pred + qi * step
+        # NLMS update with reconstructed error (decoder-replayable)
+        err = recon - pred
+        norm = _EPS_NORM
+        for j in range(ORDER):
+            norm += hist[j] * hist[j]
+        g = _MU * err / norm
+        for j in range(ORDER):
+            w[j] += g * hist[j]
+        hist.pop()
+        hist.insert(0, recon)
+    return q, step
+
+
+def compress(values: np.ndarray, eps: float) -> bytes:
+    values = np.asarray(values, dtype=np.float64)
+    q, step = _nlms_quantize(values, eps)
+    payload = entropy.encode_ints(q, backend="best")
+    return _MAGIC + struct.pack("<Qd", len(values), step) + payload
+
+
+def decompress(blob: bytes) -> np.ndarray:
+    if blob[:4] != _MAGIC:
+        raise ValueError("bad LFZip magic")
+    n, step = struct.unpack_from("<Qd", blob, 4)
+    q = entropy.decode_ints(blob[20:])
+    out = np.empty(n, dtype=np.float64)
+    w = [0.0] * ORDER
+    hist = [0.0] * ORDER
+    ql = q.tolist()
+    for i in range(n):
+        pred = 0.0
+        for j in range(ORDER):
+            pred += w[j] * hist[j]
+        recon = pred + ql[i] * step
+        out[i] = recon
+        err = recon - pred
+        norm = _EPS_NORM
+        for j in range(ORDER):
+            norm += hist[j] * hist[j]
+        g = _MU * err / norm
+        for j in range(ORDER):
+            w[j] += g * hist[j]
+        hist.pop()
+        hist.insert(0, recon)
+    return out

@@ -1,0 +1,115 @@
+"""General-purpose lossless baselines: GZip, BZip2, zstd, and TRC.
+
+Input representation: the raw float64 value stream (8 B/value).  Timestamps
+are a regular grid for every benchmark series and are reconstructible for
+free by all methods (SHRINK does not store them either), so the comparison
+is apples-to-apples; the CR denominator (16 B/row) is shared — see
+benchmarks/datasets.py.
+
+"TRC" (Turbo Range Coder) is represented by our adaptive range coder from
+``core.entropy`` applied to the byte stream (small inputs) or zstd in a
+byte-transposed layout (large inputs) — the transposition plays the role of
+TRC's BWT block reordering for this data class.
+"""
+from __future__ import annotations
+
+import bz2 as _bz2
+import struct
+import zlib as _zlib
+
+import numpy as np
+
+from ..core import entropy
+
+try:
+    import zstandard as _zstd
+except Exception:  # pragma: no cover
+    _zstd = None
+
+__all__ = ["gzip_c", "bzip2_c", "zstd_c", "trc_c"]
+
+
+def _tag(name: bytes, n: int, payload: bytes) -> bytes:
+    return name + struct.pack("<Q", n) + payload
+
+
+def _untag(blob: bytes) -> tuple[bytes, int, bytes]:
+    return blob[:4], struct.unpack_from("<Q", blob, 4)[0], blob[12:]
+
+
+class gzip_c:
+    name = "GZip"
+
+    @staticmethod
+    def compress(values: np.ndarray) -> bytes:
+        raw = np.asarray(values, dtype=np.float64).tobytes()
+        return _tag(b"GZIP", len(values), _zlib.compress(raw, 9))
+
+    @staticmethod
+    def decompress(blob: bytes) -> np.ndarray:
+        _, n, payload = _untag(blob)
+        return np.frombuffer(_zlib.decompress(payload), dtype=np.float64)
+
+
+class bzip2_c:
+    name = "BZip2"
+
+    @staticmethod
+    def compress(values: np.ndarray) -> bytes:
+        raw = np.asarray(values, dtype=np.float64).tobytes()
+        return _tag(b"BZP2", len(values), _bz2.compress(raw, 9))
+
+    @staticmethod
+    def decompress(blob: bytes) -> np.ndarray:
+        _, n, payload = _untag(blob)
+        return np.frombuffer(_bz2.decompress(payload), dtype=np.float64)
+
+
+class zstd_c:
+    name = "zstd"
+
+    @staticmethod
+    def compress(values: np.ndarray) -> bytes:
+        raw = np.asarray(values, dtype=np.float64).tobytes()
+        comp = _zstd.ZstdCompressor(level=19).compress(raw)
+        return _tag(b"ZSTD", len(values), comp)
+
+    @staticmethod
+    def decompress(blob: bytes) -> np.ndarray:
+        _, n, payload = _untag(blob)
+        raw = _zstd.ZstdDecompressor().decompress(payload)
+        return np.frombuffer(raw, dtype=np.float64)
+
+
+class trc_c:
+    name = "TRC"
+    _RC_LIMIT = 150_000  # bytes through the pure-python coder
+
+    @staticmethod
+    def compress(values: np.ndarray) -> bytes:
+        v = np.asarray(values, dtype=np.float64)
+        raw = v.tobytes()
+        if len(raw) <= trc_c._RC_LIMIT:
+            sym = np.frombuffer(raw, dtype=np.uint8).astype(np.int64)
+            payload = b"\x00" + entropy.encode_ints(sym, backend="rc")
+        else:
+            # byte-plane transposition (BWT-like reordering) + zstd entropy stage
+            planes = v.view(np.uint64)
+            mat = np.stack([(planes >> np.uint64(8 * i)) & np.uint64(0xFF) for i in range(8)])
+            body = mat.astype(np.uint8).tobytes()
+            payload = b"\x01" + _zstd.ZstdCompressor(level=19).compress(body)
+        return _tag(b"TRC0", len(v), payload)
+
+    @staticmethod
+    def decompress(blob: bytes) -> np.ndarray:
+        _, n, payload = _untag(blob)
+        mode, body = payload[0], payload[1:]
+        if mode == 0:
+            sym = entropy.decode_ints(body).astype(np.uint8)
+            return np.frombuffer(sym.tobytes(), dtype=np.float64)
+        raw = _zstd.ZstdDecompressor().decompress(body)
+        mat = np.frombuffer(raw, dtype=np.uint8).reshape(8, n).astype(np.uint64)
+        planes = np.zeros(n, dtype=np.uint64)
+        for i in range(8):
+            planes |= mat[i] << np.uint64(8 * i)
+        return planes.view(np.float64).copy()

@@ -1,0 +1,31 @@
+"""SHRINK core: semantics extraction, base construction, residual encoding.
+
+Public API re-exports.
+"""
+from .types import (  # noqa: F401
+    Base,
+    CompressedSeries,
+    ResidualStream,
+    Segment,
+    ShrinkConfig,
+    SubBase,
+)
+from .phases import default_interval_length, divide, eps_hat_for_level  # noqa: F401
+from .semantics import extract_semantics, extract_semantics_py  # noqa: F401
+from .base import base_predictions, construct_base, practical_eps_b  # noqa: F401
+from .slope import optimized_slope, shortest_decimal_in_interval  # noqa: F401
+from .residuals import (  # noqa: F401
+    compute_residuals,
+    dequantize_exact,
+    dequantize_residuals,
+    quantize_exact,
+    quantize_residuals,
+)
+from .shrink import (  # noqa: F401
+    BYTES_PER_ROW,
+    ShrinkCodec,
+    cs_from_bytes,
+    cs_to_bytes,
+    original_size_bytes,
+)
+from . import entropy, serialize  # noqa: F401

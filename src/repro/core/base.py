@@ -1,0 +1,114 @@
+"""Knowledge-base construction (Alg. 4 of the paper).
+
+Cones are grouped by their quantized origin (same adaptive-grid index and
+the same fluctuation level -> identical float theta), ordered inside each
+group by ascending psi_lo, and greedily merged while the spans intersect.
+Sorting by the lower slope makes the greedy scan optimal (interval-graph
+perfect elimination — the same argument as Sim-Piece [13], [19], [20]).
+
+The merged sub-base keeps the *intersection* of the member spans, so any
+line inside it approximates every member segment's points within that
+segment's eps_hat.
+"""
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+
+import numpy as np
+
+from .phases import eps_hat_for_level
+from .slope import optimized_slope
+from .types import Base, Segment, ShrinkConfig, SubBase
+
+__all__ = ["construct_base", "base_predictions", "practical_eps_b"]
+
+
+def _origin_key(seg: Segment, config: ShrinkConfig) -> tuple[int, int]:
+    eps_hat = eps_hat_for_level(seg.level, config)
+    idx = int(round(seg.theta / eps_hat))
+    return (seg.level, idx)
+
+
+def construct_base(
+    segments: list[Segment],
+    n: int,
+    vmin: float,
+    vmax: float,
+    config: ShrinkConfig,
+) -> Base:
+    """Alg. 4: group by origin, sort by psi_lo, greedy merge intersections."""
+    groups: dict[tuple[int, int], list[Segment]] = defaultdict(list)
+    for seg in segments:
+        groups[_origin_key(seg, config)].append(seg)
+
+    subbases: list[SubBase] = []
+    for key in sorted(groups.keys()):
+        group = sorted(groups[key], key=lambda s: (s.psi_lo, s.psi_hi))
+        cur_lo, cur_hi = -math.inf, math.inf
+        cur_members: list[Segment] = []
+        level, _ = key
+
+        def _flush() -> None:
+            if not cur_members:
+                return
+            slope, digits = optimized_slope(cur_lo, cur_hi)
+            t0s = np.array([s.t0 for s in cur_members], dtype=np.int64)
+            order = np.argsort(t0s)
+            lengths = np.array([s.length for s in cur_members], dtype=np.int64)[order]
+            subbases.append(
+                SubBase(
+                    theta=cur_members[0].theta,
+                    level=level,
+                    psi_lo=cur_lo,
+                    psi_hi=cur_hi,
+                    slope=slope,
+                    slope_digits=digits,
+                    t0s=t0s[order],
+                    lengths=lengths,
+                )
+            )
+
+        for seg in group:
+            lo, hi = seg.psi_lo, seg.psi_hi
+            new_lo = max(cur_lo, lo)
+            new_hi = min(cur_hi, hi)
+            if not cur_members or new_lo <= new_hi:
+                cur_lo, cur_hi = new_lo, new_hi
+                cur_members.append(seg)
+            else:
+                _flush()
+                cur_lo, cur_hi, cur_members = lo, hi, [seg]
+        _flush()
+
+    # deterministic order: by first timestamp (helps delta-coding timestamps)
+    subbases.sort(key=lambda sb: int(sb.t0s[0]))
+    return Base(n=n, config=config, vmin=vmin, vmax=vmax, subbases=subbases)
+
+
+def base_predictions(base: Base) -> np.ndarray:
+    """Vectorized reconstruction of the base-only approximation (n floats)."""
+    n = base.n
+    if n == 0:
+        return np.zeros(0, dtype=np.float64)
+    segs = [
+        (int(t0), int(ln), sb.theta, sb.slope)
+        for sb in base.subbases
+        for t0, ln in zip(sb.t0s.tolist(), sb.lengths.tolist())
+    ]
+    segs.sort()
+    t0s = np.array([s[0] for s in segs], dtype=np.int64)
+    lens = np.array([s[1] for s in segs], dtype=np.int64)
+    thetas = np.array([s[2] for s in segs], dtype=np.float64)
+    slopes = np.array([s[3] for s in segs], dtype=np.float64)
+    theta = np.repeat(thetas, lens)
+    slope = np.repeat(slopes, lens)
+    start = np.repeat(t0s.astype(np.float64), lens)
+    t = np.arange(n, dtype=np.float64)
+    return theta + slope * (t - start)
+
+
+def practical_eps_b(values: np.ndarray, base: Base) -> float:
+    """The paper's \\hat{eps}_b: realized max |v - base prediction|."""
+    pred = base_predictions(base)
+    return float(np.max(np.abs(values - pred))) if base.n else 0.0

@@ -1,0 +1,86 @@
+"""Adaptive phase division (Alg. 2 of the paper).
+
+Given a start index ``j``, look ahead over the *default interval*
+``L = lam * n * eps_b`` points, measure the local fluctuation level
+``beta = (local max-min) / (global max-min)`` and derive the adaptive base
+threshold of Eq. 4:
+
+    eps_hat_b = eps_b * exp(2/3 - beta)
+
+The cone origin (Eq. 5) is the start value floored onto the eps_hat_b grid.
+
+Implementation notes (documented deviations):
+
+* ``beta`` is quantized to ``config.beta_levels`` discrete levels.  The
+  paper's base-merging phase (Alg. 4) groups cones whose quantized origins
+  are *equal*; with a continuous beta, eps_hat_b (and hence the origin grid)
+  would almost never repeat and merging would degenerate.  Quantizing beta
+  keeps adaptivity (16 levels by default) while making origin collisions —
+  the mechanism the paper's compression relies on — actually occur.
+* L is clamped to [min_interval, max_interval] and to the series end.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .types import ShrinkConfig
+
+__all__ = [
+    "default_interval_length",
+    "beta_level",
+    "eps_hat_for_level",
+    "quantize_origin",
+    "divide",
+]
+
+
+def default_interval_length(n: int, config: ShrinkConfig) -> int:
+    """Alg. 2 line 4:  L = lam * n * eps_b  (clamped)."""
+    raw = config.lam * n * config.eps_b
+    return int(min(max(raw, config.min_interval), config.max_interval))
+
+
+def beta_level(delta_local: float, delta_global: float, config: ShrinkConfig) -> int:
+    """Quantized fluctuation level in [0, beta_levels]."""
+    if delta_global <= 0:
+        return 0
+    beta = min(max(delta_local / delta_global, 0.0), 1.0)
+    return int(round(beta * config.beta_levels))
+
+
+def eps_hat_for_level(level: int, config: ShrinkConfig) -> float:
+    """Eq. 4 with quantized beta: eps_b * exp(2/3 - level/beta_levels)."""
+    beta = level / config.beta_levels
+    return config.eps_b * math.exp(2.0 / 3.0 - beta)
+
+
+def quantize_origin(value: float, eps_hat: float) -> float:
+    """Eq. 5: Theta = floor(v / eps_hat) * eps_hat."""
+    return math.floor(value / eps_hat) * eps_hat
+
+
+def divide(
+    values: np.ndarray,
+    j: int,
+    L: int,
+    delta_global: float,
+    config: ShrinkConfig,
+) -> tuple[float, int, float]:
+    """Alg. 2 (DIVISION): returns (theta, level, eps_hat) for a cone at j.
+
+    values:       the full series (float64 [n]).
+    j:            start index of the new cone.
+    L:            default interval length (precomputed once per series).
+    delta_global: global max - min of the series.
+    """
+    window = values[j : j + max(L, 2)]
+    if window.size >= 2:
+        delta_local = float(window.max() - window.min())
+    else:
+        delta_local = 0.0
+    level = beta_level(delta_local, delta_global, config)
+    eps_hat = eps_hat_for_level(level, config)
+    theta = quantize_origin(float(values[j]), eps_hat)
+    return theta, level, eps_hat

@@ -1,0 +1,122 @@
+"""Semantics extraction via shrinking cones (Alg. 3 of the paper).
+
+A cone starts at index ``t0`` with a quantized origin ``theta`` (Alg. 2 /
+phases.py) and an adaptive threshold ``eps_hat`` fixed for its lifetime.
+Every subsequent point (dt = i - t0 > 0) constrains the feasible slope set to
+
+    [ (v_i - eps_hat - theta)/dt ,  (v_i + eps_hat - theta)/dt ]
+
+and the cone keeps the running intersection (psi_lo, psi_hi).  When the
+intersection empties, the cone closes and a new one starts at the violating
+point — Fig. 2(b) of the paper.
+
+Two implementations with identical semantics:
+
+* ``extract_semantics_py``  — literal per-point loop; the test oracle.
+* ``extract_semantics``     — chunked-vectorized numpy scan (production host
+  path).  Within a candidate chunk the running intersection is a prefix
+  min/max (``np.minimum.accumulate``), and the first emptiness is located
+  with ``argmax`` — O(n) total work, numpy-speed.
+
+The Pallas kernel ``kernels/cone_scan.py`` implements the same recurrence on
+TPU using the sequential-grid idiom; ``kernels/ref.py`` mirrors this module.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .phases import default_interval_length, divide
+from .types import Segment, ShrinkConfig
+
+__all__ = ["extract_semantics", "extract_semantics_py", "global_range"]
+
+_INF = math.inf
+
+
+def global_range(values: np.ndarray) -> tuple[float, float]:
+    return float(values.min()), float(values.max())
+
+
+def extract_semantics_py(values: np.ndarray, config: ShrinkConfig) -> list[Segment]:
+    """Reference loop implementation (kept simple; used as the oracle)."""
+    n = int(values.shape[0])
+    if n == 0:
+        return []
+    vmin, vmax = global_range(values)
+    delta_global = vmax - vmin
+    L = default_interval_length(n, config)
+
+    segments: list[Segment] = []
+    i = 0
+    while i < n:
+        theta, level, eps_hat = divide(values, i, L, delta_global, config)
+        psi_lo, psi_hi = -_INF, _INF
+        j = i + 1
+        while j < n:
+            dt = float(j - i)
+            hi = (float(values[j]) + eps_hat - theta) / dt
+            lo = (float(values[j]) - eps_hat - theta) / dt
+            new_hi = min(psi_hi, hi)
+            new_lo = max(psi_lo, lo)
+            if new_lo > new_hi:
+                break  # cone empty -> close at j-1, next cone starts at j
+            psi_lo, psi_hi = new_lo, new_hi
+            j += 1
+        segments.append(
+            Segment(theta=theta, level=level, psi_lo=psi_lo, psi_hi=psi_hi, t0=i, length=j - i)
+        )
+        i = j
+    return segments
+
+
+def extract_semantics(values: np.ndarray, config: ShrinkConfig) -> list[Segment]:
+    """Chunked-vectorized scan; semantics identical to extract_semantics_py."""
+    values = np.asarray(values, dtype=np.float64)
+    n = int(values.shape[0])
+    if n == 0:
+        return []
+    vmin, vmax = global_range(values)
+    delta_global = vmax - vmin
+    L = default_interval_length(n, config)
+
+    segments: list[Segment] = []
+    i = 0
+    while i < n:
+        theta, level, eps_hat = divide(values, i, L, delta_global, config)
+        psi_lo, psi_hi = -_INF, _INF
+        j = i + 1
+        chunk = 256
+        closed = False
+        while j < n:
+            end = min(n, j + chunk)
+            dt = np.arange(j - i, end - i, dtype=np.float64)
+            seg_vals = values[j:end]
+            hi = (seg_vals + (eps_hat - theta)) / dt
+            lo = (seg_vals - (eps_hat + theta)) / dt
+            run_hi = np.minimum(np.minimum.accumulate(hi), psi_hi)
+            run_lo = np.maximum(np.maximum.accumulate(lo), psi_lo)
+            viol = run_lo > run_hi
+            if viol.any():
+                idx = int(np.argmax(viol))
+                if idx > 0:
+                    psi_hi = float(run_hi[idx - 1])
+                    psi_lo = float(run_lo[idx - 1])
+                k = j + idx
+                segments.append(
+                    Segment(theta=theta, level=level, psi_lo=psi_lo, psi_hi=psi_hi, t0=i, length=k - i)
+                )
+                i = k
+                closed = True
+                break
+            psi_hi = float(run_hi[-1])
+            psi_lo = float(run_lo[-1])
+            j = end
+            chunk = min(chunk * 2, 65536)
+        if not closed:
+            segments.append(
+                Segment(theta=theta, level=level, psi_lo=psi_lo, psi_hi=psi_hi, t0=i, length=n - i)
+            )
+            i = n
+    return segments

@@ -1,0 +1,193 @@
+"""Byte-level serialization of the SHRINK knowledge base and residuals.
+
+Compression ratios in the paper are measured on real bytes; so are ours.
+Layout (little-endian):
+
+Base blob:
+    magic  b"SHRB"
+    u8     version
+    varint n
+    f64    eps_b, f64 lam, u8 beta_levels
+    f64    vmin, f64 vmax
+    varint k (number of sub-bases)
+    per sub-base:
+        u8      level
+        svarint origin grid index (delta vs previous subbase, same-level grid)
+        u8      slope_digits (0..13; 255 = raw f64 follows)
+        svarint slope scaled int   (or f64 if raw)
+        varint  m (number of member segments)
+        varint  t0 deltas (ascending within the sub-base)
+    (All varints are LEB128; svarint = zigzag LEB128.  Segment lengths are
+    NOT stored: segments partition [0, n), so sorting all start indices
+    globally reconstructs every length — the same trick Sim-Piece uses.)
+
+Residual blob:
+    magic  b"SHRR"
+    u8     mode (0=midpoint, 1=exact)
+    f64    eps_r, f64 step, f64 r_lo
+    entropy-coded q (see entropy.py, self-describing)
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from . import entropy
+from .phases import eps_hat_for_level
+from .types import Base, ResidualStream, ShrinkConfig, SubBase
+
+__all__ = [
+    "write_varint",
+    "read_varint",
+    "encode_base",
+    "decode_base",
+    "encode_residuals",
+    "decode_residuals",
+]
+
+_BASE_MAGIC = b"SHRB"
+_RES_MAGIC = b"SHRR"
+_VERSION = 1
+_RAW_SLOPE = 255
+
+
+def write_varint(buf: bytearray, x: int) -> None:
+    if x < 0:
+        raise ValueError("varint must be non-negative")
+    while True:
+        b = x & 0x7F
+        x >>= 7
+        if x:
+            buf.append(b | 0x80)
+        else:
+            buf.append(b)
+            return
+
+
+def read_varint(data: bytes, pos: int) -> tuple[int, int]:
+    shift = 0
+    out = 0
+    while True:
+        b = data[pos]
+        pos += 1
+        out |= (b & 0x7F) << shift
+        if not (b & 0x80):
+            return out, pos
+        shift += 7
+
+
+def _write_svarint(buf: bytearray, x: int) -> None:
+    write_varint(buf, (x << 1) ^ (x >> 63) if x < 0 else (x << 1))
+
+
+def _read_svarint(data: bytes, pos: int) -> tuple[int, int]:
+    z, pos = read_varint(data, pos)
+    return (z >> 1) ^ -(z & 1), pos
+
+
+def encode_base(base: Base) -> bytes:
+    buf = bytearray()
+    buf += _BASE_MAGIC
+    buf.append(_VERSION)
+    write_varint(buf, base.n)
+    buf += struct.pack("<ddB", base.config.eps_b, base.config.lam, base.config.beta_levels)
+    buf += struct.pack("<dd", base.vmin, base.vmax)
+    write_varint(buf, len(base.subbases))
+    prev_idx_by_level: dict[int, int] = {}
+    for sb in base.subbases:
+        buf.append(sb.level & 0xFF)
+        eps_hat = eps_hat_for_level(sb.level, base.config)
+        idx = int(round(sb.theta / eps_hat))
+        prev = prev_idx_by_level.get(sb.level, 0)
+        _write_svarint(buf, idx - prev)
+        prev_idx_by_level[sb.level] = idx
+        if sb.slope_digits <= 13:
+            buf.append(sb.slope_digits)
+            _write_svarint(buf, int(round(sb.slope * 10**sb.slope_digits)))
+        else:
+            buf.append(_RAW_SLOPE)
+            buf += struct.pack("<d", sb.slope)
+        write_varint(buf, len(sb.t0s))
+        prev_t = 0
+        for t0 in sb.t0s.tolist():
+            write_varint(buf, t0 - prev_t)
+            prev_t = t0
+    return bytes(buf)
+
+
+def decode_base(data: bytes) -> Base:
+    if data[:4] != _BASE_MAGIC:
+        raise ValueError("bad base magic")
+    pos = 5  # magic + version
+    n, pos = read_varint(data, pos)
+    eps_b, lam, beta_levels = struct.unpack_from("<ddB", data, pos)
+    pos += 17
+    vmin, vmax = struct.unpack_from("<dd", data, pos)
+    pos += 16
+    config = ShrinkConfig(eps_b=eps_b, lam=lam, beta_levels=beta_levels)
+    k, pos = read_varint(data, pos)
+    subbases: list[SubBase] = []
+    prev_idx_by_level: dict[int, int] = {}
+    for _ in range(k):
+        level = data[pos]
+        pos += 1
+        didx, pos = _read_svarint(data, pos)
+        idx = prev_idx_by_level.get(level, 0) + didx
+        prev_idx_by_level[level] = idx
+        eps_hat = eps_hat_for_level(level, config)
+        theta = idx * eps_hat
+        digits = data[pos]
+        pos += 1
+        if digits == _RAW_SLOPE:
+            (slope,) = struct.unpack_from("<d", data, pos)
+            pos += 8
+            digits = 13
+        else:
+            scaled, pos = _read_svarint(data, pos)
+            slope = scaled / 10**digits
+        m, pos = read_varint(data, pos)
+        t0s = np.empty(m, dtype=np.int64)
+        prev_t = 0
+        for i in range(m):
+            dt, pos = read_varint(data, pos)
+            t0 = prev_t + dt
+            prev_t = t0
+            t0s[i] = t0
+        subbases.append(
+            SubBase(
+                theta=theta,
+                level=level,
+                psi_lo=slope,
+                psi_hi=slope,
+                slope=slope,
+                slope_digits=digits,
+                t0s=t0s,
+                lengths=np.zeros(m, dtype=np.int64),  # filled below
+            )
+        )
+    # Segments partition [0, n): recover lengths from the global t0 order.
+    flat = [(int(t0), si, mi) for si, sb in enumerate(subbases) for mi, t0 in enumerate(sb.t0s.tolist())]
+    flat.sort()
+    for j, (t0, si, mi) in enumerate(flat):
+        end = flat[j + 1][0] if j + 1 < len(flat) else n
+        subbases[si].lengths[mi] = end - t0
+    return Base(n=n, config=config, vmin=vmin, vmax=vmax, subbases=subbases)
+
+
+def encode_residuals(stream: ResidualStream, backend: str = "best") -> bytes:
+    buf = bytearray()
+    buf += _RES_MAGIC
+    buf.append(0 if stream.mode == "midpoint" else 1)
+    buf += struct.pack("<ddd", stream.eps_r, stream.step, stream.r_lo)
+    buf += entropy.encode_ints(stream.q, backend=backend)
+    return bytes(buf)
+
+
+def decode_residuals(data: bytes) -> ResidualStream:
+    if data[:4] != _RES_MAGIC:
+        raise ValueError("bad residual magic")
+    mode = "midpoint" if data[4] == 0 else "exact"
+    eps_r, step, r_lo = struct.unpack_from("<ddd", data, 5)
+    q = entropy.decode_ints(data[29:])
+    return ResidualStream(eps_r=eps_r, step=step, r_lo=r_lo, mode=mode, q=q)

@@ -1,0 +1,162 @@
+"""The SHRINK codec (Alg. 1 of the paper): one base, many resolutions.
+
+Usage:
+
+    codec = ShrinkCodec.from_fraction(values, frac=0.05)     # eps_b = 5% range
+    cs    = codec.compress(values, eps_targets=[1e-2, 1e-4], decimals=8)
+    vhat  = codec.decompress_at(cs, 1e-4)                    # |vhat-v| <= 1e-4
+    exact = codec.decompress_at(cs, 0.0)                     # lossless
+    blob  = cs_to_bytes(cs); cs2 = cs_from_bytes(blob)
+
+``eps == 0.0`` denotes the lossless stream (requires ``decimals``: the fixed
+decimal precision of the source data, Table II's "Decimal" column).
+"""
+from __future__ import annotations
+
+import math
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+
+from .base import construct_base, base_predictions, practical_eps_b
+from .residuals import (
+    compute_residuals,
+    dequantize_exact,
+    dequantize_residuals,
+    quantize_exact,
+    quantize_residuals,
+)
+from .semantics import extract_semantics, global_range
+from .serialize import decode_base, decode_residuals, encode_base, encode_residuals
+from .types import Base, CompressedSeries, ShrinkConfig
+
+__all__ = ["ShrinkCodec", "cs_to_bytes", "cs_from_bytes", "original_size_bytes"]
+
+_CONTAINER_MAGIC = b"SHRK"
+
+# The paper's Table II datasets store (timestamp, value) pairs; we account the
+# original size as 16 bytes/row (two float64) — same accounting for every
+# method in benchmarks/, so CRs are comparable across methods and with the
+# paper's relative claims.
+BYTES_PER_ROW = 16
+
+
+def original_size_bytes(n: int) -> int:
+    return BYTES_PER_ROW * n
+
+
+@dataclass
+class ShrinkCodec:
+    config: ShrinkConfig
+    backend: str = "best"
+
+    @classmethod
+    def from_fraction(
+        cls,
+        values: np.ndarray,
+        frac: float = 0.05,
+        lam: float = 1e-5,
+        beta_levels: int = 16,
+        backend: str = "best",
+    ) -> "ShrinkCodec":
+        vmin, vmax = global_range(np.asarray(values, dtype=np.float64))
+        rng = max(vmax - vmin, 1e-12)
+        return cls(
+            config=ShrinkConfig(eps_b=frac * rng, lam=lam, beta_levels=beta_levels),
+            backend=backend,
+        )
+
+    # ------------------------------------------------------------------ #
+    def build_base(self, values: np.ndarray) -> Base:
+        values = np.asarray(values, dtype=np.float64)
+        segments = extract_semantics(values, self.config)
+        vmin, vmax = global_range(values)
+        return construct_base(segments, len(values), vmin, vmax, self.config)
+
+    def compress(
+        self,
+        values: np.ndarray,
+        eps_targets: list[float],
+        decimals: int | None = None,
+    ) -> CompressedSeries:
+        """Alg. 1: extract semantics once, then one residual stream per eps.
+
+        eps == 0.0 requests the lossless stream (needs ``decimals``).
+        """
+        values = np.asarray(values, dtype=np.float64)
+        base = self.build_base(values)
+        base_bytes = encode_base(base)
+        eps_hat = practical_eps_b(values, base)
+        r = compute_residuals(values, base)
+
+        residual_bytes: dict[float, bytes | None] = {}
+        for eps in eps_targets:
+            if eps == 0.0:
+                if decimals is None:
+                    raise ValueError("lossless stream requires `decimals`")
+                stream = quantize_exact(values, base, decimals)
+                residual_bytes[0.0] = encode_residuals(stream, backend=self.backend)
+            elif eps >= eps_hat:
+                residual_bytes[eps] = None  # base-only suffices (Alg.1 l.9-10)
+            else:
+                stream = quantize_residuals(r, eps)
+                residual_bytes[eps] = encode_residuals(stream, backend=self.backend)
+        return CompressedSeries(
+            base=base,
+            base_bytes=base_bytes,
+            residual_bytes=residual_bytes,
+            eps_b_practical=eps_hat,
+        )
+
+    def decompress_at(self, cs: CompressedSeries, eps: float) -> np.ndarray:
+        if eps not in cs.residual_bytes:
+            raise KeyError(f"no stream at eps={eps}")
+        blob = cs.residual_bytes[eps]
+        base = cs.base if cs.base is not None else decode_base(cs.base_bytes)
+        pred = base_predictions(base)
+        if blob is None:
+            return pred
+        stream = decode_residuals(blob)
+        if stream.mode == "exact":
+            decimals = int(round(-math.log10(stream.step)))
+            return dequantize_exact(stream, base, decimals)
+        return pred + dequantize_residuals(stream)
+
+
+def cs_to_bytes(cs: CompressedSeries) -> bytes:
+    """Container: base + directory of residual streams."""
+    buf = bytearray()
+    buf += _CONTAINER_MAGIC
+    buf += struct.pack("<dI", cs.eps_b_practical, len(cs.base_bytes))
+    buf += cs.base_bytes
+    streams = sorted(cs.residual_bytes.items())
+    buf += struct.pack("<I", len(streams))
+    for eps, blob in streams:
+        body = blob if blob is not None else b""
+        buf += struct.pack("<dI", eps, len(body))
+        buf += body
+    return bytes(buf)
+
+
+def cs_from_bytes(data: bytes) -> CompressedSeries:
+    if data[:4] != _CONTAINER_MAGIC:
+        raise ValueError("bad container magic")
+    eps_hat, base_len = struct.unpack_from("<dI", data, 4)
+    pos = 16
+    base_bytes = data[pos : pos + base_len]
+    pos += base_len
+    (n_streams,) = struct.unpack_from("<I", data, pos)
+    pos += 4
+    residual_bytes: dict[float, bytes | None] = {}
+    for _ in range(n_streams):
+        eps, ln = struct.unpack_from("<dI", data, pos)
+        pos += 12
+        residual_bytes[eps] = data[pos : pos + ln] if ln else None
+        pos += ln
+    return CompressedSeries(
+        base=decode_base(base_bytes),
+        base_bytes=bytes(base_bytes),
+        residual_bytes=residual_bytes,
+        eps_b_practical=eps_hat,
+    )

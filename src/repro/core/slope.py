@@ -1,0 +1,67 @@
+"""Candidate line selection (Alg. 5 of the paper).
+
+The paper truncates the average slope to the digits shared by psi_lo and
+psi_hi (plus the midpoint of the first divergent digits).  Taken literally
+that construction can fall *outside* [psi_lo, psi_hi] when the divergent
+digits are adjacent (e.g. [0.1258, 0.1263] -> "0.125" < psi_lo), silently
+inflating the practical base error.  We implement what the algorithm is
+clearly after — the *shortest-decimal number inside the span* — with the
+classic interval-shortest-decimal search: find the smallest digit count d
+such that ceil(lo * 10^d) <= floor(hi * 10^d) and take that grid value.
+This always lies inside the span and never uses more digits than the
+literal Alg. 5.  (Deviation recorded in DESIGN.md §3.)
+
+For spans with infinite ends (single-point cones) the slope is 0.
+"""
+from __future__ import annotations
+
+import math
+
+__all__ = ["optimized_slope", "shortest_decimal_in_interval"]
+
+_MAX_DIGITS = 12
+
+
+def shortest_decimal_in_interval(lo: float, hi: float) -> tuple[float, int]:
+    """Return (value, digits) — the decimal with fewest fraction digits in
+    [lo, hi].  Prefers the candidate closest to the midpoint at that digit
+    count.  Assumes lo <= hi and both finite."""
+    if lo > hi:
+        lo, hi = hi, lo
+    mid = 0.5 * (lo + hi)
+    for d in range(0, _MAX_DIGITS + 1):
+        scale = 10.0**d
+        qlo = math.ceil(lo * scale - 1e-12)
+        qhi = math.floor(hi * scale + 1e-12)
+        if qlo <= qhi:
+            # choose the on-grid value nearest the midpoint
+            q = round(mid * scale)
+            q = min(max(q, qlo), qhi)
+            val = q / scale
+            # guard against float round-trip pushing us out of the span
+            if val < lo:
+                val = qlo / scale if qlo <= qhi else lo
+            if val > hi:
+                val = qhi / scale
+            if lo <= val <= hi:
+                return float(val), d
+    return float(mid), _MAX_DIGITS + 1
+
+
+def optimized_slope(psi_lo: float, psi_hi: float) -> tuple[float, int]:
+    """Alg. 5 wrapper handling the degenerate spans.
+
+    Returns (slope, digits).  digits is used by the serializer to store the
+    slope as a small scaled integer instead of a raw float64.
+    """
+    lo_inf = math.isinf(psi_lo)
+    hi_inf = math.isinf(psi_hi)
+    if lo_inf and hi_inf:
+        return 0.0, 0
+    if lo_inf:
+        return (float(psi_hi), _MAX_DIGITS + 1) if psi_hi < 0 else (0.0, 0)
+    if hi_inf:
+        return (float(psi_lo), _MAX_DIGITS + 1) if psi_lo > 0 else (0.0, 0)
+    if psi_lo == psi_hi:
+        return float(psi_lo), _MAX_DIGITS + 1
+    return shortest_decimal_in_interval(psi_lo, psi_hi)

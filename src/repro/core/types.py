@@ -1,0 +1,157 @@
+"""Core datatypes for the SHRINK codec.
+
+The paper (SHRINK, Sun/Karras/Zhang 2024) represents compressed data as a
+triple (B, R, E*):
+
+* ``B``  — the *knowledge base*: k merged sub-bases, each an origin ``theta``
+           (quantized onto the adaptive grid of Eq. 5), a span
+           ``(psi_lo, psi_hi)`` and the timestamps of the member segments.
+* ``R``  — quantized residuals at one or more resolutions ``eps_r``.
+* ``E*`` — error thresholds {eps, eps_b, eps_r}.
+
+Everything here is a plain dataclass so both the numpy reference codec and
+the JAX on-device path can share the vocabulary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# Multiplier grid for the adaptive threshold (Eq. 4).  beta is quantized to
+# ``beta_levels`` discrete levels so that cone origins land on a small family
+# of grids and can collide/merge (Section III-C of the paper relies on shared
+# origins; with a continuous beta the floats would almost never be equal).
+DEFAULT_BETA_LEVELS = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class ShrinkConfig:
+    """Static configuration of the codec (E* of the paper, plus knobs).
+
+    eps_b:        base (semantics-extraction) error threshold, *absolute*.
+                  The paper sets it to 5%..15% of the global value range.
+    lam:          the lambda hyper-parameter controlling the default interval
+                  length  L = lam * n * eps_b  (Alg. 2 line 4).
+    beta_levels:  number of discrete fluctuation levels (see above).
+    min_interval: lower clamp for the interval length L.
+    max_interval: upper clamp for the interval length L.
+    """
+
+    eps_b: float
+    lam: float = 1e-5
+    beta_levels: int = DEFAULT_BETA_LEVELS
+    min_interval: int = 2
+    max_interval: int = 65536
+
+    def __post_init__(self) -> None:
+        if self.eps_b <= 0:
+            raise ValueError(f"eps_b must be positive, got {self.eps_b}")
+        if self.lam <= 0:
+            raise ValueError(f"lam must be positive, got {self.lam}")
+        if self.beta_levels < 1:
+            raise ValueError("beta_levels must be >= 1")
+
+
+@dataclasses.dataclass
+class Segment:
+    """One shrinking cone emitted by semantics extraction (Alg. 3).
+
+    theta:     quantized origin value (Eq. 5).
+    level:     quantized fluctuation level index in [0, beta_levels]; the
+               adaptive threshold is ``eps_hat = eps_b * exp(2/3 - level/beta_levels)``.
+    psi_lo/hi: the span (slope interval) after the cone shrank over all its
+               member points.  For a one-point segment the span is the whole
+               real line (lo=-inf, hi=+inf).
+    t0:        start index of the segment.
+    length:    number of points covered.
+    """
+
+    theta: float
+    level: int
+    psi_lo: float
+    psi_hi: float
+    t0: int
+    length: int
+
+
+@dataclasses.dataclass
+class SubBase:
+    """A merged group of cones sharing an origin (Alg. 4) + candidate line.
+
+    slope is the paper's Alg. 5 "optimized slope": the shortest-decimal
+    number inside [psi_lo, psi_hi] (see slope.py for why we deviate slightly
+    from the literal pseudocode).
+    """
+
+    theta: float
+    level: int
+    psi_lo: float
+    psi_hi: float
+    slope: float
+    slope_digits: int
+    # Parallel arrays: start index and length of every member segment.
+    t0s: np.ndarray  # int64 [m]
+    lengths: np.ndarray  # int64 [m]
+
+
+@dataclasses.dataclass
+class Base:
+    """The knowledge base B: all sub-bases + global stats needed to decode."""
+
+    n: int
+    config: ShrinkConfig
+    vmin: float
+    vmax: float
+    subbases: list[SubBase]
+
+    @property
+    def k(self) -> int:
+        return len(self.subbases)
+
+    def segment_count(self) -> int:
+        return int(sum(len(sb.t0s) for sb in self.subbases))
+
+    def predictions(self) -> np.ndarray:
+        """Reconstruct the base-only approximation for all n points."""
+        out = np.empty(self.n, dtype=np.float64)
+        for sb in self.subbases:
+            for t0, ln in zip(sb.t0s.tolist(), sb.lengths.tolist()):
+                t = np.arange(ln, dtype=np.float64)
+                out[t0 : t0 + ln] = sb.theta + sb.slope * t
+        return out
+
+
+@dataclasses.dataclass
+class ResidualStream:
+    """Quantized residuals at one resolution.
+
+    mode 'midpoint': q = floor((r - r_lo)/step), dequant at (q+0.5)*step+r_lo,
+                     max abs error step/2.
+    mode 'exact':    integer-exact path for lossless reconstruction of data
+                     with a fixed number of decimals (step = 10^-decimals).
+    """
+
+    eps_r: float
+    step: float
+    r_lo: float
+    mode: str  # 'midpoint' | 'exact'
+    q: np.ndarray  # int64 [n]
+
+
+@dataclasses.dataclass
+class CompressedSeries:
+    """A fully encoded series: one base + streams at each requested eps."""
+
+    base: Base
+    base_bytes: bytes
+    # eps -> (stream_bytes or None if base-only suffices at this eps)
+    residual_bytes: dict[float, Optional[bytes]]
+    # Practical base error threshold (max |v - base prediction|); eps values
+    # above this are served base-only, exactly as Alg. 1 lines 8-10.
+    eps_b_practical: float
+
+    def size_at(self, eps: float) -> int:
+        rb = self.residual_bytes.get(eps)
+        return len(self.base_bytes) + (len(rb) if rb is not None else 0)

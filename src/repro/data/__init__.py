@@ -1,0 +1,3 @@
+"""Data pipeline: synthetic series + SHRINK shard store + token streams."""
+from .synthetic import DATASETS, DatasetSpec, household_power, load  # noqa: F401
+from .pipeline import ShardStore, TokenPipeline  # noqa: F401

@@ -1,0 +1,21 @@
+"""SHRINK compute hot-spots as Pallas TPU kernels.
+
+Kernels (each has a pure-jnp oracle in ref.py, validated in
+tests/test_kernels.py over shape/dtype sweeps):
+
+* interval_stats — per-window min/max (Alg. 2 fluctuation stats)
+* cone_scan      — shrinking-cone recurrence, sequential-grid state carry,
+                   lane-parallel across series (Alg. 3)
+* residual_quant — fused residual + quantize + clip + error feedback (Alg. 6)
+* dequant        — fused dequantize + linear reconstruct
+* flash_attention — online-softmax fused attention (sequential-kv grid)
+"""
+from .ops import (  # noqa: F401
+    cone_scan,
+    flash_attention,
+    dequant_reconstruct,
+    interval_stats,
+    residual_quant,
+    use_interpret,
+)
+from . import ref  # noqa: F401

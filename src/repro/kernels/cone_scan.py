@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: the SHRINK shrinking-cone scan.
+
+Hardware adaptation (DESIGN.md §3): the paper's cone scan is a sequential,
+data-dependent recurrence — on a GPU one would serialize a warp; on TPU the
+idiomatic equivalent exploits two facts:
+
+1. **The TPU grid executes sequentially**, so VMEM/SMEM scratch persists
+   across grid steps.  The cone state (theta, psi_lo, psi_hi, t0, eps_seg)
+   lives in VMEM scratch and is carried from one time-chunk to the next —
+   no HBM round-trip for the recurrence state.
+2. **Lanes give free parallelism across series.**  An IoT gateway compresses
+   thousands of independent streams; each of the S lanes carries one stream,
+   so every per-point update is a (1, S) vector op on the VPU.  The serial
+   dimension is only T/BT grid steps × BT in-kernel iterations.
+
+Outputs are dense per-point arrays (break flags + segment records at break
+positions); the variable-length segment compaction (a cumsum gather) happens
+in XLA outside the kernel, as does base merging on the host.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["cone_scan_pallas"]
+
+_BIG = 3.4e38
+
+
+def _cone_scan_kernel(
+    x_ref,
+    eps_ref,
+    brk_ref,
+    theta_ref,
+    lo_out_ref,
+    hi_out_ref,
+    fin_lo_ref,
+    fin_hi_ref,
+    state_f_ref,  # VMEM (4, S): theta, lo, hi, eps_seg
+    state_i_ref,  # VMEM (1, S) int32: t0
+    *,
+    block_t: int,
+):
+    i = pl.program_id(0)
+    s = x_ref.shape[1]
+
+    @pl.when(i == 0)
+    def _init():
+        v0 = x_ref[0, :]
+        e0 = eps_ref[0, :]
+        state_f_ref[0, :] = jnp.floor(v0 / e0) * e0
+        state_f_ref[1, :] = jnp.full((s,), -_BIG, x_ref.dtype)
+        state_f_ref[2, :] = jnp.full((s,), _BIG, x_ref.dtype)
+        state_f_ref[3, :] = e0
+        state_i_ref[0, :] = jnp.zeros((s,), jnp.int32)
+
+    def body(r, carry):
+        theta, lo, hi, eps_seg, t0 = carry
+        t = i * block_t + r
+        v = x_ref[r, :]
+        eps_t = eps_ref[r, :]
+        dt = (t - t0).astype(x_ref.dtype)
+        denom = jnp.maximum(dt, 1.0)
+        cand_hi = (v + eps_seg - theta) / denom
+        cand_lo = (v - eps_seg - theta) / denom
+        new_hi = jnp.minimum(hi, cand_hi)
+        new_lo = jnp.maximum(lo, cand_lo)
+        brk = (new_lo > new_hi) & (dt > 0)
+        # records of the closing segment at the break position
+        lo_out_ref[r, :] = lo
+        hi_out_ref[r, :] = hi
+        theta_new = jnp.floor(v / eps_t) * eps_t
+        theta = jnp.where(brk, theta_new, theta)
+        eps_seg = jnp.where(brk, eps_t, eps_seg)
+        lo = jnp.where(brk, -_BIG, new_lo)
+        hi = jnp.where(brk, _BIG, new_hi)
+        t0 = jnp.where(brk, t, t0)
+        brk_ref[r, :] = brk.astype(jnp.int32)
+        theta_ref[r, :] = theta
+        return theta, lo, hi, eps_seg, t0
+
+    carry = (
+        state_f_ref[0, :],
+        state_f_ref[1, :],
+        state_f_ref[2, :],
+        state_f_ref[3, :],
+        state_i_ref[0, :],
+    )
+    theta, lo, hi, eps_seg, t0 = jax.lax.fori_loop(0, block_t, body, carry)
+    state_f_ref[0, :] = theta
+    state_f_ref[1, :] = lo
+    state_f_ref[2, :] = hi
+    state_f_ref[3, :] = eps_seg
+    state_i_ref[0, :] = t0
+    # every grid step writes; the sequential grid means the last write wins
+    fin_lo_ref[0, :] = lo
+    fin_hi_ref[0, :] = hi
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def cone_scan_pallas(
+    x: jax.Array,
+    eps_hat: jax.Array,
+    block_t: int = 256,
+    interpret: bool = True,
+):
+    """x[T, S], eps_hat[T, S] -> (brk i32, theta, psi_lo, psi_hi, fin_lo[1,S],
+    fin_hi[1,S]).  Semantics identical to ref.cone_scan_ref; T % block_t == 0
+    (pad with repeats of the last row if needed — breaks are unaffected)."""
+    t, s = x.shape
+    bt = min(block_t, t)
+    assert t % bt == 0, f"T={t} % block_t={bt} != 0"
+    grid = (t // bt,)
+    kernel = functools.partial(_cone_scan_kernel, block_t=bt)
+    brk, theta, psi_lo, psi_hi, fin_lo, fin_hi = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, s), lambda i: (i, 0)),
+            pl.BlockSpec((bt, s), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, s), lambda i: (i, 0)),
+            pl.BlockSpec((bt, s), lambda i: (i, 0)),
+            pl.BlockSpec((bt, s), lambda i: (i, 0)),
+            pl.BlockSpec((bt, s), lambda i: (i, 0)),
+            pl.BlockSpec((1, s), lambda i: (0, 0)),
+            pl.BlockSpec((1, s), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, s), jnp.int32),
+            jax.ShapeDtypeStruct((t, s), x.dtype),
+            jax.ShapeDtypeStruct((t, s), x.dtype),
+            jax.ShapeDtypeStruct((t, s), x.dtype),
+            jax.ShapeDtypeStruct((1, s), x.dtype),
+            jax.ShapeDtypeStruct((1, s), x.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((4, s), x.dtype),
+            pltpu.VMEM((1, s), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, eps_hat)
+    # match ref: brk[0] = 1, theta[0] = quantized origin (kernel already
+    # wrote theta of the first segment at row 0 via the running state)
+    brk = brk.at[0].set(1)
+    return brk, theta, psi_lo, psi_hi, fin_lo, fin_hi

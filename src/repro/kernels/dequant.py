@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: fused dequantize + reconstruct (inverse of
+residual_quant).  pred = theta + slope * t; x_hat = pred + q * step.
+One VPU pass, VMEM-tiled like residual_quant."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dequant_kernel", "dequant_reconstruct_pallas"]
+
+
+def dequant_kernel(q_ref, theta_ref, slope_ref, step_ref, x_ref):
+    q = q_ref[...]
+    theta = theta_ref[...]
+    slope = slope_ref[...]
+    step = step_ref[...]
+    n = q.shape[-1]
+    t = jax.lax.broadcasted_iota(theta.dtype, (1, n), 1)
+    x_ref[...] = theta + slope * t + q.astype(theta.dtype) * step
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def dequant_reconstruct_pallas(
+    q: jax.Array,
+    theta: jax.Array,
+    slope: jax.Array,
+    step: jax.Array,
+    block_m: int = 8,
+    interpret: bool = True,
+):
+    """q int32 [M, N]; theta/slope/step [M, 1] -> x_hat [M, N] (theta dtype)."""
+    m, n = q.shape
+    bm = min(block_m, m)
+    grid = (pl.cdiv(m, bm),)
+    return pl.pallas_call(
+        dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), theta.dtype),
+        interpret=interpret,
+    )(q, theta, slope, step)

@@ -1,0 +1,93 @@
+"""Jit'd public wrappers for the SHRINK Pallas kernels.
+
+Backend selection: on CPU (this container) the kernels execute in Pallas
+``interpret=True`` mode — the kernel body runs as traced JAX ops with the
+same block/grid decomposition, which validates BlockSpec tiling and the
+sequential-grid state carry.  On a real TPU backend the same calls compile
+to Mosaic.  ``force_ref=True`` routes to the pure-jnp oracle (used for
+differentiable paths and in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .cone_scan import cone_scan_pallas
+from .flash_attention import flash_attention_pallas
+from .dequant import dequant_reconstruct_pallas
+from .interval_stats import interval_stats_pallas
+from .residual_quant import residual_quant_pallas
+
+__all__ = [
+    "flash_attention",
+    "interval_stats",
+    "residual_quant",
+    "dequant_reconstruct",
+    "cone_scan",
+    "use_interpret",
+]
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def interval_stats(x: jax.Array, window: int, force_ref: bool = False):
+    if force_ref:
+        return ref.interval_stats_ref(x, window)
+    return interval_stats_pallas(x, window, interpret=use_interpret())
+
+
+def residual_quant(
+    x: jax.Array,
+    theta: jax.Array,
+    slope: jax.Array,
+    step: jax.Array,
+    qmax: int = 127,
+    force_ref: bool = False,
+):
+    if force_ref:
+        return ref.residual_quant_ref(x, theta, slope, step, qmax=qmax)
+    return residual_quant_pallas(x, theta, slope, step, qmax=qmax, interpret=use_interpret())
+
+
+def dequant_reconstruct(
+    q: jax.Array,
+    theta: jax.Array,
+    slope: jax.Array,
+    step: jax.Array,
+    force_ref: bool = False,
+):
+    if force_ref:
+        return ref.dequant_reconstruct_ref(q, theta, slope, step)
+    return dequant_reconstruct_pallas(q, theta, slope, step, interpret=use_interpret())
+
+
+def cone_scan(x: jax.Array, eps_hat: jax.Array, block_t: int = 256, force_ref: bool = False):
+    if force_ref:
+        return ref.cone_scan_ref(x, eps_hat)
+    t = x.shape[0]
+    bt = min(block_t, t)
+    if t % bt:
+        pad = bt - (t % bt)
+        x = jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)], axis=0)
+        eps_hat = jnp.concatenate([eps_hat, jnp.repeat(eps_hat[-1:], pad, axis=0)], axis=0)
+        out = cone_scan_pallas(x, eps_hat, block_t=bt, interpret=use_interpret())
+        brk, theta, lo, hi, fin_lo, fin_hi = out
+        # NOTE: fin_lo/fin_hi reflect the padded tail; callers that need the
+        # open-segment span with padding should pass T % block_t == 0 data.
+        return brk[:t], theta[:t], lo[:t], hi[:t], fin_lo, fin_hi
+    return cone_scan_pallas(x, eps_hat, block_t=bt, interpret=use_interpret())
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+                    force_ref: bool = False):
+    """Multi-head flash attention: q/k/v [B, H, S, D] (vmapped over B, H)."""
+    if force_ref:
+        fn = lambda qq, kk, vv: ref.flash_attention_ref(qq, kk, vv, causal)
+    else:
+        fn = lambda qq, kk, vv: flash_attention_pallas(
+            qq, kk, vv, causal=causal, interpret=use_interpret()
+        )
+    return jax.vmap(jax.vmap(fn))(q, k, v)

@@ -1,0 +1,147 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are tested against
+(interpret=True on CPU, shape/dtype sweeps in tests/test_kernels.py).
+
+Conventions (shared with the kernels):
+
+* ``interval_stats``:  x[T, S] time-major, S independent series in lanes;
+  fixed window W along T.  Returns per-window (min, max) -> [T//W, S].
+* ``residual_quant``:  per-row linear base (theta + slope * t) over blocks
+  x[M, N]; emits clipped round((x-pred)/step) plus the error-feedback term.
+* ``cone_scan``:       the SHRINK shrinking-cone recurrence, vectorized over
+  S series in lanes.  Emits per-point break flags, the origin of the segment
+  starting at each break, and the span of the segment that closed there.
+* ``dequant_reconstruct``: inverse of residual_quant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "flash_attention_ref",
+    "interval_stats_ref",
+    "residual_quant_ref",
+    "dequant_reconstruct_ref",
+    "cone_scan_ref",
+]
+
+
+def interval_stats_ref(x: jax.Array, window: int) -> tuple[jax.Array, jax.Array]:
+    """x[T, S] -> (mins[T//W, S], maxs[T//W, S]); T must divide by W."""
+    t, s = x.shape
+    assert t % window == 0, f"T={t} not divisible by window={window}"
+    xr = x.reshape(t // window, window, s)
+    return xr.min(axis=1), xr.max(axis=1)
+
+
+def residual_quant_ref(
+    x: jax.Array,
+    theta: jax.Array,
+    slope: jax.Array,
+    step: jax.Array,
+    qmax: int = 127,
+) -> tuple[jax.Array, jax.Array]:
+    """x[M, N]; theta/slope/step[M, 1] per-row base-line params.
+
+    Returns (q int32 in [-qmax, qmax], err = x - (pred + q*step)).
+    """
+    m, n = x.shape
+    t = jnp.arange(n, dtype=x.dtype)[None, :]
+    pred = theta + slope * t
+    r = x - pred
+    q = jnp.clip(jnp.round(r / step), -qmax, qmax).astype(jnp.int32)
+    err = r - q.astype(x.dtype) * step
+    return q, err
+
+
+def dequant_reconstruct_ref(
+    q: jax.Array,
+    theta: jax.Array,
+    slope: jax.Array,
+    step: jax.Array,
+) -> jax.Array:
+    """Inverse of residual_quant: pred + q*step."""
+    m, n = q.shape
+    t = jnp.arange(n, dtype=theta.dtype)[None, :]
+    pred = theta + slope * t
+    return pred + q.astype(theta.dtype) * step
+
+
+def cone_scan_ref(
+    x: jax.Array,
+    eps_hat: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """SHRINK shrinking-cone scan, vectorized over lanes.
+
+    x[T, S], eps_hat[T, S] (adaptive threshold to use for a segment that
+    *starts* at (t, s)).
+
+    Returns (brk i32[T,S], theta f32[T,S], psi_lo f32[T,S], psi_hi f32[T,S],
+             fin_lo f32[1,S], fin_hi f32[1,S]):
+      * brk[t]   = 1 iff a new segment starts at t (brk[0] == 1).
+      * theta[t] = origin of the segment starting at t   (valid where brk=1).
+      * psi_lo/hi[t] = span of the segment that CLOSED at t-1 (valid where
+        brk=1 and t>0).
+      * fin_lo/hi = span of the still-open segment at T-1 (the host closes
+        it when compacting segments).
+    """
+    big = jnp.float32(3.4e38)
+    t_steps, s = x.shape
+
+    def origin(v, eps):
+        return jnp.floor(v / eps) * eps
+
+    def step_fn(carry, inp):
+        theta, lo, hi, t0, eps_seg = carry
+        v, eps_t, t = inp
+        dt = (t - t0).astype(x.dtype)
+        cand_hi = (v + eps_seg - theta) / jnp.maximum(dt, 1.0)
+        cand_lo = (v - eps_seg - theta) / jnp.maximum(dt, 1.0)
+        new_hi = jnp.minimum(hi, cand_hi)
+        new_lo = jnp.maximum(lo, cand_lo)
+        brk = (new_lo > new_hi) & (dt > 0)
+        out_lo, out_hi = lo, hi  # span of the closing segment
+        theta_new = origin(v, eps_t)
+        theta = jnp.where(brk, theta_new, theta)
+        eps_seg = jnp.where(brk, eps_t, eps_seg)
+        lo = jnp.where(brk, -big, new_lo)
+        hi = jnp.where(brk, big, new_hi)
+        t0 = jnp.where(brk, t, t0)
+        return (theta, lo, hi, t0, eps_seg), (
+            brk.astype(jnp.int32),
+            theta,
+            out_lo,
+            out_hi,
+        )
+
+    v0 = x[0]
+    eps0 = eps_hat[0]
+    carry0 = (
+        origin(v0, eps0),
+        jnp.full((s,), -big, x.dtype),
+        jnp.full((s,), big, x.dtype),
+        jnp.zeros((s,), jnp.int32),
+        eps0,
+    )
+    ts = jnp.arange(t_steps, dtype=jnp.int32)
+    (_, lo_f, hi_f, _, _), (brk, theta, psi_lo, psi_hi) = jax.lax.scan(
+        step_fn, carry0, (x, eps_hat, ts)
+    )
+    brk = brk.at[0].set(jnp.ones((s,), jnp.int32))
+    theta = theta.at[0].set(origin(v0, eps0))
+    return brk, theta, psi_lo, psi_hi, lo_f[None, :], hi_f[None, :]
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:
+    """Plain softmax attention over [S, D] single head (flash oracle)."""
+    sq, d = q.shape
+    sk = k.shape[0]
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * (d**-0.5)
+    if causal:
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        s = jnp.where(kpos <= qpos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)

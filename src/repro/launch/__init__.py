@@ -1,0 +1,2 @@
+"""Launchers: mesh construction, dry-run driver, train/serve entry points."""
+from .mesh import HW, make_local_mesh, make_production_mesh  # noqa: F401

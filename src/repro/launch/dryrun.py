@@ -1,0 +1,345 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs ShapeDtypeStruct stand-ins for params, optimizer state,
+     batch and caches (zero allocation),
+  3. jit-lowers the train / prefill / decode step with full in/out
+     shardings, compiles it,
+  4. records memory_analysis(), cost_analysis() and the per-type collective
+     byte totals parsed from the compiled HLO,
+  5. writes artifacts/dryrun/<arch>__<shape>__<mesh>[__comp].json.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --all                  # single-pod sweep
+    python -m repro.launch.dryrun --all --multi-pod
+    python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+        --multi-pod --compressed     # SHRINK cross-pod collective
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, cells_for, get_config
+from ..models import build_model
+from ..parallel.partition import param_specs
+from ..training.optimizer import AdamWConfig, adamw_init
+from ..training.train_step import (
+    batch_specs,
+    cache_specs,
+    make_compressed_train_step,
+    make_decode_step,
+    make_ef_state,
+    make_prefill_step,
+    make_train_step,
+)
+from .hlo_analysis import analyze_hlo
+from .mesh import HW, make_production_mesh
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _shardings_for(tree_shapes, spec_tree, mesh):
+    return jax.tree.map(
+        lambda sds, spec: NamedSharding(mesh, spec),
+        tree_shapes,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    compressed: bool = False,
+    overrides: dict | None = None,
+    tag: str = "",
+) -> dict:
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if overrides:
+        model_ov = {k: v for k, v in overrides.items() if not k.startswith("comp_")}
+        if model_ov:
+            cfg = _dc.replace(cfg, **model_ov)
+    model = build_model(cfg)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+
+    params_shapes = model.init_shapes()
+    # compressed path: vocab-sharded-gather partitioner bug workaround
+    p_spec = param_specs(params_shapes, cfg, mesh, vocab_dim_sharded=not compressed)
+    p_shard = _shardings_for(params_shapes, p_spec, mesh)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    result: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "compressed": compressed,
+        "devices": n_dev,
+        "kind": shape.kind,
+    }
+
+    if shape.kind == "train":
+        batch_shapes = model.input_specs(shape)
+        b_spec = batch_specs(batch_shapes, mesh, batch_axes)
+        b_shard = _shardings_for(batch_shapes, b_spec, mesh)
+        opt_shapes = jax.eval_shape(adamw_init, params_shapes)
+        o_spec = {"m": p_spec, "v": p_spec, "step": P()}
+        o_shard = jax.tree.map(
+            lambda sds, spec: NamedSharding(mesh, spec), opt_shapes, o_spec,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+        if compressed:
+            # The SHRINK cross-pod exchange stage (DCN step of a multi-slice
+            # run), lowered standalone: grads arrive with a leading pod dim.
+            from ..training.grad_compress import GradCompressConfig, make_crosspod_exchange
+
+            n_pods = mesh.shape.get("pod", 1)
+            grads_stacked = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_pods, *s.shape), s.dtype), params_shapes
+            )
+            gs_spec = jax.tree.map(lambda s: P("pod", *s), p_spec,
+                                   is_leaf=lambda x: isinstance(x, P))
+            gs_shard = _shardings_for(grads_stacked, gs_spec, mesh)
+            ef_shapes = jax.eval_shape(make_ef_state, params_shapes)
+            ef_shard = _shardings_for(ef_shapes, p_spec, mesh)
+            comp_kw = {}
+            if overrides:
+                for k in ("bits", "block"):
+                    if f"comp_{k}" in overrides:
+                        comp_kw[k] = overrides[f"comp_{k}"]
+            out = {}
+            for variant, ccfg in (("compressed", GradCompressConfig(**comp_kw)), ("plain_psum", None)):
+                step = make_crosspod_exchange(mesh, ccfg, p_spec)
+                jitted = jax.jit(step, in_shardings=(gs_shard, ef_shard))
+                lowered = jitted.lower(grads_stacked, ef_shapes)
+                compiled = lowered.compile()
+                hc = analyze_hlo(compiled.as_text())
+                out[variant] = {
+                    "collective_bytes": hc.collective_bytes,
+                    "by_type": hc.collective_by_type,
+                    "collective_s": hc.collective_bytes / HW.ICI_BW,
+                }
+            from ..training.grad_compress import compression_wire_bytes
+
+            comp_b, raw_b = compression_wire_bytes(
+                jax.tree.leaves(params_shapes), GradCompressConfig(**comp_kw)
+            )
+            result.update(
+                exchange=out,
+                analytic_wire={"compressed_bytes": comp_b, "f32_bytes": raw_b,
+                               "ratio": raw_b / max(comp_b, 1)},
+                seconds={"lower": round(time.time() - t0, 1), "compile": 0.0},
+                roofline={
+                    "compute_s": 0.0,
+                    "memory_s": 0.0,
+                    "collective_s": out["compressed"]["collective_s"],
+                    "dominant": "collective",
+                    "model_flops_total": 0,
+                    "useful_flops_ratio": None,
+                },
+                tag=tag,
+            )
+            return result
+        else:
+            step = make_train_step(model, mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_shapes, opt_shapes, batch_shapes)
+    elif shape.kind == "prefill":
+        batch_shapes = model.input_specs(shape)
+        b_spec = batch_specs(batch_shapes, mesh, batch_axes)
+        b_shard = _shardings_for(batch_shapes, b_spec, mesh)
+        step = make_prefill_step(model, mesh)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        lowered = jitted.lower(params_shapes, batch_shapes)
+    else:  # decode
+        specs = model.input_specs(shape)
+        tok_shapes, cache_shapes = specs["tokens"], specs["caches"]
+        c_spec = cache_specs(cache_shapes, mesh, batch_axes)
+        c_shard = _shardings_for(cache_shapes, c_spec, mesh)
+        tok_shard = NamedSharding(
+            mesh, P(batch_axes if shape.global_batch % n_dev == 0 or
+                    shape.global_batch % (mesh.shape.get("data", 1) *
+                                          mesh.shape.get("pod", 1)) == 0 else None, None)
+        )
+        if shape.global_batch == 1:
+            tok_shard = NamedSharding(mesh, P(None, None))
+        step = make_decode_step(model, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, tok_shard, c_shard, NamedSharding(mesh, P())),
+            donate_argnums=(2,),
+        )
+        lowered = jitted.lower(
+            params_shapes, specs["tokens"], cache_shapes, specs["cache_index"]
+        )
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_d = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    hc = analyze_hlo(hlo)  # while-trip-corrected per-device cost model
+
+    flops_dev = hc.flops
+    bytes_dev = hc.bytes
+    compute_s = flops_dev / HW.PEAK_BF16_FLOPS
+    memory_s = bytes_dev / HW.HBM_BW
+    coll_s = hc.collective_bytes / HW.ICI_BW
+
+    mult = 6 if shape.kind == "train" else 2
+    if cfg.family == "encdec" and shape.kind != "decode":
+        # split enc/dec params over their token streams (the coarse 6*N*D
+        # over-counts: enc tokens never touch dec params and vice versa)
+        s_enc = int(shape.seq_len * cfg.audio_frames_ratio)
+        s_dec = shape.seq_len - s_enc
+        d, ff = cfg.d_model, cfg.d_ff
+        hd = cfg.resolved_head_dim
+        attn = d * cfg.n_heads * hd * 2 + 2 * d * cfg.n_kv_heads * hd
+        per_layer = attn + 3 * d * ff
+        n_enc = cfg.n_enc_layers * per_layer
+        n_dec = cfg.n_layers * (per_layer + attn) + d * cfg.padded_vocab
+        model_flops_total = mult * shape.global_batch * (s_enc * n_enc + s_dec * n_dec)
+    else:
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        n_active = cfg.active_param_count() - cfg.padded_vocab * cfg.d_model
+        model_flops_total = mult * n_active * tokens
+    model_flops_dev = model_flops_total / n_dev
+
+    result.update(
+        seconds={"lower": round(t_lower, 1), "compile": round(t_compile, 1)},
+        cost={
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "raw_cost_analysis": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+            "dot_count": hc.dot_count,
+            "while_trips": hc.while_trips,
+        },
+        memory=mem_d,
+        collectives={
+            "total_bytes": hc.collective_bytes,
+            "by_type": hc.collective_by_type,
+        },
+        roofline={
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": coll_s,
+            "dominant": max(
+                ("compute", compute_s), ("memory", memory_s), ("collective", coll_s),
+                key=lambda kv: kv[1],
+            )[0],
+            "model_flops_total": model_flops_total,
+            "useful_flops_ratio": (model_flops_dev / flops_dev) if flops_dev else None,
+        },
+        tag=tag,
+    )
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--compressed", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument(
+        "--override", action="append", default=[],
+        help="ModelConfig field override, e.g. --override rwkv_chunked=64",
+    )
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v in ("True", "False"):
+            overrides[k] = v == "True"
+        else:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                overrides[k] = v
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch, cfg in ARCHS.items():
+            for shp in cells_for(cfg):
+                cells.append((arch, shp))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shp in cells:
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        suffix = "__comp" if args.compressed else ""
+        suffix += f"__{args.tag}" if args.tag else ""
+        fname = outdir / f"{arch}__{shp}__{mesh_tag}{suffix}.json"
+        if fname.exists():
+            print(f"[skip] {fname.name} exists")
+            continue
+        print(f"[dryrun] {arch} x {shp} x {mesh_tag}{suffix} ...", flush=True)
+        try:
+            res = run_cell(arch, shp, multi_pod=args.multi_pod,
+                           compressed=args.compressed, overrides=overrides,
+                           tag=args.tag)
+            fname.write_text(json.dumps(res, indent=2))
+            r = res["roofline"]
+            print(
+                f"  ok: lower {res['seconds']['lower']}s compile {res['seconds']['compile']}s | "
+                f"compute {r['compute_s']:.3e}s memory {r['memory_s']:.3e}s "
+                f"collective {r['collective_s']:.3e}s -> {r['dominant']}",
+                flush=True,
+            )
+        except Exception:
+            failures += 1
+            err = traceback.format_exc()
+            (outdir / f"FAILED__{arch}__{shp}__{mesh_tag}{suffix}.txt").write_text(err)
+            print(f"  FAILED: {err.splitlines()[-1]}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

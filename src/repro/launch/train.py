@@ -1,0 +1,79 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --steps 100 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt [--reduced]
+
+On this container it runs the reduced config on the local device; on a real
+cluster the same entry point builds the production mesh and shards the
+assigned config (--production, exercised shape-only by dryrun.py here).
+Fault tolerance: resumes from the newest checkpoint in --ckpt-dir; data is
+a pure function of the step index, so restarts are deterministic.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SHAPES, get_config, reduced_config
+from ..data.pipeline import TokenPipeline
+from ..models import build_model
+from ..training.fault_tolerance import TrainingRunner
+from ..training.optimizer import AdamWConfig, adamw_init
+from ..training.train_step import make_train_step
+from .mesh import make_local_mesh, make_production_mesh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-codec", default="zstd")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--production", action="store_true",
+                    help="16x16 production mesh (real cluster)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    model = build_model(cfg)
+    mesh = make_production_mesh() if args.production else make_local_mesh(1, 1)
+
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n/1e6:.1f}M mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                          decay_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, mesh, opt_cfg))
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, batch=args.batch, seq_len=args.seq)
+
+    def runner_step(state, batch):
+        p, o, metrics = step_fn(state["params"], state["opt"], batch)
+        return {"params": p, "opt": o}, metrics
+
+    def data_fn(step):
+        return jax.tree.map(jnp.asarray, pipe.batch_at(step))
+
+    runner = TrainingRunner(
+        runner_step, data_fn, {"params": params, "opt": adamw_init(params)},
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, codec=args.ckpt_codec,
+    )
+    hist = runner.run(args.steps)
+    for h in hist[:: max(1, len(hist) // 12)]:
+        print(f"step {h['step']:5d}  loss {h['loss']:.4f}  gnorm {h['grad_norm']:.3f}")
+    print(f"final loss {hist[-1]['loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,3 @@
+"""Model zoo: one flexible trunk covering the 10 assigned architectures."""
+from .model import Model, build_model  # noqa: F401
+from . import layers, transformer  # noqa: F401

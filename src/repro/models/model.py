@@ -1,0 +1,165 @@
+"""Top-level Model facade: config -> init / loss / prefill / decode +
+ShapeDtypeStruct input specs for every assigned shape cell.
+
+Batch conventions per shape kind (DESIGN.md §5):
+  train:    tokens[B, S] + labels[B, S]                  (LM)
+            frames[B, Se, D] + tokens/labels[B, Sd]      (enc-dec, Se=Sd=S/2)
+            tokens[B, S] + vision[B, Nv, D]              (VLM)
+  prefill:  same inputs, emits caches + last-position logits
+  decode:   tokens[B, 1] + caches + cache_index (one new token against a
+            KV cache of seq_len)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..parallel.sharding import shard
+from . import transformer as T
+
+Params = dict
+
+
+def _positions(b: int, s: int) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> Params:
+        return T.init_params(key, self.cfg)
+
+    def init_shapes(self, key=None) -> Any:
+        """Shape-only init via eval_shape (no allocation) — dry-run path."""
+        k = jax.random.PRNGKey(0) if key is None else key
+        return jax.eval_shape(lambda kk: T.init_params(kk, self.cfg), k)
+
+    # ------------------------------------------------------------ forward
+    def _context(self, batch: dict) -> Optional[jax.Array]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return T.encode(batch["params_ref"], batch["frames"], cfg) if False else None
+        return None
+
+    def loss(self, params: Params, batch: dict) -> tuple[jax.Array, dict]:
+        """Causal LM loss (mean xent over tokens) + aux (MoE load balance,
+        z-loss).  For enc-dec: encoder frames + decoder tokens."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        b, s = tokens.shape
+        x = T.embed_tokens(params, tokens, cfg)
+        cross = None
+        if cfg.family == "encdec":
+            cross = T.encode(params, batch["frames"].astype(T.COMPUTE_DTYPE), cfg)
+        elif cfg.family == "vlm":
+            cross = batch["vision"].astype(T.COMPUTE_DTYPE)
+        x, _, aux = T.apply_stack(
+            params, x, cfg, mode="train", positions=_positions(b, s),
+            cross_source=cross,
+        )
+        logits = T.logits_from(params, x, cfg).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        xent = (logz - tgt).mean()
+        z_loss = 1e-4 * jnp.mean(logz**2)
+        moe_loss = 1e-2 * aux
+        total = xent + z_loss + moe_loss
+        return total, {"xent": xent, "z_loss": z_loss, "moe_aux": aux}
+
+    def prefill(self, params: Params, batch: dict) -> tuple[jax.Array, Any]:
+        """Full-sequence forward emitting caches + last-token logits."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = T.embed_tokens(params, tokens, cfg)
+        cross = None
+        if cfg.family == "encdec":
+            cross = T.encode(params, batch["frames"].astype(T.COMPUTE_DTYPE), cfg)
+        elif cfg.family == "vlm":
+            cross = batch["vision"].astype(T.COMPUTE_DTYPE)
+        x, caches, _ = T.apply_stack(
+            params, x, cfg, mode="prefill", positions=_positions(b, s),
+            cross_source=cross,
+        )
+        logits = T.logits_from(params, x[:, -1:, :], cfg)
+        return logits, caches
+
+    def decode_step(
+        self, params: Params, tokens: jax.Array, caches: Any, cache_index: jax.Array
+    ) -> tuple[jax.Array, Any]:
+        """One token (tokens [B,1]) against caches at position cache_index."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = T.embed_tokens(params, tokens, cfg)
+        positions = jnp.full((b, 1), cache_index, jnp.int32)
+        x, new_caches, _ = T.apply_stack(
+            params, x, cfg, mode="decode", positions=positions,
+            caches=caches, cache_index=cache_index,
+        )
+        logits = T.logits_from(params, x, cfg)
+        return logits, new_caches
+
+    # ---------------------------------------------------------- dry specs
+    def make_decode_caches(self, batch: int, max_seq: int):
+        cross_len = self._cross_len(max_seq)
+        return T.make_decode_caches(self.cfg, batch, max_seq, cross_len)
+
+    def _cross_len(self, seq: int) -> int:
+        if self.cfg.family == "encdec":
+            return int(seq * self.cfg.audio_frames_ratio)
+        if self.cfg.family == "vlm":
+            return self.cfg.vision_tokens
+        return 0
+
+    def input_specs(self, shape: ShapeSpec, per_device_batch: Optional[int] = None) -> dict:
+        """ShapeDtypeStruct stand-ins for jit lowering (no allocation)."""
+        cfg = self.cfg
+        b = shape.global_batch if per_device_batch is None else per_device_batch
+        s = shape.seq_len
+        f32 = jnp.float32
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            batch = {}
+            if cfg.family == "encdec":
+                se = int(s * cfg.audio_frames_ratio)
+                sd = s - se
+                batch["frames"] = sds((b, se, cfg.d_model), f32)
+                batch["tokens"] = sds((b, sd), i32)
+                batch["labels"] = sds((b, sd), i32)
+            else:
+                batch["tokens"] = sds((b, s), i32)
+                batch["labels"] = sds((b, s), i32)
+                if cfg.family == "vlm":
+                    batch["vision"] = sds((b, cfg.vision_tokens, cfg.d_model), f32)
+            return batch
+        if shape.kind == "prefill":
+            batch = {}
+            if cfg.family == "encdec":
+                se = int(s * cfg.audio_frames_ratio)
+                batch["frames"] = sds((b, se, cfg.d_model), f32)
+                batch["tokens"] = sds((b, s - se), i32)
+            else:
+                batch["tokens"] = sds((b, s), i32)
+                if cfg.family == "vlm":
+                    batch["vision"] = sds((b, cfg.vision_tokens, cfg.d_model), f32)
+            return batch
+        # decode: one token + caches at seq_len context
+        caches = jax.eval_shape(lambda: self.make_decode_caches(b, s))
+        return {
+            "tokens": sds((b, 1), i32),
+            "caches": caches,
+            "cache_index": sds((), i32),
+        }
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,436 @@
+"""Decoder-only / encoder-decoder transformer assembly.
+
+Layers are grouped into the smallest repeating pattern (``cfg.block_group``:
+e.g. ("rec","rec","local") for recurrentgemma, 4x"attn"+1x"cross" for the
+VLM, ("attn","attn") with dense/MoE FFNs for llama4) and the group stack is
+scanned with ``jax.lax.scan`` over stacked params — bounding HLO size and
+compile time at 512 devices and giving per-group remat.  A non-divisible
+tail (recurrentgemma's 38 = 12*3 + 2) runs as unscanned tail blocks.
+
+Modes: "train" (no caches), "prefill" (emit caches/states), "decode" (one
+token step against caches/states).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import shard
+from . import layers
+from .layers import (
+    AttnCache,
+    MLACache,
+    RecState,
+    RwkvState,
+    COMPUTE_DTYPE,
+    attention_apply,
+    attention_init,
+    mla_apply,
+    mla_init,
+    mlp_apply,
+    mlp_init,
+    moe_apply,
+    moe_init,
+    rglru_apply,
+    rglru_init,
+    rmsnorm,
+    rmsnorm_init,
+    rwkv_apply,
+    rwkv_init,
+)
+
+Params = dict
+
+
+# ------------------------------------------------------------ block structs
+def _block_kind(cfg: ModelConfig, layer_idx: int) -> str:
+    return cfg.block_group[layer_idx % len(cfg.block_group)]
+
+
+def block_init(key, cfg: ModelConfig, layer_idx: int, kind: str, encoder: bool = False) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"ln1": rmsnorm_init(cfg.d_model, cfg), "ln2": rmsnorm_init(cfg.d_model, cfg)}
+    if kind in ("attn", "local", "cross"):
+        p["attn"] = mla_init(k1, cfg) if (cfg.mla and not encoder) else attention_init(k1, cfg)
+    elif kind == "rec":
+        p["rec"] = rglru_init(k1, cfg)
+    elif kind == "rwkv":
+        p["rwkv"] = rwkv_init(k1, cfg)
+    if kind == "cross" and not encoder:
+        p["ln_cross"] = rmsnorm_init(cfg.d_model, cfg)
+        p["cross_attn"] = attention_init(k3, cfg, cross=True)
+    if kind != "rwkv":  # rwkv embeds its channel-mix
+        if cfg.layer_uses_moe(layer_idx) and not encoder:
+            p["moe"] = moe_init(k2, cfg)
+        else:
+            p["mlp"] = mlp_init(k2, cfg)
+    return p
+
+
+def block_apply(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    mode: str,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    cross_source: Optional[jax.Array] = None,
+    encoder: bool = False,
+) -> tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (x, new_cache_dict, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "local", "cross"):
+        if cfg.mla and not encoder:
+            y, c = mla_apply(
+                p["attn"], h, cfg, positions=positions, mode=mode,
+                cache=cache.get("self") if cache else None, cache_index=cache_index,
+            )
+        else:
+            y, c = attention_apply(
+                p["attn"], h, cfg, positions=positions, mode=mode,
+                mask_kind=("none" if encoder else ("local" if kind == "local" else "causal")),
+                cache=cache.get("self") if cache else None, cache_index=cache_index,
+                window=cfg.local_window,
+            )
+        if c is not None:
+            new_cache["self"] = c
+        x = x + y
+        if kind == "cross" and not encoder:
+            hc = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+            if mode == "decode":
+                yc, _ = attention_apply(
+                    p["cross_attn"], hc, cfg, positions=positions, mode="decode_cross",
+                    cache=cache.get("cross") if cache else None,
+                )
+                new_cache["cross"] = cache["cross"]
+            else:
+                yc, cc = attention_apply(
+                    p["cross_attn"], hc, cfg, positions=positions, mode=mode,
+                    kv_source=cross_source,
+                )
+                if mode == "prefill" and cc is not None:
+                    new_cache["cross"] = cc
+            x = x + yc
+    elif kind == "rec":
+        y, st = rglru_apply(p["rec"], h, cfg, mode=mode, state=cache.get("rec") if cache else None)
+        if st is not None:
+            new_cache["rec"] = st
+        x = x + y
+    elif kind == "rwkv":
+        y, st = rwkv_apply(p["rwkv"], h, cfg, mode=mode, state=cache.get("rwkv") if cache else None)
+        if st is not None:
+            new_cache["rwkv"] = st
+        return x + y, (new_cache or None), aux
+
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y2, aux = moe_apply(p["moe"], h2, cfg)
+    else:
+        y2 = mlp_apply(p["mlp"], h2)
+    return x + y2, (new_cache or None), aux
+
+
+# ------------------------------------------------------- prefill cross path
+def cross_prefill_cache(p_block: Params, source: jax.Array, cfg: ModelConfig) -> AttnCache:
+    """Precompute cross-attention K/V from the (enc|vision) context."""
+    b, s, _ = source.shape
+    hd = cfg.resolved_head_dim
+    pa = p_block["cross_attn"]
+    src = source.astype(COMPUTE_DTYPE)
+    k = (src @ pa["wk"].astype(COMPUTE_DTYPE)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (src @ pa["wv"].astype(COMPUTE_DTYPE)).reshape(b, s, cfg.n_kv_heads, hd)
+    kpos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return AttnCache(k=k, v=v, kpos=kpos)
+
+
+# ------------------------------------------------------------- cache makers
+def init_cache_for_kind(
+    cfg: ModelConfig, kind: str, batch: int, max_seq: int, cross_len: int = 0
+) -> dict:
+    hd = cfg.resolved_head_dim
+    def attn_cache(buf):
+        return AttnCache(
+            k=jnp.zeros((batch, buf, cfg.n_kv_heads, hd), COMPUTE_DTYPE),
+            v=jnp.zeros((batch, buf, cfg.n_kv_heads, hd), COMPUTE_DTYPE),
+            kpos=jnp.full((batch, buf), -1, jnp.int32),
+        )
+    c: dict = {}
+    if kind in ("attn", "cross"):
+        if cfg.mla:
+            c["self"] = MLACache(
+                c_kv=jnp.zeros((batch, max_seq, cfg.kv_lora_rank), COMPUTE_DTYPE),
+                k_rope=jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), COMPUTE_DTYPE),
+                kpos=jnp.full((batch, max_seq), -1, jnp.int32),
+            )
+        else:
+            c["self"] = attn_cache(max_seq)
+        if kind == "cross":
+            c["cross"] = attn_cache(cross_len)
+    elif kind == "local":
+        c["self"] = attn_cache(min(cfg.local_window, max_seq))
+    elif kind == "rec":
+        w = cfg.lru_width or cfg.d_model
+        c["rec"] = RecState(
+            h=jnp.zeros((batch, w), jnp.float32),
+            conv=jnp.zeros((batch, cfg.conv_width - 1, w), COMPUTE_DTYPE),
+        )
+    elif kind == "rwkv":
+        hk = cfg.rwkv_head_dim
+        nh = cfg.d_model // hk
+        c["rwkv"] = RwkvState(
+            wkv=jnp.zeros((batch, nh, hk, hk), jnp.float32),
+            shift_t=jnp.zeros((batch, cfg.d_model), COMPUTE_DTYPE),
+            shift_c=jnp.zeros((batch, cfg.d_model), COMPUTE_DTYPE),
+        )
+    return c
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "dots":
+        # save matmul outputs, recompute the cheap elementwise tail — trades
+        # activation memory for less recompute (the §Perf remat lever)
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _layer_split(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_prefix, n_groups, n_tail): prefix = leading structurally-different
+    layers (deepseek's dense first layer), then scanned homogeneous groups,
+    then the non-divisible tail (recurrentgemma 38 = 12*3 + 2)."""
+    group = cfg.block_group
+    prefix = cfg.first_dense_layers if cfg.n_experts else 0
+    eff = cfg.n_layers - prefix
+    n_groups = eff // len(group)
+    tail = eff - n_groups * len(group)
+    return prefix, n_groups, tail
+
+
+def make_decode_caches(cfg: ModelConfig, batch: int, max_seq: int, cross_len: int = 0):
+    """Cache pytree: prefix list + stacked groups + tail list."""
+    group = cfg.block_group
+    prefix, n_groups, tail = _layer_split(cfg)
+
+    def stack(trees):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+    prefixes = [
+        init_cache_for_kind(cfg, group[i % len(group)], batch, max_seq, cross_len)
+        for i in range(prefix)
+    ]
+    grouped = {}
+    for pos, kind in enumerate(group):
+        one = init_cache_for_kind(cfg, kind, batch, max_seq, cross_len)
+        grouped[f"pos{pos}"] = stack([one] * n_groups) if n_groups else one
+    tails = [
+        init_cache_for_kind(cfg, group[i % len(group)], batch, max_seq, cross_len)
+        for i in range(tail)
+    ]
+    return {"prefix": prefixes, "groups": grouped, "tail": tails}
+
+
+# --------------------------------------------------------------- the model
+def init_params(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + cfg.n_enc_layers + 4)
+    pd = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    vp = cfg.padded_vocab
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (vp, cfg.d_model), jnp.float32) * 0.02).astype(pd),
+        "ln_f": rmsnorm_init(cfg.d_model, cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (
+            jax.random.normal(keys[1], (cfg.d_model, vp), jnp.float32)
+            * (cfg.d_model**-0.5)
+        ).astype(pd)
+
+    group = cfg.block_group
+    prefix_n, n_groups, tail_n = _layer_split(cfg)
+
+    params["prefix"] = [
+        block_init(jax.random.fold_in(keys[2], 1000 + i), cfg, i, group[i % len(group)])
+        for i in range(prefix_n)
+    ]
+
+    def one_group(gk, gi):
+        gkeys = jax.random.split(gk, len(group))
+        return {
+            f"pos{p}": block_init(gkeys[p], cfg, prefix_n + gi * len(group) + p, kind)
+            for p, kind in enumerate(group)
+        }
+
+    if cfg.scan_blocks and n_groups > 0:
+        gkeys = jax.random.split(keys[2], n_groups)
+        trees = [one_group(gkeys[i], i) for i in range(n_groups)]
+        params["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    else:
+        params["groups_list"] = [one_group(jax.random.fold_in(keys[2], i), i) for i in range(n_groups)]
+    params["tail"] = [
+        block_init(
+            jax.random.fold_in(keys[3], i), cfg,
+            prefix_n + n_groups * len(group) + i, group[i % len(group)],
+        )
+        for i in range(tail_n)
+    ]
+    if cfg.n_enc_layers:
+        ekeys = jax.random.split(keys[4], cfg.n_enc_layers)
+        etrees = [block_init(ekeys[i], cfg, i, "attn", encoder=True) for i in range(cfg.n_enc_layers)]
+        params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *etrees)
+        params["enc_ln_f"] = rmsnorm_init(cfg.d_model, cfg)
+    return params
+
+
+def _apply_group(
+    gp: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    positions,
+    caches: Optional[dict],
+    cache_index,
+    cross_source,
+):
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: dict = {}
+    for pos, kind in enumerate(cfg.block_group):
+        c = caches.get(f"pos{pos}") if caches else None
+        x, nc, aux = block_apply(
+            gp[f"pos{pos}"], x, cfg, kind,
+            mode=mode, positions=positions, cache=c, cache_index=cache_index,
+            cross_source=cross_source,
+        )
+        aux_total = aux_total + aux
+        if nc is not None:
+            new_caches[f"pos{pos}"] = nc
+    return x, new_caches, aux_total
+
+
+def apply_stack(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    positions: jax.Array,
+    caches: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    cross_source: Optional[jax.Array] = None,
+):
+    """Run prefix blocks + scanned groups + tail.  Returns (x, caches, aux)."""
+    group = cfg.block_group
+    prefix_n, n_groups, _ = _layer_split(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_group_caches = None
+
+    new_prefix = []
+    for i, pp in enumerate(params.get("prefix", [])):
+        kind = group[i % len(group)]
+        pc = caches["prefix"][i] if caches else None
+        x, nc, aux = block_apply(
+            pp, x, cfg, kind, mode=mode, positions=positions, cache=pc,
+            cache_index=cache_index, cross_source=cross_source,
+        )
+        aux_total = aux_total + aux
+        new_prefix.append(nc)
+
+    if cfg.scan_blocks and n_groups > 0 and "groups" in params:
+        use_remat = cfg.remat and mode == "train"
+        if caches is None:
+            emit = mode == "prefill"
+
+            def body_nc(carry, gp):
+                h, auxc = carry
+                h, nc, aux = _apply_group(
+                    gp, h, cfg, mode=mode, positions=positions, caches=None,
+                    cache_index=cache_index, cross_source=cross_source,
+                )
+                return (h, auxc + aux), (nc if emit else 0)
+            fn = jax.checkpoint(body_nc, policy=_remat_policy(cfg)) if use_remat else body_nc
+            (x, aux_total), ys = jax.lax.scan(fn, (x, aux_total), params["groups"])
+            if emit:
+                new_group_caches = ys
+        else:
+            def body_c(carry, xs):
+                h, auxc = carry
+                gp, gc = xs
+                h, nc, aux = _apply_group(
+                    gp, h, cfg, mode=mode, positions=positions, caches=gc,
+                    cache_index=cache_index, cross_source=cross_source,
+                )
+                return (h, auxc + aux), nc
+            fn = jax.checkpoint(body_c, policy=_remat_policy(cfg)) if use_remat else body_c
+            (x, aux_total), new_group_caches = jax.lax.scan(
+                fn, (x, aux_total), (params["groups"], caches["groups"])
+            )
+    else:
+        new_group_caches = {}
+        for gi, gp in enumerate(params.get("groups_list", [])):
+            gc = (
+                jax.tree.map(lambda a: a[gi], caches["groups"]) if caches else None
+            )
+            x, nc, aux = _apply_group(
+                gp, x, cfg, mode=mode, positions=positions, caches=gc,
+                cache_index=cache_index, cross_source=cross_source,
+            )
+            aux_total = aux_total + aux
+            if nc:
+                new_group_caches[gi] = nc
+
+    new_tail = []
+    for i, tp in enumerate(params["tail"]):
+        kind = group[i % len(group)]
+        tc = caches["tail"][i] if caches else None
+        x, nc, aux = block_apply(
+            tp, x, cfg, kind, mode=mode, positions=positions, cache=tc,
+            cache_index=cache_index, cross_source=cross_source,
+        )
+        aux_total = aux_total + aux
+        new_tail.append(nc)
+    out_caches = None
+    if mode in ("prefill", "decode"):
+        out_caches = {"prefix": new_prefix, "groups": new_group_caches, "tail": new_tail}
+    return x, out_caches, aux_total
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Encoder stack over precomputed frontend embeddings [B, S, D]."""
+    x = frames
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1], dtype=jnp.int32)[None], frames.shape[:2]
+    )
+
+    def body(h, gp):
+        h, _, _ = block_apply(gp, h, cfg, "attn", mode="train",
+                              positions=positions, encoder=True)
+        return h, 0
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(body, policy=_remat_policy(cfg))
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+    return rmsnorm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+def embed_tokens(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    return shard(x, "batch", None, None)
+
+
+def logits_from(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = rmsnorm(x, params["ln_f"], cfg.norm_eps).astype(COMPUTE_DTYPE)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(COMPUTE_DTYPE).T
+    else:
+        w = params["head"].astype(COMPUTE_DTYPE)
+    logits = h @ w
+    return shard(logits, "batch", None, "vocab")

@@ -1,0 +1,3 @@
+"""Distribution: logical-axis sharding, param partitioning, collectives."""
+from .sharding import AxisRules, axis_rules, make_rules, shard  # noqa: F401
+from .partition import param_specs, param_shardings, fsdp_axes_for  # noqa: F401

@@ -1,0 +1,128 @@
+"""Parameter partition specs, derived from leaf path names + ranks.
+
+Params are nested dicts; block stacks add a leading ``n_groups`` dim which
+maps to ``None`` (every device holds its slice of every layer).  The fsdp
+axis is ("pod","data") when ``cfg.dcn_fsdp`` and the mesh has a pod axis
+(ZeRO-3 across pods — llama4-400b), else ("data",).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+__all__ = ["param_specs", "param_shardings", "fsdp_axes_for"]
+
+
+def fsdp_axes_for(cfg: ModelConfig, mesh: Mesh):
+    axes = mesh.axis_names
+    if "data" not in axes:
+        return None
+    if cfg.dcn_fsdp and "pod" in axes:
+        return ("pod", "data")
+    return "data"
+
+
+# rules keyed by (leaf name); value = base spec builder given fsdp axis F.
+def _base_rule(name: str, ndim: int, F, in_moe: bool = False):
+    M = "model"
+    two = {
+        "embed": (M, F),
+        "head": (F, M),
+        "wq": (F, M),
+        "wk": (F, M),
+        "wv": (F, M),
+        "wr": (F, M),
+        "wg": (F, M),
+        "wu": (F, M),
+        "wo": (M, F),
+        "wd": (M, F),
+        "w_dkv": (F, None),
+        "w_krope": (F, None),
+        "w_kup": (None, M),
+        "w_vup": (None, M),
+        "router": (F, None),
+        "w_in_x": (F, M),
+        "w_in_g": (F, M),
+        "wa": (F, M),
+        "wx": (F, M),
+        "w_out": (M, F),
+        "conv": (None, M),
+        "w_lora_a": (F, None),
+        "w_lora_b": (None, F),
+        "cm_k": (F, M),
+        "cm_v": (M, F),
+        "cm_r": (F, M),
+        "mix_rkvwg": (None, None),
+        "cm_mix": (None, None),
+        "decay_base": (None, None),
+        "bonus_u": (None, None),
+    }
+    three = {  # expert-stacked weights [E, in, out] (only under a moe path)
+        "wg": (M, F, None),
+        "wu": (M, F, None),
+        "wd": (M, None, F),
+    }
+    if ndim == 1:
+        return (None,)
+    if in_moe and name in three:
+        return three[name]
+    if name in two:
+        return two[name]
+    return tuple([None] * ndim)
+
+
+def _spec_for_leaf(path, leaf, F) -> P:
+    name = None
+    keys = []
+    for entry in path:
+        key = getattr(entry, "key", None) or getattr(entry, "name", None)
+        if isinstance(key, str):
+            keys.append(key)
+    name = keys[-1] if keys else None
+    # expert weights live directly under a "moe" dict (shared experts are a
+    # plain mlp under moe/shared and keep the 2D rules)
+    in_moe = len(keys) >= 2 and keys[-2] == "moe"
+    ndim = leaf.ndim
+    base = _base_rule(name or "", ndim, F, in_moe=in_moe)
+    if len(base) == ndim:
+        return P(*base)
+    if len(base) == ndim - 1:
+        return P(None, *base)  # stacked blocks: leading group dim
+    if len(base) == ndim - 2:
+        return P(None, None, *base)
+    return P(*([None] * ndim))
+
+
+def param_specs(params, cfg: ModelConfig, mesh: Mesh, vocab_dim_sharded: bool = True):
+    """Pytree of PartitionSpec matching ``params`` (works on shapes too).
+
+    vocab_dim_sharded=False re-lays the embedding table as (None, d-sharded):
+    gathers from a vocab-sharded table inside a partial-auto shard_map crash
+    XLA's SPMD partitioner (spmd_partitioner_util.cc:504 check, reproduced in
+    tests/test_sharding.py) — the compressed cross-pod train step uses this
+    layout as the workaround (DESIGN.md §6).
+    """
+    F = fsdp_axes_for(cfg, mesh)
+
+    def spec(path, leaf):
+        s = _spec_for_leaf(path, leaf, F)
+        if not vocab_dim_sharded:
+            keys = [getattr(e, "key", None) or getattr(e, "name", None) for e in path]
+            if keys and keys[-1] == "embed":
+                model = "model" if "model" in mesh.axis_names else None
+                dshard = tuple(a for a in ((F,) if isinstance(F, str) else (F or ())) )
+                combo = tuple(x for x in ((("data",) if "data" in mesh.axis_names else ()) + ((model,) if model else ())))
+                return P(None, combo or None)
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(params, cfg: ModelConfig, mesh: Mesh):
+    specs = param_specs(params, cfg, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

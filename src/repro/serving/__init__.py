@@ -1,0 +1,3 @@
+"""Serving: KV caches (+ SHRINK quantized), continuous batching."""
+from .kvcache import QuantizedKV, dequantize_cache, promote_caches, quantize_cache  # noqa: F401
+from .batching import ContinuousBatcher, Request  # noqa: F401

@@ -1,0 +1,111 @@
+"""Continuous-batching request scheduler for the decode loop.
+
+Fixed-slot batch (static shapes for jit): requests occupy slots; finished
+slots are recycled for queued requests.  All slots share one decode step —
+the per-slot position mask lives in the KV cache's kpos (-1 = empty), so a
+fresh request starting at position 0 coexists with one at position 10k.
+Slot admission resets the slot's cache region lazily via position masking
+(kpos entries of stale data are overwritten as decode proceeds; correctness
+comes from the per-slot `pos` counters used to build attention masks).
+
+This container's single CPU device runs the same code the 512-chip mesh
+would jit — the scheduler is device-count agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Request", "ContinuousBatcher"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """decode_fn(tokens[B,1], caches, index) -> (logits, caches).
+
+    NOTE: this simple scheduler advances all slots with a single shared
+    cache_index (the max position across slots); per-slot validity is
+    enforced by kpos masks.  Prompts are fed token-by-token (prefill==decode
+    path) which keeps the demo simple; a production system would batch
+    prefill separately (see examples/serve_decode.py).
+    """
+
+    def __init__(
+        self,
+        decode_fn: Callable,
+        make_caches: Callable[[], object],
+        n_slots: int,
+        eos_token: int = 2,
+        greedy: bool = True,
+    ):
+        self.decode_fn = decode_fn
+        self.caches = make_caches()
+        self.n_slots = n_slots
+        self.eos = eos_token
+        self.greedy = greedy
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, dtype=np.int64)  # next prompt idx
+        self.global_index = 0
+        self.completed: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.popleft()
+                self.slot_pos[i] = 0
+
+    def step(self) -> bool:
+        """One decode step for all active slots; returns True if any work
+        remains."""
+        self._admit()
+        if all(s is None for s in self.slots) and not self.queue:
+            return False
+        tokens = np.zeros((self.n_slots, 1), dtype=np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            p = int(self.slot_pos[i])
+            if p < len(req.prompt):
+                tokens[i, 0] = req.prompt[p]
+            elif req.generated:
+                tokens[i, 0] = req.generated[-1]
+        logits, self.caches = self.decode_fn(
+            jnp.asarray(tokens), self.caches, jnp.asarray(self.global_index, jnp.int32)
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.slot_pos[i] += 1
+            if self.slot_pos[i] >= len(req.prompt):
+                tok = int(nxt[i])
+                req.generated.append(tok)
+                if tok == self.eos or len(req.generated) >= req.max_new_tokens:
+                    req.done = True
+                    self.completed.append(req)
+                    self.slots[i] = None
+        self.global_index += 1
+        return True
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while self.step() and steps < max_steps:
+            steps += 1
+        return self.completed

@@ -1,0 +1,114 @@
+"""Serving KV-cache utilities: prefill->decode buffer promotion and
+SHRINK residual-quantized cache blocks.
+
+``promote_caches`` pads prefill-built caches (buffer == prompt length) into
+decode buffers (buffer == max_seq), preserving ring-buffer semantics for
+local-attention layers.
+
+``QuantizedKV`` compresses K/V blocks with the residual_quant kernel
+(per-block linear base + int8 residuals): ~3.7x cache memory reduction at a
+bounded L-infinity error — SHRINK's bit-level phase applied to the cache.
+Inapplicable to attention-free archs (rwkv): their recurrent state is
+compressed with the same kernel by the caller instead (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.jaxshrink import CompressedTensor, TensorCodecConfig, compress_tensor, decompress_tensor
+from ..models.layers import AttnCache, MLACache
+
+__all__ = ["promote_caches", "QuantizedKV", "quantize_cache", "dequantize_cache"]
+
+
+def _pad_axis(x: jax.Array, axis: int, new_size: int, fill=0):
+    old = x.shape[axis]
+    if old >= new_size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, new_size - old)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+def promote_caches(caches: Any, max_seq: int) -> Any:
+    """Pad every full-attention cache buffer (and MLA latent cache) from
+    prompt length to max_seq; kpos pads with -1 (empty)."""
+
+    def promote(leaf):
+        return leaf
+
+    def walk(node):
+        if isinstance(node, AttnCache):
+            return AttnCache(
+                k=_pad_axis(node.k, 1, max_seq),
+                v=_pad_axis(node.v, 1, max_seq),
+                kpos=_pad_axis(node.kpos, 1, max_seq, fill=-1),
+            )
+        if isinstance(node, MLACache):
+            return MLACache(
+                c_kv=_pad_axis(node.c_kv, 1, max_seq),
+                k_rope=_pad_axis(node.k_rope, 1, max_seq),
+                kpos=_pad_axis(node.kpos, 1, max_seq, fill=-1),
+            )
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(v) for v in node]
+            return type(node)(t) if not isinstance(node, tuple) else tuple(t)
+        return promote(node)
+
+    # stacked caches carry the group dim in axis 0 -> seq axis shifts by 1
+    def walk_stacked(node, stacked: bool):
+        if isinstance(node, AttnCache):
+            ax = 2 if stacked else 1
+            return AttnCache(
+                k=_pad_axis(node.k, ax, max_seq),
+                v=_pad_axis(node.v, ax, max_seq),
+                kpos=_pad_axis(node.kpos, ax, max_seq, fill=-1),
+            )
+        if isinstance(node, MLACache):
+            ax = 2 if stacked else 1
+            return MLACache(
+                c_kv=_pad_axis(node.c_kv, ax, max_seq),
+                k_rope=_pad_axis(node.k_rope, ax, max_seq),
+                kpos=_pad_axis(node.kpos, ax, max_seq, fill=-1),
+            )
+        if isinstance(node, dict):
+            return {k: walk_stacked(v, stacked) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk_stacked(v, stacked) for v in node]
+        return node
+
+    return {
+        "prefix": walk_stacked(caches.get("prefix", []), stacked=False),
+        "groups": walk_stacked(caches.get("groups"), stacked=True),
+        "tail": walk_stacked(caches.get("tail", []), stacked=False),
+    }
+
+
+@dataclasses.dataclass
+class QuantizedKV:
+    k: CompressedTensor
+    v: CompressedTensor
+    kpos: jax.Array
+
+    def memory_bits(self) -> int:
+        return self.k.wire_bits() + self.v.wire_bits() + self.kpos.size * 32
+
+
+def quantize_cache(cache: AttnCache, cfg: TensorCodecConfig = TensorCodecConfig()) -> QuantizedKV:
+    ck, _ = compress_tensor(cache.k, cfg)
+    cv, _ = compress_tensor(cache.v, cfg)
+    return QuantizedKV(k=ck, v=cv, kpos=cache.kpos)
+
+
+def dequantize_cache(q: QuantizedKV, cfg: TensorCodecConfig = TensorCodecConfig()) -> AttnCache:
+    return AttnCache(
+        k=decompress_tensor(q.k, cfg).astype(jnp.bfloat16),
+        v=decompress_tensor(q.v, cfg).astype(jnp.bfloat16),
+        kpos=q.kpos,
+    )

@@ -1,0 +1,61 @@
+"""SHRINK-compressed metrics/telemetry logger.
+
+Training at 1000+ nodes emits long scalar series (loss, grad-norm, per-layer
+stats) — exactly the data class the paper targets.  MetricsLogger buffers
+scalars per key and flushes SHRINK-compressed chunks (lossless at a fixed
+decimal precision) through the ShardStore, so a month of step metrics costs
+megabytes and supports resolution-tiered reads (coarse eps for dashboards,
+lossless for analysis).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from pathlib import Path
+
+import numpy as np
+
+from ..data.pipeline import ShardStore
+
+__all__ = ["MetricsLogger"]
+
+
+class MetricsLogger:
+    def __init__(self, directory: str | Path, decimals: int = 6,
+                 dashboard_eps: float = 1e-2, chunk: int = 4096):
+        self.store = ShardStore(directory, chunk=chunk)
+        self.decimals = decimals
+        self.dashboard_eps = dashboard_eps
+        self.buffers: dict[str, list[float]] = defaultdict(list)
+        self.flushed: dict[str, int] = defaultdict(int)
+
+    def log(self, step: int, metrics: dict) -> None:
+        for k, v in metrics.items():
+            self.buffers[k].append(float(v))
+
+    def flush(self) -> dict:
+        """Compress every buffered series; returns {key: stored_bytes}."""
+        out = {}
+        for k, vals in self.buffers.items():
+            if not vals:
+                continue
+            v = np.round(np.asarray(vals, dtype=np.float64), self.decimals)
+            rng = float(v.max() - v.min()) or 1.0
+            meta = self.store.put(
+                f"{k}_{self.flushed[k]}", v,
+                eps_list=[self.dashboard_eps * rng, 0.0],
+                decimals=self.decimals,
+            )
+            out[k] = meta["bytes"]
+            self.flushed[k] += 1
+            self.buffers[k] = []
+        return out
+
+    def read(self, key: str, lossless: bool = True) -> np.ndarray:
+        """Concatenate all flushed chunks for `key`."""
+        parts = []
+        for i in range(self.flushed[key]):
+            name = f"{key}_{i}"
+            meta = self.store.meta(name)
+            eps = 0.0 if lossless else meta["eps_list"][0]
+            parts.append(self.store.get(name, eps))
+        return np.concatenate(parts) if parts else np.zeros(0)

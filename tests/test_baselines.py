@@ -1,0 +1,80 @@
+"""Baseline compressors: round-trip correctness + error guarantees."""
+import numpy as np
+import pytest
+
+from repro.baselines import LOSSY, LOSSY_D, LOSSLESS, LOSSLESS_D
+from repro.data.synthetic import DATASETS, load
+
+
+@pytest.fixture(scope="module")
+def series():
+    return load("MoteStrain", n=8000)
+
+
+@pytest.mark.parametrize("name", sorted(LOSSY))
+@pytest.mark.parametrize("eps_frac", [1e-2, 1e-3])
+def test_lossy_error_bound(series, name, eps_frac):
+    eps = eps_frac * float(series.max() - series.min())
+    blob = LOSSY[name](series, eps)
+    vhat = LOSSY_D[name](blob)
+    assert vhat.shape == series.shape
+    err = np.max(np.abs(vhat - series))
+    # f32 slope/value storage costs a few ulp beyond the bound
+    assert err <= eps * (1 + 1e-3) + 1e-9, f"{name}: {err} > {eps}"
+
+
+@pytest.mark.parametrize("name", sorted(LOSSLESS))
+def test_lossless_roundtrip(series, name):
+    d = DATASETS["MoteStrain"].decimals
+    blob = LOSSLESS[name](series, d)
+    vhat = LOSSLESS_D[name](blob)
+    if name == "GD":
+        assert np.array_equal(np.round(vhat, d), np.round(series, d))
+    else:
+        assert np.array_equal(vhat, series)
+
+
+def test_gorilla_bit_exact_on_irrational():
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(500)  # full-entropy mantissas
+    from repro.baselines import gorilla
+
+    assert np.array_equal(gorilla.decompress(gorilla.compress(v)), v)
+
+
+def test_gd_deviation_bit_choice():
+    from repro.baselines import gd
+
+    v = np.round(np.linspace(0, 1, 1000) + 0.001 * np.random.default_rng(1).standard_normal(1000), 3)
+    ints = np.round(v * 1000).astype(np.int64)
+    b, cost = gd.choose_deviation_bits(ints)
+    assert 0 <= b <= 64 and cost > 0
+
+
+def test_simpiece_merges_segments():
+    from repro.baselines import simpiece
+
+    v = load("Pressure", n=20_000)
+    eps = 0.005 * float(v.max() - v.min())
+    segs = simpiece.extract_segments(v, eps)
+    blob = simpiece.compress(v, eps)
+    # merged representation must be smaller than one record per segment
+    assert len(blob) < len(segs) * 12 + 64
+
+
+def test_hire_structure_roundtrip():
+    from repro.baselines import hire
+
+    v = load("Wafer", n=4097)  # non power of two
+    eps = 0.01 * float(v.max() - v.min())
+    vhat = hire.decompress(hire.compress(v, eps))
+    assert np.max(np.abs(vhat - v)) <= eps * (1 + 1e-9)
+
+
+def test_lfzip_decoder_replays_encoder():
+    from repro.baselines import lfzip
+
+    v = load("ECG", n=5000)
+    eps = 1e-3 * float(v.max() - v.min())
+    vhat = lfzip.decompress(lfzip.compress(v, eps))
+    assert np.max(np.abs(vhat - v)) <= eps * (1 + 1e-9)

@@ -1,0 +1,82 @@
+"""Checkpoint: round-trip (all codecs), async, rotation, elastic reshard,
+SHRINK-lossy error bound."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.training.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w1": jnp.asarray(rng.standard_normal((128, 256)), jnp.float32),
+        "w2": jnp.asarray(rng.standard_normal((64, 64)), jnp.bfloat16),
+        "nested": {"b": jnp.asarray(rng.standard_normal(512), jnp.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("codec", ["none", "zstd"])
+def test_roundtrip_exact(tmp_path, codec):
+    state = _state()
+    save_checkpoint(tmp_path, 3, state, codec=codec)
+    restored, step = load_checkpoint(tmp_path, state)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_shrink_codec_error_bound(tmp_path):
+    state = {"w": jnp.asarray(np.random.default_rng(0).standard_normal(50_000), jnp.float32)}
+    frac = 1e-4
+    save_checkpoint(tmp_path, 1, state, codec=f"shrink:{frac}")
+    restored, _ = load_checkpoint(tmp_path, state)
+    w0 = np.asarray(state["w"], np.float64)
+    w1 = np.asarray(restored["w"], np.float64)
+    eps = frac * (w0.max() - w0.min())
+    # + f32 cast rounding of the restored leaf (ulp at max magnitude)
+    slack = 2.0**-23 * max(1.0, np.abs(w0).max())
+    assert np.max(np.abs(w0 - w1)) <= eps * (1 + 1e-6) + slack
+
+
+def test_shrink_codec_compresses(tmp_path):
+    # smooth series compress well below raw f32
+    t = np.linspace(0, 100, 200_000)
+    state = {"w": jnp.asarray(np.sin(t) + 0.01 * np.random.default_rng(1).standard_normal(len(t)), jnp.float32)}
+    save_checkpoint(tmp_path, 1, state, codec="shrink:1e-3")
+    blob = (tmp_path / "step_1" / "leaf_0.bin").stat().st_size
+    assert blob < 0.25 * state["w"].size * 4, f"poor compression: {blob}"
+
+
+def test_async_and_rotation(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_n=2)
+    state = _state()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state, asynchronous=True)
+        mgr.wait()
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+    assert latest_step(tmp_path) == 4
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Save unsharded, restore with explicit shardings on a fresh mesh —
+    the elastic-restart path (single CPU device: exercises device_put)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    state = _state(seed=2)
+    save_checkpoint(tmp_path, 5, state)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shardings = jax.tree.map(lambda x: NamedSharding(mesh, P()), state)
+    restored, step = load_checkpoint(tmp_path, state, shardings=shardings)
+    assert step == 5
+    np.testing.assert_array_equal(
+        np.asarray(restored["w1"]), np.asarray(state["w1"])
+    )

@@ -1,0 +1,253 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles (ref.py),
+swept over shapes and dtypes per the kernel-testing contract."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import (
+    cone_scan,
+    dequant_reconstruct,
+    interval_stats,
+    residual_quant,
+)
+from repro.kernels import ref
+
+_RNG = np.random.default_rng(42)
+
+
+# ------------------------------------------------------------ interval_stats
+@pytest.mark.parametrize("shape,window", [
+    ((128, 128), 16),
+    ((512, 256), 64),
+    ((1024, 128), 128),
+    ((64, 512), 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_interval_stats(shape, window, dtype):
+    x = jnp.asarray(_RNG.standard_normal(shape), dtype=dtype)
+    mn, mx = interval_stats(x, window)
+    mn_r, mx_r = ref.interval_stats_ref(x, window)
+    np.testing.assert_array_equal(np.asarray(mn), np.asarray(mn_r))
+    np.testing.assert_array_equal(np.asarray(mx), np.asarray(mx_r))
+
+
+def test_interval_stats_rejects_ragged():
+    x = jnp.zeros((100, 128), jnp.float32)
+    with pytest.raises(AssertionError):
+        interval_stats(x, 64)
+
+
+# ------------------------------------------------------------ residual_quant
+@pytest.mark.parametrize("m,n", [(8, 128), (32, 256), (128, 128), (5, 384)])
+@pytest.mark.parametrize("qmax", [127, 32767])
+def test_residual_quant(m, n, qmax):
+    x = jnp.asarray(_RNG.standard_normal((m, n)), dtype=jnp.float32)
+    theta = jnp.asarray(_RNG.standard_normal((m, 1)), dtype=jnp.float32)
+    slope = jnp.asarray(_RNG.standard_normal((m, 1)) * 0.01, dtype=jnp.float32)
+    step = jnp.full((m, 1), 0.05, jnp.float32)
+    q, err = residual_quant(x, theta, slope, step, qmax=qmax)
+    q_r, err_r = ref.residual_quant_ref(x, theta, slope, step, qmax=qmax)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(err), np.asarray(err_r), atol=2e-6)
+
+
+def test_residual_quant_clipping():
+    """Huge residuals must saturate at +-qmax, and error feedback must carry
+    the clipped mass."""
+    m, n = 8, 128
+    x = jnp.full((m, n), 100.0, jnp.float32)
+    theta = jnp.zeros((m, 1), jnp.float32)
+    slope = jnp.zeros((m, 1), jnp.float32)
+    step = jnp.full((m, 1), 0.01, jnp.float32)
+    q, err = residual_quant(x, theta, slope, step, qmax=127)
+    assert int(np.asarray(q).max()) == 127
+    np.testing.assert_allclose(np.asarray(err), 100.0 - 127 * 0.01, atol=1e-5)
+
+
+# ------------------------------------------------------------ dequant
+@pytest.mark.parametrize("m,n", [(8, 128), (64, 256), (3, 640)])
+def test_dequant_roundtrip(m, n):
+    q = jnp.asarray(_RNG.integers(-127, 128, (m, n)), dtype=jnp.int32)
+    theta = jnp.asarray(_RNG.standard_normal((m, 1)), dtype=jnp.float32)
+    slope = jnp.asarray(_RNG.standard_normal((m, 1)) * 0.01, dtype=jnp.float32)
+    step = jnp.full((m, 1), 0.05, jnp.float32)
+    xh = dequant_reconstruct(q, theta, slope, step)
+    xh_r = ref.dequant_reconstruct_ref(q, theta, slope, step)
+    np.testing.assert_allclose(np.asarray(xh), np.asarray(xh_r), atol=2e-6)
+
+
+def test_quant_dequant_error_bound():
+    """|x - dequant(quant(x))| <= step/2 wherever no clipping occurred."""
+    m, n = 16, 256
+    x = jnp.asarray(_RNG.standard_normal((m, n)), dtype=jnp.float32)
+    theta = jnp.zeros((m, 1), jnp.float32)
+    slope = jnp.zeros((m, 1), jnp.float32)
+    step = jnp.full((m, 1), 0.05, jnp.float32)
+    q, err = residual_quant(x, theta, slope, step, qmax=127)
+    xh = dequant_reconstruct(q, theta, slope, step)
+    assert np.max(np.abs(np.asarray(xh) - np.asarray(x))) <= 0.025 + 1e-6
+
+
+# ------------------------------------------------------------ cone_scan
+def _compare_cone(x, eps, block_t):
+    out_k = cone_scan(x, eps, block_t=block_t)
+    out_r = ref.cone_scan_ref(x, eps)
+    brk_k, theta_k = np.asarray(out_k[0]), np.asarray(out_k[1])
+    brk_r, theta_r = np.asarray(out_r[0]), np.asarray(out_r[1])
+    np.testing.assert_array_equal(brk_k, brk_r)
+    # compare only at defined (break) positions
+    mask = brk_r.astype(bool)
+    np.testing.assert_allclose(theta_k[mask], theta_r[mask], rtol=1e-5, atol=1e-5)
+    for idx in (2, 3):  # psi_lo / psi_hi at break positions, skip sentinels
+        a, b = np.asarray(out_k[idx]), np.asarray(out_r[idx])
+        m = mask & (np.abs(b) < 1e30)
+        np.testing.assert_allclose(a[m], b[m], rtol=1e-4, atol=1e-4)
+    for idx in (4, 5):  # final spans
+        a, b = np.asarray(out_k[idx]), np.asarray(out_r[idx])
+        m = np.abs(b) < 1e30
+        np.testing.assert_allclose(a[m], b[m], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("t,s,block_t", [
+    (256, 128, 64),
+    (512, 128, 256),
+    (512, 256, 512),
+    (128, 384, 32),
+])
+def test_cone_scan_shapes(t, s, block_t):
+    x = jnp.asarray(
+        np.cumsum(_RNG.standard_normal((t, s)) * 0.05, axis=0), dtype=jnp.float32
+    )
+    eps = jnp.full((t, s), 0.1, jnp.float32)
+    _compare_cone(x, eps, block_t)
+
+
+def test_cone_scan_adaptive_eps():
+    """Per-point eps (the adaptive threshold path) must be honored."""
+    t, s = 256, 128
+    x = jnp.asarray(np.cumsum(_RNG.standard_normal((t, s)) * 0.05, axis=0), jnp.float32)
+    eps = jnp.asarray(0.05 + 0.2 * _RNG.random((t, s)), jnp.float32)
+    _compare_cone(x, eps, 64)
+
+
+def test_cone_scan_segments_cover_series():
+    """Break flags reconstruct a partition; each segment's span approximates
+    its points within eps (the end-to-end semantic check)."""
+    t, s = 512, 128
+    x_np = np.cumsum(_RNG.standard_normal((t, s)) * 0.02, axis=0).astype(np.float32)
+    eps_v = 0.15
+    x = jnp.asarray(x_np)
+    eps = jnp.full((t, s), eps_v, jnp.float32)
+    brk, theta, lo, hi, fin_lo, fin_hi = (np.asarray(a) for a in cone_scan(x, eps, block_t=128))
+    for col in range(0, s, 17):
+        starts = np.flatnonzero(brk[:, col])
+        assert starts[0] == 0
+        ends = np.append(starts[1:], t)
+        for st, en in zip(starts, ends):
+            th = theta[st, col]
+            if en < t:
+                plo, phi = lo[en, col], hi[en, col]
+            else:
+                plo, phi = fin_lo[0, col], fin_hi[0, col]
+            if en - st == 1:
+                continue  # single-point: any slope works
+            slope = 0.5 * (max(plo, -1e30) + min(phi, 1e30))
+            tt = np.arange(en - st)
+            err = np.max(np.abs(x_np[st:en, col] - (th + slope * tt)))
+            assert err <= eps_v * (1 + 1e-4) + 1e-6
+
+
+def test_cone_scan_nonaligned_t_padding():
+    t, s = 300, 128  # t % block_t != 0
+    x = jnp.asarray(np.cumsum(_RNG.standard_normal((t, s)) * 0.05, axis=0), jnp.float32)
+    eps = jnp.full((t, s), 0.1, jnp.float32)
+    out_k = cone_scan(x, eps, block_t=128)
+    out_r = ref.cone_scan_ref(x, eps)
+    np.testing.assert_array_equal(np.asarray(out_k[0]), np.asarray(out_r[0]))
+
+
+# ------------------------------------------------------------ property sweeps
+from hypothesis import given, settings, strategies as st
+
+
+@given(
+    m=st.integers(min_value=1, max_value=48),
+    n=st.sampled_from([128, 256, 384, 512]),
+    step=st.floats(min_value=1e-4, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+@settings(max_examples=15, deadline=None)
+def test_residual_quant_property(m, n, step, seed):
+    """Any block geometry: kernel == oracle exactly on q, and the
+    quant/dequant error bound |err| <= step/2 holds wherever unclipped."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    theta = jnp.asarray(rng.standard_normal((m, 1)), jnp.float32)
+    slope = jnp.asarray(rng.standard_normal((m, 1)) * 0.01, jnp.float32)
+    st_arr = jnp.full((m, 1), step, jnp.float32)
+    q, err = residual_quant(x, theta, slope, st_arr)
+    q_r, err_r = ref.residual_quant_ref(x, theta, slope, st_arr)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+    unclipped = np.abs(np.asarray(q)) < 127
+    bound = step / 2 + 1e-5 + np.abs(np.asarray(x)).max() * 1e-6
+    assert np.all(np.abs(np.asarray(err))[unclipped] <= bound)
+
+
+@given(
+    t=st.sampled_from([64, 128, 192, 256]),
+    s=st.sampled_from([128, 256]),
+    eps=st.floats(min_value=0.02, max_value=0.5),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+@settings(max_examples=8, deadline=None)
+def test_cone_scan_property(t, s, eps, seed):
+    """Break flags from the Pallas kernel match the lax.scan oracle for any
+    geometry/threshold."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(np.cumsum(rng.standard_normal((t, s)) * 0.05, axis=0), jnp.float32)
+    ee = jnp.full((t, s), eps, jnp.float32)
+    brk_k = np.asarray(cone_scan(x, ee, block_t=64)[0])
+    brk_r = np.asarray(ref.cone_scan_ref(x, ee)[0])
+    np.testing.assert_array_equal(brk_k, brk_r)
+
+
+# ------------------------------------------------------------ flash attention
+from repro.kernels import flash_attention
+
+
+@pytest.mark.parametrize("s,d,causal", [
+    (256, 128, True),
+    (256, 128, False),
+    (512, 64, True),
+    (128, 256, True),
+])
+def test_flash_attention_matches_ref(s, d, causal):
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((2, 2, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 2, s, d)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal)
+    exp = flash_attention(q, k, v, causal=causal, force_ref=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.standard_normal((1, 2, 256, 128)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 128)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 128)), jnp.bfloat16)
+    out = np.asarray(flash_attention(q, k, v), np.float32)
+    exp = np.asarray(flash_attention(q, k, v, force_ref=True), np.float32)
+    np.testing.assert_allclose(out, exp, atol=3e-2, rtol=3e-2)
+
+
+def test_flash_attention_rectangular_kv():
+    """Cross-attention shape: S_q != S_kv, no causal mask."""
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((1, 1, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 384, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, 384, 64)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False)
+    exp = flash_attention(q, k, v, causal=False, force_ref=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)

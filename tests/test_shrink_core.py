@@ -1,0 +1,196 @@
+"""Unit tests for the SHRINK codec: error guarantees, multiresolution,
+lossless round-trip, serialization, and the adaptive threshold mechanics."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Base,
+    ShrinkCodec,
+    ShrinkConfig,
+    base_predictions,
+    construct_base,
+    cs_from_bytes,
+    cs_to_bytes,
+    default_interval_length,
+    eps_hat_for_level,
+    extract_semantics,
+    extract_semantics_py,
+    optimized_slope,
+    practical_eps_b,
+    shortest_decimal_in_interval,
+)
+from repro.core.serialize import decode_base, encode_base
+from repro.data.synthetic import load
+
+
+def _series(n=20_000, seed=0, decimals=4):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    v = (
+        np.sin(t * 0.01) * 3
+        + 0.5 * np.sin(t * 0.002)
+        + rng.normal(0, 0.05, n)
+    )
+    return np.round(v, decimals)
+
+
+# ---------------------------------------------------------------- semantics
+def test_vectorized_scan_matches_reference_loop():
+    v = _series(3000)
+    cfg = ShrinkConfig(eps_b=0.2, lam=1e-4)
+    fast = extract_semantics(v, cfg)
+    slow = extract_semantics_py(v, cfg)
+    assert len(fast) == len(slow)
+    for a, b in zip(fast, slow):
+        assert a.t0 == b.t0 and a.length == b.length
+        assert a.theta == pytest.approx(b.theta)
+        assert a.level == b.level
+        if math.isfinite(a.psi_lo):
+            assert a.psi_lo == pytest.approx(b.psi_lo)
+            assert a.psi_hi == pytest.approx(b.psi_hi)
+
+
+def test_segments_partition_series():
+    v = _series(5000, seed=3)
+    cfg = ShrinkConfig(eps_b=0.1)
+    segs = extract_semantics(v, cfg)
+    cursor = 0
+    for s in segs:
+        assert s.t0 == cursor
+        assert s.length >= 1
+        cursor += s.length
+    assert cursor == len(v)
+
+
+def test_cone_covers_points_within_eps_hat():
+    """Any slope inside the final span approximates all points within eps_hat."""
+    v = _series(2000, seed=5)
+    cfg = ShrinkConfig(eps_b=0.3)
+    for s in extract_semantics(v, cfg):
+        if s.length < 2:
+            continue
+        eps_hat = eps_hat_for_level(s.level, cfg)
+        mid = 0.5 * (s.psi_lo + s.psi_hi)
+        t = np.arange(s.length)
+        approx = s.theta + mid * t
+        err = np.max(np.abs(v[s.t0 : s.t0 + s.length] - approx))
+        assert err <= eps_hat * (1 + 1e-9) + 1e-12
+
+
+def test_adaptive_threshold_direction():
+    """High fluctuation -> tighter threshold (Eq. 4)."""
+    cfg = ShrinkConfig(eps_b=1.0, beta_levels=16)
+    assert eps_hat_for_level(16, cfg) < eps_hat_for_level(0, cfg)
+    assert eps_hat_for_level(0, cfg) == pytest.approx(math.exp(2 / 3))
+    assert eps_hat_for_level(16, cfg) == pytest.approx(math.exp(2 / 3 - 1))
+
+
+def test_interval_length_formula():
+    cfg = ShrinkConfig(eps_b=0.5, lam=1e-4)
+    assert default_interval_length(100_000, cfg) == int(1e-4 * 100_000 * 0.5)
+    # clamped below
+    assert default_interval_length(10, cfg) == cfg.min_interval
+
+
+# ---------------------------------------------------------------- slope
+def test_shortest_decimal_in_interval():
+    v, d = shortest_decimal_in_interval(0.12385382, 0.12389554)
+    assert 0.12385382 <= v <= 0.12389554
+    assert d <= 5  # the paper's example yields 5 digits
+    v, d = shortest_decimal_in_interval(0.94, 1.06)
+    assert v == pytest.approx(1.0) and d == 0
+    # adjacent-digit case that breaks the literal Alg. 5
+    v, d = shortest_decimal_in_interval(0.1258, 0.1263)
+    assert 0.1258 <= v <= 0.1263
+
+
+def test_optimized_slope_degenerate():
+    assert optimized_slope(-math.inf, math.inf) == (0.0, 0)
+    s, _ = optimized_slope(0.5, 0.5)
+    assert s == 0.5
+
+
+# ---------------------------------------------------------------- base
+def test_base_merge_reduces_subbases():
+    v = _series(20_000)
+    cfg = ShrinkConfig(eps_b=0.3)
+    segs = extract_semantics(v, cfg)
+    base = construct_base(segs, len(v), float(v.min()), float(v.max()), cfg)
+    assert base.k <= len(segs)
+    assert base.segment_count() == len(segs)
+
+
+def test_base_serialization_roundtrip():
+    v = _series(10_000, seed=7)
+    cfg = ShrinkConfig(eps_b=0.25)
+    segs = extract_semantics(v, cfg)
+    base = construct_base(segs, len(v), float(v.min()), float(v.max()), cfg)
+    blob = encode_base(base)
+    base2 = decode_base(blob)
+    np.testing.assert_allclose(base_predictions(base), base_predictions(base2), rtol=0, atol=1e-12)
+
+
+def test_practical_eps_bounded():
+    """Base-only error is bounded by max eps_hat + slope-truncation slack."""
+    v = _series(30_000, seed=11)
+    codec = ShrinkCodec.from_fraction(v, frac=0.05)
+    base = codec.build_base(v)
+    eps_hat_max = eps_hat_for_level(0, codec.config)
+    assert practical_eps_b(v, base) <= eps_hat_max * (1 + 1e-6)
+
+
+# ---------------------------------------------------------------- codec
+@pytest.mark.parametrize("eps", [1e-1, 1e-2, 1e-3, 1e-4])
+def test_linf_guarantee(eps):
+    v = _series(20_000, seed=13)
+    codec = ShrinkCodec.from_fraction(v, frac=0.05)
+    cs = codec.compress(v, eps_targets=[eps])
+    vhat = codec.decompress_at(cs, eps)
+    if cs.residual_bytes[eps] is None:
+        assert np.max(np.abs(vhat - v)) <= cs.eps_b_practical * (1 + 1e-9)
+    else:
+        assert np.max(np.abs(vhat - v)) <= eps * (1 + 1e-9)
+
+
+def test_lossless_roundtrip_decimal_grid():
+    for name, decimals in [("WindSpeed", 2), ("Pressure", 5)]:
+        v = load(name, n=20_000)
+        codec = ShrinkCodec.from_fraction(v, frac=0.05)
+        cs = codec.compress(v, eps_targets=[0.0], decimals=decimals)
+        vhat = codec.decompress_at(cs, 0.0)
+        assert np.array_equal(np.round(vhat, decimals), v)
+
+
+def test_multiresolution_single_base():
+    """One base serves many eps; finer eps -> larger stream, smaller error."""
+    v = _series(30_000, seed=17)
+    codec = ShrinkCodec.from_fraction(v, frac=0.05)
+    eps_list = [1e-2, 1e-3, 1e-4]
+    cs = codec.compress(v, eps_targets=eps_list)
+    sizes = [cs.size_at(e) for e in eps_list]
+    assert sizes == sorted(sizes)  # finer -> bigger
+    errs = [np.max(np.abs(codec.decompress_at(cs, e) - v)) for e in eps_list]
+    tol = 1 + 1e-9
+    assert errs[0] <= 1e-2 * tol and errs[1] <= 1e-3 * tol and errs[2] <= 1e-4 * tol
+
+
+def test_container_roundtrip():
+    v = _series(5000, seed=19)
+    codec = ShrinkCodec.from_fraction(v, frac=0.05)
+    cs = codec.compress(v, eps_targets=[1e-2, 0.0], decimals=4)
+    blob = cs_to_bytes(cs)
+    cs2 = cs_from_bytes(blob)
+    np.testing.assert_allclose(
+        codec.decompress_at(cs2, 1e-2), codec.decompress_at(cs, 1e-2), atol=0
+    )
+    assert np.array_equal(codec.decompress_at(cs2, 0.0), codec.decompress_at(cs, 0.0))
+
+
+def test_base_only_for_loose_eps():
+    v = _series(10_000, seed=23)
+    codec = ShrinkCodec.from_fraction(v, frac=0.05)
+    loose = 10.0  # way above eps_b_practical
+    cs = codec.compress(v, eps_targets=[loose])
+    assert cs.residual_bytes[loose] is None

@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) for SHRINK invariants and the entropy
+coder: the L-infinity guarantee must hold for *any* input series, the range
+coder must round-trip any int stream, and base merging must preserve the
+per-segment span constraints."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ShrinkCodec,
+    ShrinkConfig,
+    construct_base,
+    base_predictions,
+    extract_semantics,
+    extract_semantics_py,
+    eps_hat_for_level,
+)
+from repro.core import entropy
+
+
+# bounded, finite float series
+_series_strategy = st.lists(
+    st.floats(min_value=-1e6, max_value=1e6, allow_nan=False, allow_infinity=False, width=32),
+    min_size=2,
+    max_size=400,
+)
+
+
+@given(_series_strategy, st.floats(min_value=1e-4, max_value=10.0))
+@settings(max_examples=60, deadline=None)
+def test_linf_guarantee_any_series(vals, eps):
+    v = np.array(vals, dtype=np.float64)
+    rng = float(v.max() - v.min())
+    if rng <= 0:
+        return
+    codec = ShrinkCodec.from_fraction(v, frac=0.05, backend="rc")
+    cs = codec.compress(v, eps_targets=[eps])
+    vhat = codec.decompress_at(cs, eps)
+    bound = cs.eps_b_practical if cs.residual_bytes[eps] is None else eps
+    # slack: float64 representation error scales with |v| (half-ulp of the
+    # reconstruction addition), so the guarantee is eps + O(ulp(|v|)).
+    ulp_slack = 4 * np.finfo(np.float64).eps * max(1.0, float(np.abs(v).max()))
+    assert np.max(np.abs(vhat - v)) <= bound * (1 + 1e-9) + ulp_slack
+
+
+@given(_series_strategy)
+@settings(max_examples=40, deadline=None)
+def test_vectorized_matches_loop(vals):
+    v = np.array(vals, dtype=np.float64)
+    if v.max() == v.min():
+        return
+    cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
+    fast = extract_semantics(v, cfg)
+    slow = extract_semantics_py(v, cfg)
+    assert [(s.t0, s.length) for s in fast] == [(s.t0, s.length) for s in slow]
+
+
+@given(_series_strategy)
+@settings(max_examples=40, deadline=None)
+def test_base_merge_preserves_constraints(vals):
+    """After merging, each sub-base's line approximates every member segment
+    within that segment's eps_hat (the interval-graph merge invariant)."""
+    v = np.array(vals, dtype=np.float64)
+    if v.max() == v.min():
+        return
+    cfg = ShrinkConfig(eps_b=0.1 * float(v.max() - v.min()), lam=1e-3)
+    segs = extract_semantics(v, cfg)
+    base = construct_base(segs, len(v), float(v.min()), float(v.max()), cfg)
+    pred = base_predictions(base)
+    for sb in base.subbases:
+        eps_hat = eps_hat_for_level(sb.level, cfg)
+        for t0, ln in zip(sb.t0s.tolist(), sb.lengths.tolist()):
+            err = np.max(np.abs(v[t0 : t0 + ln] - pred[t0 : t0 + ln]))
+            # slope-truncation can add the quantized-origin slack; the bound
+            # for in-span slopes is eps_hat exactly.
+            if sb.psi_lo <= sb.slope <= sb.psi_hi or ln == 1:
+                assert err <= eps_hat * (1 + 1e-9) + 1e-12
+
+
+@given(
+    st.lists(st.integers(min_value=-(2**40), max_value=2**40), min_size=0, max_size=2000),
+    st.sampled_from(["rc", "zstd", "raw", "best"]),
+)
+@settings(max_examples=50, deadline=None)
+def test_entropy_roundtrip(ints, backend):
+    q = np.array(ints, dtype=np.int64)
+    if q.size == 0:
+        return
+    blob = entropy.encode_ints(q, backend=backend)
+    out = entropy.decode_ints(blob)
+    assert np.array_equal(out, q)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=255), min_size=1, max_size=5000))
+@settings(max_examples=30, deadline=None)
+def test_range_coder_bytes_roundtrip(symbols):
+    q = np.array(symbols, dtype=np.int64)
+    blob = entropy.encode_ints(q, backend="rc")
+    assert np.array_equal(entropy.decode_ints(blob), q)
+
+
+@given(
+    st.floats(min_value=-1e3, max_value=1e3, allow_nan=False),
+    st.floats(min_value=1e-9, max_value=1e3, allow_nan=False),
+)
+@settings(max_examples=100, deadline=None)
+def test_shortest_decimal_always_inside(lo, width):
+    from repro.core import shortest_decimal_in_interval
+
+    hi = lo + width
+    v, d = shortest_decimal_in_interval(lo, hi)
+    assert lo - 1e-9 <= v <= hi + 1e-9
