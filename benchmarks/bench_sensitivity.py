@@ -19,7 +19,7 @@ def fig9_eps_b_effect(n=200_000, dataset="WindSpeed") -> dict:
     eps_list = [e * rng for e in (0.01, 0.005, 0.001)]
     out = {"eps": eps_list}
     for frac in (0.05, 0.08, 0.10):
-        codec = ShrinkCodec.from_fraction(v, frac=frac, backend="zstd")
+        codec = ShrinkCodec.from_fraction(v, frac=frac, backend="rans")
         cs = codec.compress(v, eps_targets=eps_list)
         out[f"eps_b={int(frac*100)}%"] = {
             "cr": [cr(len(v), cs.size_at(e)) for e in eps_list],
@@ -42,7 +42,7 @@ def fig12_lambda_effect(n=200_000, dataset="WindSpeed") -> dict:
             config=type(ShrinkCodec.from_fraction(v).config)(
                 eps_b=0.05 * rng, lam=lam
             ),
-            backend="zstd",
+            backend="rans",
         )
         with Timer() as t:
             cs = codec.compress(v, eps_targets=[eps])

@@ -8,10 +8,14 @@ uses Table II row counts where tractable.
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
 
 from . import bench_compression, bench_roofline, bench_scaling, bench_sensitivity, bench_throughput
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def _fmt_cr_table(fig, methods) -> str:
@@ -93,6 +97,27 @@ def main(argv=None) -> int:
         print("  " + name.ljust(14) + "  ".join(f"{k}={v:6.2f}MB/s" for k, v in sorted(row.items())))
     t3 = bench_throughput.table3_latency(n=n11)
     checks.update(bench_throughput.validate_claims(fig11))
+
+    print("\n== Engine throughput (entropy backends + batched pipeline) ==")
+    engine = bench_throughput.throughput_json(quick=args.quick)
+    for backend, row in engine["entropy_backends"].items():
+        if isinstance(row, dict):
+            print(
+                f"  entropy[{backend:4s}] enc={row['encode_mb_s']:8.2f}MB/s "
+                f"dec={row['decode_mb_s']:8.2f}MB/s size={row['bytes']}B"
+            )
+    bp = engine["batched_pipeline"]
+    print(
+        f"  batch[{bp['series']}x{bp['points_per_series']}] "
+        f"batch={bp['batch_mb_s']:.2f}MB/s loop={bp['loop_mb_s']:.2f}MB/s "
+        f"speedup={bp['batch_speedup']:.2f}x"
+    )
+    # machine-readable perf trajectory for future PRs to diff against; only
+    # full-size runs update the repo-root trajectory (quick numbers live in
+    # artifacts/bench via save_result and must not clobber the baseline)
+    if not args.quick:
+        (_REPO_ROOT / "BENCH_throughput.json").write_text(json.dumps(engine, indent=2))
+        print(f"  wrote {_REPO_ROOT / 'BENCH_throughput.json'}")
 
     if not args.skip_roofline:
         print("\n== Roofline (from dry-run artifacts) ==")

@@ -46,7 +46,7 @@ def main():
     print("\nbase size vs data size:")
     for n in (50_000, 100_000, 200_000):
         vv = load("WindSpeed", n=n)
-        cc = ShrinkCodec.from_fraction(vv, frac=0.05, backend="zstd")
+        cc = ShrinkCodec.from_fraction(vv, frac=0.05, backend="rans")
         cso = cc.compress(vv, eps_targets=[1e-3 * rng])
         print(f"  n={n:8,d}  base={len(cso.base_bytes):8,d}B  "
               f"residuals={len(cso.residual_bytes[1e-3*rng] or b''):10,d}B")

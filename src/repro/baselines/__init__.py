@@ -35,7 +35,6 @@ LOSSY_D = {
 LOSSLESS = {
     "GZip": lambda v, d: standard.gzip_c.compress(v),
     "BZip2": lambda v, d: standard.bzip2_c.compress(v),
-    "zstd": lambda v, d: standard.zstd_c.compress(v),
     "TRC": lambda v, d: standard.trc_c.compress(v),
     "Gorilla": lambda v, d: gorilla.compress(v),
     "GD": lambda v, d: gd.compress(v, d),
@@ -44,8 +43,13 @@ LOSSLESS = {
 LOSSLESS_D = {
     "GZip": standard.gzip_c.decompress,
     "BZip2": standard.bzip2_c.decompress,
-    "zstd": standard.zstd_c.decompress,
     "TRC": standard.trc_c.decompress,
     "Gorilla": gorilla.decompress,
     "GD": gd.decompress,
 }
+
+# zstd rides only when the optional dependency is installed; TRC degrades to
+# its rANS entropy stage on its own, so it stays unconditional.
+if standard._zstd is not None:
+    LOSSLESS["zstd"] = lambda v, d: standard.zstd_c.compress(v)
+    LOSSLESS_D["zstd"] = standard.zstd_c.decompress

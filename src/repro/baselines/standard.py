@@ -93,11 +93,16 @@ class trc_c:
             sym = np.frombuffer(raw, dtype=np.uint8).astype(np.int64)
             payload = b"\x00" + entropy.encode_ints(sym, backend="rc")
         else:
-            # byte-plane transposition (BWT-like reordering) + zstd entropy stage
+            # byte-plane transposition (BWT-like reordering) + entropy stage:
+            # zstd when installed, the vectorized rANS engine otherwise
             planes = v.view(np.uint64)
             mat = np.stack([(planes >> np.uint64(8 * i)) & np.uint64(0xFF) for i in range(8)])
-            body = mat.astype(np.uint8).tobytes()
-            payload = b"\x01" + _zstd.ZstdCompressor(level=19).compress(body)
+            if _zstd is not None:
+                body = mat.astype(np.uint8).tobytes()
+                payload = b"\x01" + _zstd.ZstdCompressor(level=19).compress(body)
+            else:
+                sym = mat.astype(np.int64).ravel()
+                payload = b"\x02" + entropy.encode_ints(sym, backend="rans")
         return _tag(b"TRC0", len(v), payload)
 
     @staticmethod
@@ -107,8 +112,16 @@ class trc_c:
         if mode == 0:
             sym = entropy.decode_ints(body).astype(np.uint8)
             return np.frombuffer(sym.tobytes(), dtype=np.float64)
-        raw = _zstd.ZstdDecompressor().decompress(body)
-        mat = np.frombuffer(raw, dtype=np.uint8).reshape(8, n).astype(np.uint64)
+        if mode == 2:
+            mat = entropy.decode_ints(body).astype(np.uint64).reshape(8, n)
+        else:
+            if _zstd is None:
+                raise RuntimeError(
+                    "this TRC blob was encoded with the zstd entropy stage; "
+                    "install the 'zstandard' extra to decode it"
+                )
+            raw = _zstd.ZstdDecompressor().decompress(body)
+            mat = np.frombuffer(raw, dtype=np.uint8).reshape(8, n).astype(np.uint64)
         planes = np.zeros(n, dtype=np.uint64)
         for i in range(8):
             planes |= mat[i] << np.uint64(8 * i)

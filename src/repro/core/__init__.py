@@ -10,8 +10,18 @@ from .types import (  # noqa: F401
     ShrinkConfig,
     SubBase,
 )
-from .phases import default_interval_length, divide, eps_hat_for_level  # noqa: F401
-from .semantics import extract_semantics, extract_semantics_py  # noqa: F401
+from .phases import (  # noqa: F401
+    default_interval_length,
+    divide,
+    eps_hat_for_level,
+    fluctuation_table,
+)
+from .semantics import (  # noqa: F401
+    extract_semantics,
+    extract_semantics_batch,
+    extract_semantics_batch_pallas,
+    extract_semantics_py,
+)
 from .base import base_predictions, construct_base, practical_eps_b  # noqa: F401
 from .slope import optimized_slope, shortest_decimal_in_interval  # noqa: F401
 from .residuals import (  # noqa: F401
@@ -19,7 +29,9 @@ from .residuals import (  # noqa: F401
     dequantize_exact,
     dequantize_residuals,
     quantize_exact,
+    quantize_exact_batch,
     quantize_residuals,
+    quantize_residuals_batch,
 )
 from .shrink import (  # noqa: F401
     BYTES_PER_ROW,

@@ -21,7 +21,12 @@ from .phases import eps_hat_for_level
 from .slope import optimized_slope
 from .types import Base, Segment, ShrinkConfig, SubBase
 
-__all__ = ["construct_base", "base_predictions", "practical_eps_b"]
+__all__ = [
+    "construct_base",
+    "base_predictions",
+    "base_predictions_batch",
+    "practical_eps_b",
+]
 
 
 def _origin_key(seg: Segment, config: ShrinkConfig) -> tuple[int, int]:
@@ -86,21 +91,29 @@ def construct_base(
     return Base(n=n, config=config, vmin=vmin, vmax=vmax, subbases=subbases)
 
 
+def _flat_segments(
+    base: Base,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """All member segments as parallel arrays sorted by t0 (the partition
+    order): (t0s i64, lengths i64, thetas f64, slopes f64)."""
+    sbs = base.subbases
+    if not sbs:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z, z.astype(np.float64), z.astype(np.float64)
+    t0s = np.concatenate([sb.t0s for sb in sbs])
+    lens = np.concatenate([sb.lengths for sb in sbs])
+    thetas = np.concatenate([np.full(len(sb.t0s), sb.theta) for sb in sbs])
+    slopes = np.concatenate([np.full(len(sb.t0s), sb.slope) for sb in sbs])
+    order = np.argsort(t0s, kind="stable")  # t0s are unique: a partition
+    return t0s[order], lens[order], thetas[order], slopes[order]
+
+
 def base_predictions(base: Base) -> np.ndarray:
     """Vectorized reconstruction of the base-only approximation (n floats)."""
     n = base.n
     if n == 0:
         return np.zeros(0, dtype=np.float64)
-    segs = [
-        (int(t0), int(ln), sb.theta, sb.slope)
-        for sb in base.subbases
-        for t0, ln in zip(sb.t0s.tolist(), sb.lengths.tolist())
-    ]
-    segs.sort()
-    t0s = np.array([s[0] for s in segs], dtype=np.int64)
-    lens = np.array([s[1] for s in segs], dtype=np.int64)
-    thetas = np.array([s[2] for s in segs], dtype=np.float64)
-    slopes = np.array([s[3] for s in segs], dtype=np.float64)
+    t0s, lens, thetas, slopes = _flat_segments(base)
     theta = np.repeat(thetas, lens)
     slope = np.repeat(slopes, lens)
     start = np.repeat(t0s.astype(np.float64), lens)
@@ -108,7 +121,30 @@ def base_predictions(base: Base) -> np.ndarray:
     return theta + slope * (t - start)
 
 
-def practical_eps_b(values: np.ndarray, base: Base) -> float:
-    """The paper's \\hat{eps}_b: realized max |v - base prediction|."""
-    pred = base_predictions(base)
+def base_predictions_batch(bases: list[Base]) -> np.ndarray:
+    """``np.stack([base_predictions(b) for b in bases])`` in one repeat pass;
+    all bases must share the same n."""
+    s = len(bases)
+    if s == 0:
+        return np.zeros((0, 0), dtype=np.float64)
+    n = bases[0].n
+    if n == 0:
+        return np.zeros((s, 0), dtype=np.float64)
+    flats = [_flat_segments(b) for b in bases]
+    lens = np.concatenate([f[1] for f in flats])
+    theta = np.repeat(np.concatenate([f[2] for f in flats]), lens)
+    slope = np.repeat(np.concatenate([f[3] for f in flats]), lens)
+    start = np.repeat(np.concatenate([f[0] for f in flats]).astype(np.float64), lens)
+    t = np.tile(np.arange(n, dtype=np.float64), s)
+    return (theta + slope * (t - start)).reshape(s, n)
+
+
+def practical_eps_b(
+    values: np.ndarray, base: Base, pred: np.ndarray | None = None
+) -> float:
+    """The paper's \\hat{eps}_b: realized max |v - base prediction|.
+    ``pred`` lets callers that already materialized the reconstruction skip
+    recomputing it."""
+    if pred is None:
+        pred = base_predictions(base)
     return float(np.max(np.abs(values - pred))) if base.n else 0.0

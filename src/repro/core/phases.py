@@ -33,6 +33,7 @@ __all__ = [
     "eps_hat_for_level",
     "quantize_origin",
     "divide",
+    "fluctuation_table",
 ]
 
 
@@ -59,6 +60,69 @@ def eps_hat_for_level(level: int, config: ShrinkConfig) -> float:
 def quantize_origin(value: float, eps_hat: float) -> float:
     """Eq. 5: Theta = floor(v / eps_hat) * eps_hat."""
     return math.floor(value / eps_hat) * eps_hat
+
+
+def _sliding_forward(v: np.ndarray, w: int, ufunc: np.ufunc, pad: float) -> np.ndarray:
+    """Per-row forward-window extremum: out[s, t] = ufunc.reduce(v[s, t:t+w])
+    (windows truncated at the row end).  Van Herk / Gil-Werman two-pass,
+    O(S*T) regardless of w."""
+    s, t = v.shape
+    if w >= t:
+        return ufunc.accumulate(v[:, ::-1], axis=1)[:, ::-1]
+    if w <= 32:  # small windows: w-1 shifted whole-array ops beat blocking
+        out = v.copy()
+        for d in range(1, w):
+            ufunc(out[:, : t - d], v[:, d:], out=out[:, : t - d])
+        return out
+    nb = -(-t // w)
+    p = nb * w
+    vp = np.full((s, p), pad, dtype=v.dtype)
+    vp[:, :t] = v
+    blocks = vp.reshape(s, nb, w)
+    pre = ufunc.accumulate(blocks, axis=2).reshape(s, p)
+    suf = ufunc.accumulate(blocks[:, :, ::-1], axis=2)[:, :, ::-1].reshape(s, p)
+    end = np.arange(t) + w - 1
+    out = suf[:, :t].copy()
+    inb = end < p  # windows whose last index falls inside the padded array
+    out[:, inb] = ufunc(out[:, inb], pre[:, end[inb]])
+    return out
+
+
+def fluctuation_table(
+    values: np.ndarray,
+    delta_global: np.ndarray,
+    config: ShrinkConfig,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized Alg. 2 for a batch of series: the (level, eps_hat) that
+    ``divide`` would compute for a cone starting at every (series, index).
+
+    values:       [S, T] float64.
+    delta_global: [S] per-series global max - min.
+
+    Returns (levels int64 [S, T], eps_hat float64 [S, T]), bit-identical to
+    calling ``divide(values[s], t, L, delta_global[s], config)`` pointwise.
+    """
+    values = np.asarray(values, dtype=np.float64)
+    s, t = values.shape
+    if t == 0:
+        z = np.zeros((s, 0))
+        return z.astype(np.int64), z
+    w = max(default_interval_length(t, config), 2)
+    dmax = _sliding_forward(values, w, np.maximum, -math.inf)
+    dmin = _sliding_forward(values, w, np.minimum, math.inf)
+    delta_local = dmax - dmin
+    delta_local[:, -1] = 0.0  # size-1 window -> divide() reports 0
+    dg = np.asarray(delta_global, dtype=np.float64)[:, None]
+    beta = np.clip(
+        np.divide(delta_local, dg, out=np.zeros_like(delta_local), where=dg > 0),
+        0.0,
+        1.0,
+    )
+    levels = np.rint(beta * config.beta_levels).astype(np.int64)
+    lut = np.array(
+        [eps_hat_for_level(lv, config) for lv in range(config.beta_levels + 1)]
+    )
+    return levels, lut[levels]
 
 
 def divide(

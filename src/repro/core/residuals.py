@@ -22,8 +22,10 @@ from .base import base_predictions
 __all__ = [
     "compute_residuals",
     "quantize_residuals",
+    "quantize_residuals_batch",
     "dequantize_residuals",
     "quantize_exact",
+    "quantize_exact_batch",
     "dequantize_exact",
 ]
 
@@ -32,20 +34,46 @@ def compute_residuals(values: np.ndarray, base: Base) -> np.ndarray:
     return np.asarray(values, dtype=np.float64) - base_predictions(base)
 
 
+def _quantize_midpoint_rows(r: np.ndarray, eps_r: float) -> tuple[np.ndarray, np.ndarray]:
+    """The midpoint quantizer on [S, T] rows: (q int64 [S, T], r_lo [S]).
+    Row s is bit-identical to quantizing r[s] alone — every op is
+    elementwise or a per-row reduction."""
+    step = 2.0 * eps_r
+    r_lo = r.min(axis=1) if r.size else np.zeros(r.shape[0])
+    q = np.floor((r - r_lo[:, None]) / step).astype(np.int64)
+    # Floor at bin boundaries can land one bin off in floating point (e.g.
+    # 0.5/0.0002 -> 2499.999...); correct so |r - dequant| <= step/2 holds
+    # exactly (up to one ulp of the final subtraction).
+    deq = r_lo[:, None] + (q.astype(np.float64) + 0.5) * step
+    q += (r - deq) > step / 2
+    q -= (deq - r) > step / 2
+    return q, r_lo
+
+
 def quantize_residuals(r: np.ndarray, eps_r: float) -> ResidualStream:
     """Lossy path: |dequant - r| <= eps_r."""
     if eps_r <= 0:
         raise ValueError("eps_r must be positive for the lossy path")
-    step = 2.0 * eps_r
-    r_lo = float(r.min()) if r.size else 0.0
-    q = np.floor((r - r_lo) / step).astype(np.int64)
-    # Floor at bin boundaries can land one bin off in floating point (e.g.
-    # 0.5/0.0002 -> 2499.999...); correct so |r - dequant| <= step/2 holds
-    # exactly (up to one ulp of the final subtraction).
-    deq = r_lo + (q.astype(np.float64) + 0.5) * step
-    q += (r - deq) > step / 2
-    q -= (deq - r) > step / 2
-    return ResidualStream(eps_r=eps_r, step=step, r_lo=r_lo, mode="midpoint", q=q)
+    r = np.asarray(r, dtype=np.float64)
+    q, r_lo = _quantize_midpoint_rows(r[None, :], eps_r)
+    return ResidualStream(
+        eps_r=eps_r, step=2.0 * eps_r, r_lo=float(r_lo[0]), mode="midpoint", q=q[0]
+    )
+
+
+def quantize_residuals_batch(r: np.ndarray, eps_r: float) -> list[ResidualStream]:
+    """Batched lossy path over rows r[S, T]; stream i is byte-identical to
+    ``quantize_residuals(r[i], eps_r)``."""
+    if eps_r <= 0:
+        raise ValueError("eps_r must be positive for the lossy path")
+    r = np.asarray(r, dtype=np.float64)
+    q, r_lo = _quantize_midpoint_rows(r, eps_r)
+    return [
+        ResidualStream(
+            eps_r=eps_r, step=2.0 * eps_r, r_lo=float(r_lo[i]), mode="midpoint", q=q[i]
+        )
+        for i in range(r.shape[0])
+    ]
 
 
 def dequantize_residuals(stream: ResidualStream) -> np.ndarray:
@@ -54,19 +82,35 @@ def dequantize_residuals(stream: ResidualStream) -> np.ndarray:
     raise ValueError(f"not a lossy stream: {stream.mode}")
 
 
-def quantize_exact(values: np.ndarray, base: Base, decimals: int) -> ResidualStream:
+def quantize_exact(
+    values: np.ndarray, base: Base, decimals: int, pred: np.ndarray | None = None
+) -> ResidualStream:
     """Lossless path for fixed-decimal data.
 
     v_int = round(v * 10^d); pred_int = round(pred * 10^d);
     q = v_int - pred_int  (exact int64).  Reconstruction returns
-    (pred_int + q) / 10^d == round(v, d) exactly.
+    (pred_int + q) / 10^d == round(v, d) exactly.  ``pred`` lets callers
+    that already materialized the base reconstruction skip recomputing it.
     """
+    if pred is None:
+        pred = base_predictions(base)
+    values = np.asarray(values, dtype=np.float64)
+    return quantize_exact_batch(values[None, :], pred[None, :], decimals)[0]
+
+
+def quantize_exact_batch(
+    values: np.ndarray, preds: np.ndarray, decimals: int
+) -> list[ResidualStream]:
+    """Batched lossless path over rows values/preds[S, T]; stream i is
+    byte-identical to ``quantize_exact(values[i], ..., pred=preds[i])``."""
     scale = 10.0**decimals
-    pred = base_predictions(base)
     v_int = np.round(np.asarray(values, dtype=np.float64) * scale).astype(np.int64)
-    p_int = np.round(pred * scale).astype(np.int64)
+    p_int = np.round(preds * scale).astype(np.int64)
     q = v_int - p_int
-    return ResidualStream(eps_r=0.0, step=1.0 / scale, r_lo=0.0, mode="exact", q=q)
+    return [
+        ResidualStream(eps_r=0.0, step=1.0 / scale, r_lo=0.0, mode="exact", q=q[i])
+        for i in range(v_int.shape[0])
+    ]
 
 
 def dequantize_exact(stream: ResidualStream, base: Base, decimals: int) -> np.ndarray:

@@ -10,13 +10,20 @@ and the cone keeps the running intersection (psi_lo, psi_hi).  When the
 intersection empties, the cone closes and a new one starts at the violating
 point — Fig. 2(b) of the paper.
 
-Two implementations with identical semantics:
+Three implementations with identical semantics:
 
-* ``extract_semantics_py``  — literal per-point loop; the test oracle.
-* ``extract_semantics``     — chunked-vectorized numpy scan (production host
-  path).  Within a candidate chunk the running intersection is a prefix
+* ``extract_semantics_py``     — literal per-point loop; the test oracle.
+* ``extract_semantics``        — chunked-vectorized numpy scan (production
+  host path).  Within a candidate chunk the running intersection is a prefix
   min/max (``np.minimum.accumulate``), and the first emptiness is located
   with ``argmax`` — O(n) total work, numpy-speed.
+* ``extract_semantics_batch``  — the same chunked scan run in lockstep over
+  S independent series at once ([S, T] input).  Candidate slopes, running
+  intersections, and first-violation searches are [S, chunk] array ops;
+  only series that break inside a chunk re-scan the remainder of that
+  chunk.  Because min/max and first-violation do not depend on how the time
+  axis is chunked, the per-series output is bit-identical to
+  ``extract_semantics`` on each row.
 
 The Pallas kernel ``kernels/cone_scan.py`` implements the same recurrence on
 TPU using the sequential-grid idiom; ``kernels/ref.py`` mirrors this module.
@@ -27,10 +34,16 @@ import math
 
 import numpy as np
 
-from .phases import default_interval_length, divide
+from .phases import default_interval_length, divide, fluctuation_table
 from .types import Segment, ShrinkConfig
 
-__all__ = ["extract_semantics", "extract_semantics_py", "global_range"]
+__all__ = [
+    "extract_semantics",
+    "extract_semantics_py",
+    "extract_semantics_batch",
+    "extract_semantics_batch_pallas",
+    "global_range",
+]
 
 _INF = math.inf
 
@@ -120,3 +133,182 @@ def extract_semantics(values: np.ndarray, config: ShrinkConfig) -> list[Segment]
             )
             i = n
     return segments
+
+
+def extract_semantics_batch(
+    values: np.ndarray, config: ShrinkConfig, chunk: int = 256
+) -> list[list[Segment]]:
+    """Multi-series cone scan: values[S, T] -> one segment list per series.
+
+    All series advance through shared time chunks; per-series cone state
+    (theta, eps_hat, t0, psi) lives in [S] vectors.  A chunk is re-scanned
+    only for the series that broke inside it, with positions at or before
+    the new segment start masked to non-constraining candidates.  The chunk
+    length adapts to the observed break density (long segments -> bigger
+    chunks); the output is invariant to chunking.
+    """
+    values = np.asarray(values, dtype=np.float64)
+    if values.ndim != 2:
+        raise ValueError(f"expected [S, T], got shape {values.shape}")
+    s, n = values.shape
+    out: list[list[Segment]] = [[] for _ in range(s)]
+    if n == 0 or s == 0:
+        return out
+    delta_global = values.max(axis=1) - values.min(axis=1)
+    levels_tab, eps_tab = fluctuation_table(values, delta_global, config)
+
+    seg_level = levels_tab[:, 0].copy()
+    eps = eps_tab[:, 0].copy()
+    theta = np.floor(values[:, 0] / eps) * eps
+    t0 = np.zeros(s, dtype=np.int64)
+    psi_lo = np.full(s, -_INF)
+    psi_hi = np.full(s, _INF)
+
+    c0 = 1
+    while c0 < n:
+        c1 = min(n, c0 + chunk)
+        active = np.arange(s)
+        lo0 = c0  # re-scans only need positions past the earliest new segment
+        breaks = 0
+        while active.size:
+            ts = np.arange(lo0, c1, dtype=np.float64)
+            v = values[active, lo0:c1]
+            ep = eps[active][:, None]
+            th = theta[active][:, None]
+            dt = ts[None, :] - t0[active][:, None]
+            with np.errstate(divide="ignore", invalid="ignore"):
+                hi = (v + (ep - th)) / dt
+                lo = (v - (ep + th)) / dt
+            pre = dt <= 0  # positions at/before the segment start: no constraint
+            if pre.any():
+                hi[pre] = _INF
+                lo[pre] = -_INF
+            run_hi = np.minimum(np.minimum.accumulate(hi, axis=1), psi_hi[active][:, None])
+            run_lo = np.maximum(np.maximum.accumulate(lo, axis=1), psi_lo[active][:, None])
+            viol = run_lo > run_hi
+            has = viol.any(axis=1)
+            done = active[~has]
+            if done.size:  # cone survived the chunk: carry the intersection
+                psi_hi[done] = run_hi[~has, -1]
+                psi_lo[done] = run_lo[~has, -1]
+            if not has.any():
+                break
+            rows = np.flatnonzero(has)
+            broke = active[has]
+            breaks += broke.size
+            first = viol[rows].argmax(axis=1)
+            closed_hi = np.where(first > 0, run_hi[rows, first - 1], psi_hi[broke])
+            closed_lo = np.where(first > 0, run_lo[rows, first - 1], psi_lo[broke])
+            brk_t = lo0 + first
+            for a, k, plo, phi in zip(broke, brk_t, closed_lo, closed_hi):
+                out[a].append(
+                    Segment(
+                        theta=float(theta[a]),
+                        level=int(seg_level[a]),
+                        psi_lo=float(plo),
+                        psi_hi=float(phi),
+                        t0=int(t0[a]),
+                        length=int(k - t0[a]),
+                    )
+                )
+            # open a new cone at the violating point (Alg. 2 DIVISION)
+            seg_level[broke] = levels_tab[broke, brk_t]
+            eps[broke] = eps_tab[broke, brk_t]
+            theta[broke] = np.floor(values[broke, brk_t] / eps[broke]) * eps[broke]
+            t0[broke] = brk_t
+            psi_lo[broke] = -_INF
+            psi_hi[broke] = _INF
+            active = broke  # re-scan the chunk tail for just these series
+            lo0 = int(brk_t.min()) + 1
+            if lo0 >= c1:
+                break
+        if breaks == 0:
+            chunk = min(chunk * 2, 65536)
+        else:  # aim for ~2x the observed mean segment length
+            mean_len = (c1 - c0) * s / breaks
+            chunk = int(min(max(2 * mean_len, 128), 65536))
+        c0 = c1
+    for a in range(s):
+        out[a].append(
+            Segment(
+                theta=float(theta[a]),
+                level=int(seg_level[a]),
+                psi_lo=float(psi_lo[a]),
+                psi_hi=float(psi_hi[a]),
+                t0=int(t0[a]),
+                length=int(n - t0[a]),
+            )
+        )
+    return out
+
+
+_SPAN_SENTINEL = 1e38  # kernel spans at/beyond this magnitude mean "unbounded"
+
+
+def extract_semantics_batch_pallas(
+    values: np.ndarray, config: ShrinkConfig, block_t: int = 256
+) -> list[list[Segment]]:
+    """Multi-series cone scan routed through the lane-parallel Pallas kernel
+    (``kernels.cone_scan``) with segment compaction done in XLA; only the
+    final Segment materialization happens on the host.
+
+    The device scan runs in float32 (TPU-native), so — unlike
+    ``extract_semantics_batch`` — segment spans can differ from the float64
+    host scan in the last ulp.  Use this path for throughput on TPU; the
+    numpy path is the bit-exact reference.
+    """
+    from ..kernels import ops as _kops  # lazy: keep numpy-only users jax-free
+
+    values = np.asarray(values, dtype=np.float64)
+    if values.ndim != 2:
+        raise ValueError(f"expected [S, T], got shape {values.shape}")
+    s, n = values.shape
+    if n == 0 or s == 0:
+        return [[] for _ in range(s)]
+    delta_global = values.max(axis=1) - values.min(axis=1)
+    levels_tab, eps_tab = fluctuation_table(values, delta_global, config)
+    bt = min(block_t, n)
+    x = values
+    eps_in = eps_tab
+    if n % bt:
+        # pad by repeating the last column so the grid stays block_t-wide.
+        # Repeated values only tighten (never widen) the final cone, so real
+        # points keep their eps guarantee; pad-region segments are dropped
+        # below and the tail segment is re-clamped to n.
+        pad = bt - (n % bt)
+        x = np.concatenate([x, np.repeat(x[:, -1:], pad, axis=1)], axis=1)
+        eps_in = np.concatenate([eps_in, np.repeat(eps_in[:, -1:], pad, axis=1)], axis=1)
+    counts, t0s, thetas, lo, hi = (
+        np.asarray(a)
+        for a in _kops.cone_scan_segments(
+            np.ascontiguousarray(x.T, dtype=np.float32),
+            np.ascontiguousarray(eps_in.T, dtype=np.float32),
+            block_t=bt,
+        )
+    )
+    out: list[list[Segment]] = []
+    for a in range(s):
+        c = int(counts[a])
+        starts = t0s[:c, a].astype(np.int64)
+        keep = starts < n  # drop segments born inside the padded tail
+        starts = starts[keep]
+        c = starts.size
+        ends = np.minimum(np.append(starts[1:], n), n)
+        plo = lo[:c, a].astype(np.float64)
+        phi = hi[:c, a].astype(np.float64)
+        plo[plo <= -_SPAN_SENTINEL] = -_INF
+        phi[phi >= _SPAN_SENTINEL] = _INF
+        out.append(
+            [
+                Segment(
+                    theta=float(thetas[k, a]),
+                    level=int(levels_tab[a, starts[k]]),
+                    psi_lo=float(plo[k]),
+                    psi_hi=float(phi[k]),
+                    t0=int(starts[k]),
+                    length=int(ends[k] - starts[k]),
+                )
+                for k in range(c)
+            ]
+        )
+    return out

@@ -43,6 +43,7 @@ __all__ = [
     "encode_base",
     "decode_base",
     "encode_residuals",
+    "encode_residuals_batch",
     "decode_residuals",
 ]
 
@@ -175,13 +176,28 @@ def decode_base(data: bytes) -> Base:
     return Base(n=n, config=config, vmin=vmin, vmax=vmax, subbases=subbases)
 
 
+def _residual_header(stream: ResidualStream) -> bytes:
+    return (
+        _RES_MAGIC
+        + bytes([0 if stream.mode == "midpoint" else 1])
+        + struct.pack("<ddd", stream.eps_r, stream.step, stream.r_lo)
+    )
+
+
 def encode_residuals(stream: ResidualStream, backend: str = "best") -> bytes:
-    buf = bytearray()
-    buf += _RES_MAGIC
-    buf.append(0 if stream.mode == "midpoint" else 1)
-    buf += struct.pack("<ddd", stream.eps_r, stream.step, stream.r_lo)
-    buf += entropy.encode_ints(stream.q, backend=backend)
-    return bytes(buf)
+    return _residual_header(stream) + entropy.encode_ints(stream.q, backend=backend)
+
+
+def encode_residuals_batch(streams: list[ResidualStream], backend: str = "best") -> list[bytes]:
+    """Batched ``encode_residuals`` for equal-length streams.  The entropy
+    stage runs through ``entropy.encode_ints_batch`` (one vectorized rANS
+    pass for the whole batch on that backend); each returned blob is
+    byte-identical to ``encode_residuals(streams[i], backend)``."""
+    if not streams:
+        return []
+    qs = np.stack([st.q for st in streams])
+    blobs = entropy.encode_ints_batch(qs, backend=backend)
+    return [_residual_header(st) + blob for st, blob in zip(streams, blobs)]
 
 
 def decode_residuals(data: bytes) -> ResidualStream:

@@ -5,13 +5,16 @@ tests/test_kernels.py over shape/dtype sweeps):
 
 * interval_stats — per-window min/max (Alg. 2 fluctuation stats)
 * cone_scan      — shrinking-cone recurrence, sequential-grid state carry,
-                   lane-parallel across series (Alg. 3)
+                   lane-parallel across series (Alg. 3); cone_scan_segments
+                   adds on-device (XLA) segment compaction for the batched
+                   codec pipeline
 * residual_quant — fused residual + quantize + clip + error feedback (Alg. 6)
 * dequant        — fused dequantize + linear reconstruct
 * flash_attention — online-softmax fused attention (sequential-kv grid)
 """
 from .ops import (  # noqa: F401
     cone_scan,
+    cone_scan_segments,
     flash_attention,
     dequant_reconstruct,
     interval_stats,

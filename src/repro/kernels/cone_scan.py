@@ -67,9 +67,12 @@ def _cone_scan_kernel(
         denom = jnp.maximum(dt, 1.0)
         cand_hi = (v + eps_seg - theta) / denom
         cand_lo = (v - eps_seg - theta) / denom
-        new_hi = jnp.minimum(hi, cand_hi)
-        new_lo = jnp.maximum(lo, cand_lo)
-        brk = (new_lo > new_hi) & (dt > 0)
+        # dt == 0 is the segment's own start point (only t == 0 reaches here):
+        # it defines theta, not a slope constraint — matching the host scan.
+        grow = dt > 0
+        new_hi = jnp.where(grow, jnp.minimum(hi, cand_hi), hi)
+        new_lo = jnp.where(grow, jnp.maximum(lo, cand_lo), lo)
+        brk = (new_lo > new_hi) & grow
         # records of the closing segment at the break position
         lo_out_ref[r, :] = lo
         hi_out_ref[r, :] = hi

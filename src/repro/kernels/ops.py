@@ -3,11 +3,16 @@
 Backend selection: on CPU (this container) the kernels execute in Pallas
 ``interpret=True`` mode — the kernel body runs as traced JAX ops with the
 same block/grid decomposition, which validates BlockSpec tiling and the
-sequential-grid state carry.  On a real TPU backend the same calls compile
-to Mosaic.  ``force_ref=True`` routes to the pure-jnp oracle (used for
-differentiable paths and in tests).
+sequential-grid state carry.  On a TPU backend the wrappers first attempt
+the compiled (Mosaic, ``interpret=False``) path and automatically fall back
+to interpret mode if lowering fails, remembering the failure per kernel so
+the cost is paid once per process.  ``force_ref=True`` routes to the
+pure-jnp oracle (used for differentiable paths and in tests).
 """
 from __future__ import annotations
+
+import warnings
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -25,12 +30,39 @@ __all__ = [
     "residual_quant",
     "dequant_reconstruct",
     "cone_scan",
+    "cone_scan_segments",
     "use_interpret",
 ]
 
 
 def use_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+_compiled_broken: set[str] = set()
+
+
+def _run_auto(name: str, call: Callable[[bool], object]):
+    """Run ``call(interpret)`` on the compiled path when it is expected to
+    work, falling back to interpret mode (and caching the verdict) when
+    Mosaic lowering raises."""
+    if not use_interpret() and name not in _compiled_broken:
+        try:
+            return call(False)
+        except Exception as e:  # lowering/compile failure -> interpret fallback
+            out = call(True)
+            # Cache the fallback only after interpret mode succeeds on the
+            # same call: an error that fails both modes (bad shapes, device
+            # OOM) propagates instead of poisoning the compiled path.
+            _compiled_broken.add(name)
+            warnings.warn(
+                f"pallas kernel {name!r}: compiled path failed ({e!r}); "
+                "falling back to interpret mode for the rest of this process",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return out
+    return call(True)
 
 
 def interval_stats(x: jax.Array, window: int, force_ref: bool = False):
@@ -73,12 +105,71 @@ def cone_scan(x: jax.Array, eps_hat: jax.Array, block_t: int = 256, force_ref: b
         pad = bt - (t % bt)
         x = jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)], axis=0)
         eps_hat = jnp.concatenate([eps_hat, jnp.repeat(eps_hat[-1:], pad, axis=0)], axis=0)
-        out = cone_scan_pallas(x, eps_hat, block_t=bt, interpret=use_interpret())
+        out = _run_auto(
+            "cone_scan", lambda i: cone_scan_pallas(x, eps_hat, block_t=bt, interpret=i)
+        )
         brk, theta, lo, hi, fin_lo, fin_hi = out
         # NOTE: fin_lo/fin_hi reflect the padded tail; callers that need the
         # open-segment span with padding should pass T % block_t == 0 data.
         return brk[:t], theta[:t], lo[:t], hi[:t], fin_lo, fin_hi
-    return cone_scan_pallas(x, eps_hat, block_t=bt, interpret=use_interpret())
+    return _run_auto(
+        "cone_scan", lambda i: cone_scan_pallas(x, eps_hat, block_t=bt, interpret=i)
+    )
+
+
+@jax.jit
+def _compact_segments(brk, theta, psi_lo, psi_hi, fin_lo, fin_hi):
+    """Dense per-point scan outputs -> per-series segment records, in XLA.
+
+    brk/theta/psi_*[T, S].  Returns (counts[S], t0s[T, S], thetas[T, S],
+    lo[T, S], hi[T, S]) where row k of each [T, S] array describes segment k
+    of that series (rows >= counts[s] are padding).  The scatter is a cumsum
+    over break flags — O(T) with no host round-trip.
+    """
+    t_len, s_len = brk.shape
+    seg_of_t = jnp.cumsum(brk, axis=0) - 1  # segment index at each point
+    cols = jnp.broadcast_to(jnp.arange(s_len)[None, :], (t_len, s_len))
+    is_brk = brk.astype(bool)
+    # scatter rows: break positions land at their segment's slot; everything
+    # else goes to a dump row at index t_len
+    rows = jnp.where(is_brk, seg_of_t, t_len)
+    tpos = jnp.broadcast_to(jnp.arange(t_len)[:, None], (t_len, s_len))
+    t0s = jnp.zeros((t_len + 1, s_len), jnp.int32).at[rows, cols].set(tpos)
+    thetas = jnp.zeros((t_len + 1, s_len), theta.dtype).at[rows, cols].set(theta)
+    # the span recorded at break t closes segment seg_of_t[t] - 1
+    close_rows = jnp.where(is_brk & (seg_of_t > 0), seg_of_t - 1, t_len)
+    lo = jnp.zeros((t_len + 1, s_len), psi_lo.dtype).at[close_rows, cols].set(psi_lo)
+    hi = jnp.zeros((t_len + 1, s_len), psi_hi.dtype).at[close_rows, cols].set(psi_hi)
+    counts = brk.sum(axis=0)
+    # the still-open segment's span comes from the final carry
+    lo = lo.at[counts - 1, jnp.arange(s_len)].set(fin_lo[0])
+    hi = hi.at[counts - 1, jnp.arange(s_len)].set(fin_hi[0])
+    return counts, t0s[:t_len], thetas[:t_len], lo[:t_len], hi[:t_len]
+
+
+def cone_scan_segments(x: jax.Array, eps_hat: jax.Array, block_t: int = 256):
+    """Lane-parallel cone scan + on-device segment compaction.
+
+    x[T, S], eps_hat[T, S] -> (counts[S], t0s[T, S], thetas[T, S],
+    psi_lo[T, S], psi_hi[T, S]); row k of the [T, S] outputs is segment k of
+    that series.  Spans use +-3.4e38 as the unbounded sentinel (map to inf
+    on the host).  Lengths follow from consecutive t0s (and T for the last
+    segment), since segments partition [0, T).
+
+    T must be a multiple of block_t: cone_scan's internal repeat-padding
+    would otherwise pollute the open segment's fin_lo/fin_hi carry, which
+    this compaction assigns to the last segment.  Callers with ragged T pad
+    the inputs themselves and drop pad-born segments (see
+    semantics.extract_semantics_batch_pallas).
+    """
+    t = x.shape[0]
+    bt = min(block_t, t)
+    assert t % bt == 0, (
+        f"T={t} % block_t={bt} != 0 — pad x/eps_hat to a block multiple and "
+        "drop pad-born segments (extract_semantics_batch_pallas shows how)"
+    )
+    brk, theta, lo, hi, fin_lo, fin_hi = cone_scan(x, eps_hat, block_t=bt)
+    return _compact_segments(brk, theta, lo, hi, fin_lo, fin_hi)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,

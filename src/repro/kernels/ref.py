@@ -99,9 +99,12 @@ def cone_scan_ref(
         dt = (t - t0).astype(x.dtype)
         cand_hi = (v + eps_seg - theta) / jnp.maximum(dt, 1.0)
         cand_lo = (v - eps_seg - theta) / jnp.maximum(dt, 1.0)
-        new_hi = jnp.minimum(hi, cand_hi)
-        new_lo = jnp.maximum(lo, cand_lo)
-        brk = (new_lo > new_hi) & (dt > 0)
+        # dt == 0 (the segment's own start point) sets theta only; it is not
+        # a slope constraint — same convention as semantics.extract_semantics.
+        grow = dt > 0
+        new_hi = jnp.where(grow, jnp.minimum(hi, cand_hi), hi)
+        new_lo = jnp.where(grow, jnp.maximum(lo, cand_lo), lo)
+        brk = (new_lo > new_hi) & grow
         out_lo, out_hi = lo, hi  # span of the closing segment
         theta_new = origin(v, eps_t)
         theta = jnp.where(brk, theta_new, theta)

@@ -21,9 +21,50 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["AxisRules", "axis_rules", "current_rules", "shard", "make_rules"]
+__all__ = [
+    "AxisRules",
+    "axis_rules",
+    "current_rules",
+    "shard",
+    "make_rules",
+    "shard_map_compat",
+]
 
 _STATE = threading.local()
+
+
+def shard_map_compat(
+    f, *, mesh, in_specs, out_specs, check_vma: bool = True, axis_names=None
+):
+    """``jax.shard_map`` across jax versions: new releases expose it at the
+    top level (``check_vma``, ``axis_names``); 0.4.x has
+    ``jax.experimental.shard_map`` where the same knobs are ``check_rep``
+    and the complementary ``auto`` axis set."""
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=check_vma,
+            **kwargs,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = (
+        frozenset(mesh.axis_names) - frozenset(axis_names)
+        if axis_names is not None
+        else frozenset()
+    )
+    return _shard_map(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=check_vma,
+        auto=auto,
+    )
 
 
 class AxisRules:
@@ -93,7 +134,8 @@ def shard(x: jax.Array, *names) -> jax.Array:
     """Constrain ``x``'s sharding by logical axis names (None = unsheared
     dim).  No-op when no rules are active (CPU smoke tests).  Inside a
     shard_map region (Manual axes) the constraint must be spec-only so it
-    canonicalizes against the context AbstractMesh."""
+    canonicalizes against the context AbstractMesh.  (See
+    ``shard_map_compat`` for the cross-version shard_map entry point.)"""
     rules = current_rules()
     if rules is None:
         return x

@@ -1,0 +1,127 @@
+"""Batched pipeline contract: compress_batch output is byte-identical to a
+python loop of compress, across eps regimes (base-only, quantized, lossless)
+and semantics backends; the multi-series scans agree with the single-series
+reference."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ShrinkCodec,
+    ShrinkConfig,
+    cs_to_bytes,
+    extract_semantics,
+    extract_semantics_batch,
+    fluctuation_table,
+)
+from repro.core.phases import default_interval_length, divide
+
+_RNG = np.random.default_rng(7)
+
+
+def _mixed_series(s: int, t: int) -> np.ndarray:
+    walk = np.cumsum(_RNG.standard_normal((s, t)) * 0.05, axis=1)
+    noise = _RNG.standard_normal((s, t)) * 0.02
+    out = walk + noise
+    if s > 2:
+        out[0] = out[0, 0]  # constant series
+        out[1] = np.sin(np.arange(t) * 0.01) * 5  # smooth series
+    return np.round(out, 4)
+
+
+# ------------------------------------------------------------ semantics scan
+@pytest.mark.parametrize("s,t", [(8, 1000), (3, 17), (5, 1), (2, 2), (4, 257)])
+def test_batch_scan_matches_single(s, t):
+    v = _mixed_series(s, t)
+    rng = max(float(v.max() - v.min()), 1e-9)
+    cfg = ShrinkConfig(eps_b=0.05 * rng)
+    batch = extract_semantics_batch(v, cfg, chunk=64)
+    for i in range(s):
+        single = extract_semantics(v[i], cfg)
+        assert [dataclasses.astuple(x) for x in single] == [
+            dataclasses.astuple(x) for x in batch[i]
+        ]
+
+
+def test_fluctuation_table_matches_divide():
+    v = _mixed_series(4, 300)
+    cfg = ShrinkConfig(eps_b=0.3, lam=1e-3)
+    el = default_interval_length(v.shape[1], cfg)
+    dg = v.max(axis=1) - v.min(axis=1)
+    levels, eps = fluctuation_table(v, dg, cfg)
+    for i in range(v.shape[0]):
+        for t in range(0, v.shape[1], 13):
+            _, lv, eh = divide(v[i], t, el, float(dg[i]), cfg)
+            assert lv == levels[i, t]
+            assert eh == eps[i, t]
+
+
+# ------------------------------------------------------------ full pipeline
+@pytest.mark.parametrize("backend", ["rans", "best"])
+def test_compress_batch_byte_identical(backend):
+    s, t = 12, 2048
+    v = _mixed_series(s, t)
+    codec = ShrinkCodec.from_fraction(v, frac=0.05, backend=backend)
+    rng = float(v.max() - v.min())
+    # spans base-only (large eps), quantized, and lossless regimes
+    eps_ts = [0.5 * rng, 1e-2 * rng, 1e-3 * rng, 0.0]
+    batch = codec.compress_batch(v, eps_targets=eps_ts, decimals=4)
+    for i in range(s):
+        single = codec.compress(v[i], eps_targets=eps_ts, decimals=4)
+        assert cs_to_bytes(batch[i]) == cs_to_bytes(single), i
+
+
+def test_compress_batch_roundtrip_guarantees():
+    s, t = 6, 1024
+    v = _mixed_series(s, t)
+    codec = ShrinkCodec.from_fraction(v, frac=0.05, backend="rans")
+    rng = float(v.max() - v.min())
+    eps = 1e-3 * rng
+    batch = codec.compress_batch(v, eps_targets=[eps, 0.0], decimals=4)
+    for i in range(s):
+        vhat = codec.decompress_at(batch[i], eps)
+        bound = batch[i].eps_b_practical if batch[i].residual_bytes[eps] is None else eps
+        assert np.max(np.abs(vhat - v[i])) <= bound * (1 + 1e-9) + 1e-12
+        exact = codec.decompress_at(batch[i], 0.0)
+        np.testing.assert_array_equal(exact, v[i])
+
+
+def test_compress_batch_pallas_route_runs():
+    """The kernel route (interpret mode on CPU) must produce valid segment
+    partitions and decodable output — float32 on device, so bytes may differ
+    from the numpy path, but the codec guarantees must hold."""
+    s, t = 4, 512
+    v = _mixed_series(s, t)
+    codec = ShrinkCodec.from_fraction(v, frac=0.05, backend="rans")
+    rng = float(v.max() - v.min())
+    eps = 1e-2 * rng
+    batch = codec.compress_batch(v, eps_targets=[eps], semantics="pallas")
+    for i in range(s):
+        vhat = codec.decompress_at(batch[i], eps)
+        bound = batch[i].eps_b_practical if batch[i].residual_bytes[eps] is None else eps
+        assert np.max(np.abs(vhat - v[i])) <= bound * (1 + 1e-6) + 1e-9
+
+
+def test_compress_batch_validates_input():
+    codec = ShrinkCodec(config=ShrinkConfig(eps_b=1.0))
+    with pytest.raises(ValueError):
+        codec.compress_batch(np.zeros(8), eps_targets=[0.1])
+    with pytest.raises(ValueError):
+        codec.compress_batch(np.zeros((2, 8)), eps_targets=[0.0])  # no decimals
+    with pytest.raises(ValueError):
+        codec.compress_batch(np.zeros((2, 8)) + 1.0, eps_targets=[0.1], semantics="bogus")
+
+
+def test_compress_batch_base_only_streams():
+    """eps above the practical base error must serialize as base-only (None)
+    exactly like the single-series path."""
+    s, t = 3, 512
+    v = _mixed_series(s, t)
+    codec = ShrinkCodec.from_fraction(v, frac=0.05, backend="rans")
+    big_eps = 10.0 * float(v.max() - v.min())
+    batch = codec.compress_batch(v, eps_targets=[big_eps])
+    for i in range(s):
+        assert batch[i].residual_bytes[big_eps] is None
+        vhat = codec.decompress_at(batch[i], big_eps)
+        assert np.max(np.abs(vhat - v[i])) <= batch[i].eps_b_practical * (1 + 1e-9)

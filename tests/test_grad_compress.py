@@ -4,8 +4,16 @@ equivalence."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
 from jax.sharding import PartitionSpec as P
+
+# hypothesis is a dev extra: without it only the property sweep is skipped
+try:
+    from hypothesis import given, settings, strategies as st
+
+    _HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    _HAS_HYPOTHESIS = False
 
 from repro.training.grad_compress import (
     GradCompressConfig,
@@ -83,15 +91,22 @@ def test_error_feedback_removes_bias():
     assert bias < 0.02, f"EF failed to cancel quantization bias: {bias}"
 
 
-@given(st.integers(min_value=100, max_value=5000), st.integers(min_value=0, max_value=3))
-@settings(max_examples=10, deadline=None)
-def test_exchange_arbitrary_sizes(n, seed):
-    """Any leaf size (padding paths) survives the exchange with bounded error."""
-    mesh = _mesh()
-    rng = np.random.default_rng(seed)
-    g = jnp.asarray(rng.standard_normal(n), jnp.float32)
-    spec = {"w": P(None)}
-    fn = jax.jit(make_crosspod_exchange(mesh, GradCompressConfig(min_leaf_size=0), spec))
-    out, ef = fn({"w": g[None]}, {"w": jnp.zeros_like(g)})
-    scale = float(jnp.max(jnp.abs(g))) + 1e-9
-    assert float(jnp.max(jnp.abs(out["w"] - g))) < 0.08 * scale
+if not _HAS_HYPOTHESIS:
+
+    def test_exchange_arbitrary_sizes():
+        pytest.importorskip("hypothesis", reason="property sweep needs the hypothesis dev extra")
+
+else:
+
+    @given(st.integers(min_value=100, max_value=5000), st.integers(min_value=0, max_value=3))
+    @settings(max_examples=10, deadline=None)
+    def test_exchange_arbitrary_sizes(n, seed):
+        """Any leaf size (padding paths) survives the exchange with bounded error."""
+        mesh = _mesh()
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        spec = {"w": P(None)}
+        fn = jax.jit(make_crosspod_exchange(mesh, GradCompressConfig(min_leaf_size=0), spec))
+        out, ef = fn({"w": g[None]}, {"w": jnp.zeros_like(g)})
+        scale = float(jnp.max(jnp.abs(g))) + 1e-9
+        assert float(jnp.max(jnp.abs(out["w"] - g))) < 0.08 * scale

@@ -5,6 +5,9 @@ per-segment span constraints."""
 import math
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
