@@ -13,7 +13,14 @@ import pathlib
 import sys
 import time
 
-from . import bench_compression, bench_roofline, bench_scaling, bench_sensitivity, bench_throughput
+from . import (
+    bench_compression,
+    bench_roofline,
+    bench_scaling,
+    bench_sensitivity,
+    bench_streaming,
+    bench_throughput,
+)
 
 _REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -112,6 +119,27 @@ def main(argv=None) -> int:
         f"batch={bp['batch_mb_s']:.2f}MB/s loop={bp['loop_mb_s']:.2f}MB/s "
         f"speedup={bp['batch_speedup']:.2f}x"
     )
+
+    print("\n== Streaming ingest (chunked scan + framed container) ==")
+    stream = bench_streaming.streaming_json(quick=args.quick)
+    engine["streaming"] = stream
+    ing = stream["ingest"]
+    chunk_cols = "  ".join(
+        f"{k.removeprefix('chunk_').removesuffix('_mb_s')}={v:.1f}MB/s"
+        for k, v in ing.items() if k.startswith("chunk_")
+    )
+    print(
+        f"  ingest[{ing['series']}x{ing['points_per_series']}] "
+        f"one-shot={ing['one_shot_mb_s']:.1f}MB/s  {chunk_cols} "
+        f"({ing['stream_vs_one_shot']:.2f}x one-shot)"
+    )
+    crg = stream["cr_growth"]
+    for i, n in enumerate(crg["lengths"]):
+        print(
+            f"  n={n:8d}  CR(lossless)={crg['cr_lossless'][i]:6.2f} "
+            f"CR(eps=1e-3)={crg['cr_eps1e-3'][i]:6.2f}"
+        )
+    checks.update(bench_streaming.validate_claims(stream))
     # machine-readable perf trajectory for future PRs to diff against; only
     # full-size runs update the repo-root trajectory (quick numbers live in
     # artifacts/bench via save_result and must not clobber the baseline)

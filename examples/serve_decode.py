@@ -1,11 +1,15 @@
-"""Serving example: continuous batching + SHRINK-quantized KV cache.
+"""Serving example: continuous batching + SHRINK-quantized KV cache +
+range-query decode over a streamed SHRINK container.
 
     PYTHONPATH=src python examples/serve_decode.py
 
 Boots a reduced qwen3-family model, submits a stream of requests through
 the continuous batcher (more requests than slots -> slot recycling), then
-shows the SHRINK residual-quantized KV block store: ~3.7x cache memory at a
-bounded L-infinity error.
+shows the SHRINK residual-quantized KV block store (~3.7x cache memory at
+a bounded L-infinity error), and finally streams two synthetic sensor
+series chunk-at-a-time into a SHRKS framed container and serves
+random-access range queries against it through the frame-cached
+RangeQueryBatcher.
 """
 import sys
 from pathlib import Path
@@ -19,9 +23,57 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, reduced_config
+from repro.core import BYTES_PER_ROW, ShrinkConfig, ShrinkStreamCodec
 from repro.core.jaxshrink import TensorCodecConfig
 from repro.models import build_model
-from repro.serving import ContinuousBatcher, Request, dequantize_cache, quantize_cache
+from repro.serving import (
+    ContinuousBatcher,
+    RangeQuery,
+    RangeQueryBatcher,
+    Request,
+    dequantize_cache,
+    quantize_cache,
+)
+
+
+def demo_range_serving():
+    """Stream two sensors into one container, then serve range queries."""
+    rng = np.random.default_rng(3)
+    n = 32_768
+    sensors = {
+        0: np.round(np.cumsum(rng.standard_normal(n)) * 0.02, 4),       # drift
+        1: np.round(np.sin(np.arange(n) * 0.01) * 2
+                    + rng.standard_normal(n) * 0.01, 4),                # periodic
+    }
+    vmin = min(float(v.min()) for v in sensors.values())
+    vmax = max(float(v.max()) for v in sensors.values())
+    cfg = ShrinkConfig(eps_b=0.05 * (vmax - vmin), lam=1e-4)
+    eps = 1e-3 * (vmax - vmin)
+    codec = ShrinkStreamCodec(cfg, eps_targets=[eps], backend="rans",
+                              value_range=(vmin, vmax), frame_len=4096)
+    for c0 in range(0, n, 1024):  # gateway loop: 1k-sample chunks, interleaved
+        for sid, v in sensors.items():
+            codec.ingest(v[c0 : c0 + 1024], series_id=sid)
+    blob = codec.finalize()
+    st = codec.stats()
+    print(f"\nstreamed {len(sensors)} sensors x {n} samples -> "
+          f"{len(blob)/1e3:.1f}KB container ({st['frames']} frames, "
+          f"CR={len(sensors)*n*BYTES_PER_ROW/len(blob):.1f}, "
+          f"kb entries={st['kb']['entries']})")
+
+    batcher = RangeQueryBatcher(blob, cache_frames=8)
+    qrng = np.random.default_rng(4)
+    for qid in range(32):
+        sid = int(qrng.integers(0, 2))
+        t0 = int(qrng.integers(0, n - 512))
+        t1 = min(n, t0 + int(qrng.integers(64, 4096)))
+        batcher.submit(RangeQuery(qid=qid, series_id=sid, t0=t0, t1=t1, eps=eps))
+    done = batcher.run()
+    worst = max(float(np.abs(q.result - sensors[q.series_id][q.t0:q.t1]).max())
+                for q in done)
+    print(f"served {len(done)} range queries: frames decoded="
+          f"{batcher.stats['frames_decoded']} cache hits={batcher.stats['frame_hits']}, "
+          f"max |err|={worst:.2e} <= eps={eps:.2e}")
 
 
 def main():
@@ -63,6 +115,9 @@ def main():
     err = float(jnp.max(jnp.abs(back.k.astype(jnp.float32) - cache.k.astype(jnp.float32))))
     print(f"\nquantized KV block: {raw_bits/8/1e3:.1f}KB -> {q.memory_bits()/8/1e3:.1f}KB "
           f"({raw_bits/q.memory_bits():.2f}x), max dequant err {err:.2e}")
+
+    # --- streamed container + range-query serving ---
+    demo_range_serving()
 
 
 if __name__ == "__main__":

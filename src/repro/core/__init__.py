@@ -38,6 +38,15 @@ from .shrink import (  # noqa: F401
     ShrinkCodec,
     cs_from_bytes,
     cs_to_bytes,
+    decompress_at,
+    encode_with_base,
     original_size_bytes,
+)
+from .streaming import (  # noqa: F401
+    KnowledgeBase,
+    ShrinkStreamCodec,
+    decode_range,
+    decode_series,
+    read_knowledge_base,
 )
 from . import entropy, serialize  # noqa: F401

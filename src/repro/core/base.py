@@ -25,14 +25,23 @@ __all__ = [
     "construct_base",
     "base_predictions",
     "base_predictions_batch",
+    "origin_index",
     "practical_eps_b",
 ]
 
 
+def origin_index(theta: float, level: int, config: ShrinkConfig) -> int:
+    """Grid index of a quantized origin: theta == idx * eps_hat(level).
+
+    This is the canonical identity of a cone origin — the serializer
+    delta-codes it, Alg. 4 groups by it, and the streaming knowledge base
+    dedups (level, idx, slope) line entries across frames and series.
+    """
+    return int(round(theta / eps_hat_for_level(level, config)))
+
+
 def _origin_key(seg: Segment, config: ShrinkConfig) -> tuple[int, int]:
-    eps_hat = eps_hat_for_level(seg.level, config)
-    idx = int(round(seg.theta / eps_hat))
-    return (seg.level, idx)
+    return (seg.level, origin_index(seg.theta, seg.level, config))
 
 
 def construct_base(

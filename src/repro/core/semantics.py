@@ -52,14 +52,26 @@ def global_range(values: np.ndarray) -> tuple[float, float]:
     return float(values.min()), float(values.max())
 
 
-def extract_semantics_py(values: np.ndarray, config: ShrinkConfig) -> list[Segment]:
-    """Reference loop implementation (kept simple; used as the oracle)."""
+def extract_semantics_py(
+    values: np.ndarray,
+    config: ShrinkConfig,
+    value_range: tuple[float, float] | None = None,
+    n_hint: int | None = None,
+) -> list[Segment]:
+    """Reference loop implementation (kept simple; used as the oracle).
+
+    ``value_range``/``n_hint`` pin the two global quantities the scan
+    otherwise derives from the full series (the fluctuation denominator
+    ``delta_global`` and the interval length ``L``).  Streaming ingest
+    pins them so a chunk-at-a-time scan matches this one-shot scan
+    bit-for-bit; ``None`` keeps the derive-from-data behavior.
+    """
     n = int(values.shape[0])
     if n == 0:
         return []
-    vmin, vmax = global_range(values)
+    vmin, vmax = global_range(values) if value_range is None else value_range
     delta_global = vmax - vmin
-    L = default_interval_length(n, config)
+    L = default_interval_length(n if n_hint is None else int(n_hint), config)
 
     segments: list[Segment] = []
     i = 0
@@ -84,15 +96,25 @@ def extract_semantics_py(values: np.ndarray, config: ShrinkConfig) -> list[Segme
     return segments
 
 
-def extract_semantics(values: np.ndarray, config: ShrinkConfig) -> list[Segment]:
-    """Chunked-vectorized scan; semantics identical to extract_semantics_py."""
+def extract_semantics(
+    values: np.ndarray,
+    config: ShrinkConfig,
+    value_range: tuple[float, float] | None = None,
+    n_hint: int | None = None,
+) -> list[Segment]:
+    """Chunked-vectorized scan; semantics identical to extract_semantics_py.
+
+    ``value_range``/``n_hint`` optionally pin ``delta_global`` and the
+    interval length ``L`` (see ``extract_semantics_py``); defaults derive
+    them from ``values`` exactly as before.
+    """
     values = np.asarray(values, dtype=np.float64)
     n = int(values.shape[0])
     if n == 0:
         return []
-    vmin, vmax = global_range(values)
+    vmin, vmax = global_range(values) if value_range is None else value_range
     delta_global = vmax - vmin
-    L = default_interval_length(n, config)
+    L = default_interval_length(n if n_hint is None else int(n_hint), config)
 
     segments: list[Segment] = []
     i = 0

@@ -26,16 +26,51 @@ Residual blob:
     u8     mode (0=midpoint, 1=exact)
     f64    eps_r, f64 step, f64 r_lo
     entropy-coded q (see entropy.py, self-describing)
+
+Framed stream container (``SHRKS`` — the streaming-ingest wire format;
+frames are appended as they seal, the directory + knowledge base land in a
+footer at finalize so a writer never rewrites emitted bytes, and a reader
+doing a range query touches only the frames that overlap):
+
+    +---------+--------------------------------------------------------+
+    | section | layout (little-endian; varint = LEB128)                |
+    +=========+========================================================+
+    | head    | magic b"SHRKS", u8 version (=1)                        |
+    +---------+--------------------------------------------------------+
+    | frames  | concatenated frame payloads; each payload is a         |
+    |         | complete one-shot ``SHRK`` container (cs_to_bytes) of  |
+    |         | that frame's sample slice                              |
+    +---------+--------------------------------------------------------+
+    | footer  | varint n_frames, then per frame:                       |
+    |         |   varint series_id                                     |
+    |         |   varint t_lo          (abs sample index, inclusive)   |
+    |         |   varint t_hi - t_lo   (frame sample count)            |
+    |         |   varint kb_epoch      (KB entry count at seal time)   |
+    |         |   varint offset        (payload start, from byte 0)    |
+    |         |   varint length        (payload byte count)            |
+    |         |   u32    crc32(payload)                                |
+    |         | varint kb_len, kb_bytes (KnowledgeBase.to_bytes; may   |
+    |         | be empty)                                              |
+    +---------+--------------------------------------------------------+
+    | tail    | u64 footer_offset, u32 crc32(footer), magic b"SHRE"    |
+    |         | (fixed 16 bytes -> a reader seeks here first)          |
+    +---------+--------------------------------------------------------+
+
+Per-frame payload CRCs are verified lazily — only when a range query
+actually decodes the frame — so corruption in cold frames never blocks
+queries against healthy ones.
 """
 from __future__ import annotations
 
 import struct
+import zlib
 
 import numpy as np
 
 from . import entropy
+from .base import origin_index
 from .phases import eps_hat_for_level
-from .types import Base, ResidualStream, ShrinkConfig, SubBase
+from .types import Base, FrameMeta, ResidualStream, ShrinkConfig, SubBase
 
 __all__ = [
     "write_varint",
@@ -45,12 +80,20 @@ __all__ = [
     "encode_residuals",
     "encode_residuals_batch",
     "decode_residuals",
+    "FramedWriter",
+    "parse_framed_container",
+    "frame_payload",
 ]
 
 _BASE_MAGIC = b"SHRB"
 _RES_MAGIC = b"SHRR"
 _VERSION = 1
 _RAW_SLOPE = 255
+
+_STREAM_MAGIC = b"SHRKS"
+_STREAM_END_MAGIC = b"SHRE"
+_STREAM_VERSION = 1
+_TAIL_LEN = 8 + 4 + 4  # u64 footer offset + u32 footer crc + end magic
 
 
 def write_varint(buf: bytearray, x: int) -> None:
@@ -98,8 +141,7 @@ def encode_base(base: Base) -> bytes:
     prev_idx_by_level: dict[int, int] = {}
     for sb in base.subbases:
         buf.append(sb.level & 0xFF)
-        eps_hat = eps_hat_for_level(sb.level, base.config)
-        idx = int(round(sb.theta / eps_hat))
+        idx = origin_index(sb.theta, sb.level, base.config)
         prev = prev_idx_by_level.get(sb.level, 0)
         _write_svarint(buf, idx - prev)
         prev_idx_by_level[sb.level] = idx
@@ -120,6 +162,13 @@ def encode_base(base: Base) -> bytes:
 def decode_base(data: bytes) -> Base:
     if data[:4] != _BASE_MAGIC:
         raise ValueError("bad base magic")
+    try:
+        return _decode_base_body(data)
+    except (IndexError, struct.error) as e:
+        raise ValueError(f"truncated or corrupt base blob: {e}") from e
+
+
+def _decode_base_body(data: bytes) -> Base:
     pos = 5  # magic + version
     n, pos = read_varint(data, pos)
     eps_b, lam, beta_levels = struct.unpack_from("<ddB", data, pos)
@@ -203,7 +252,136 @@ def encode_residuals_batch(streams: list[ResidualStream], backend: str = "best")
 def decode_residuals(data: bytes) -> ResidualStream:
     if data[:4] != _RES_MAGIC:
         raise ValueError("bad residual magic")
+    if len(data) < 29:
+        raise ValueError("truncated residual blob")
     mode = "midpoint" if data[4] == 0 else "exact"
     eps_r, step, r_lo = struct.unpack_from("<ddd", data, 5)
-    q = entropy.decode_ints(data[29:])
+    try:
+        q = entropy.decode_ints(data[29:])
+    except (IndexError, struct.error) as e:
+        raise ValueError(f"truncated or corrupt residual payload: {e}") from e
     return ResidualStream(eps_r=eps_r, step=step, r_lo=r_lo, mode=mode, q=q)
+
+
+# --------------------------------------------------------------------- #
+# SHRKS framed stream container (layout table in the module docstring)
+# --------------------------------------------------------------------- #
+class FramedWriter:
+    """Append-only writer for the ``SHRKS`` container.
+
+    Frames are appended in seal order (any interleaving of series);
+    ``finish`` emits the directory footer + knowledge-base section + tail.
+    """
+
+    def __init__(self) -> None:
+        self._buf = bytearray()
+        self._buf += _STREAM_MAGIC
+        self._buf.append(_STREAM_VERSION)
+        self._frames: list[FrameMeta] = []
+        self._finished = False
+
+    def add_frame(
+        self, series_id: int, t_lo: int, t_hi: int, kb_epoch: int, payload: bytes
+    ) -> FrameMeta:
+        if self._finished:
+            raise ValueError("container already finished")
+        if t_hi <= t_lo:
+            raise ValueError(f"empty frame range [{t_lo}, {t_hi})")
+        meta = FrameMeta(
+            series_id=int(series_id),
+            t_lo=int(t_lo),
+            t_hi=int(t_hi),
+            kb_epoch=int(kb_epoch),
+            offset=len(self._buf),
+            length=len(payload),
+            crc32=zlib.crc32(payload) & 0xFFFFFFFF,
+        )
+        self._buf += payload
+        self._frames.append(meta)
+        return meta
+
+    def finish(self, kb_bytes: bytes = b"") -> bytes:
+        if self._finished:
+            raise ValueError("container already finished")
+        self._finished = True
+        footer = bytearray()
+        write_varint(footer, len(self._frames))
+        for m in self._frames:
+            write_varint(footer, m.series_id)
+            write_varint(footer, m.t_lo)
+            write_varint(footer, m.t_hi - m.t_lo)
+            write_varint(footer, m.kb_epoch)
+            write_varint(footer, m.offset)
+            write_varint(footer, m.length)
+            footer += struct.pack("<I", m.crc32)
+        write_varint(footer, len(kb_bytes))
+        footer += kb_bytes
+        footer_offset = len(self._buf)
+        self._buf += footer
+        self._buf += struct.pack("<QI", footer_offset, zlib.crc32(bytes(footer)) & 0xFFFFFFFF)
+        self._buf += _STREAM_END_MAGIC
+        return bytes(self._buf)
+
+
+def parse_framed_container(blob: bytes) -> tuple[list[FrameMeta], bytes]:
+    """Validate head/tail/footer of a ``SHRKS`` container and return
+    (frame directory, kb_bytes).  Raises ``ValueError`` on foreign,
+    truncated, or corrupt input (including a footer CRC mismatch).
+    Frame *payload* CRCs are NOT checked here — see ``frame_payload``."""
+    blob = bytes(blob)
+    if len(blob) < 6 or blob[:5] != _STREAM_MAGIC:
+        raise ValueError("bad container magic: not a SHRKS blob")
+    if blob[5] != _STREAM_VERSION:
+        raise ValueError(f"unsupported SHRKS version {blob[5]}")
+    if len(blob) < 6 + _TAIL_LEN:
+        raise ValueError("truncated SHRKS container: missing tail")
+    if blob[-4:] != _STREAM_END_MAGIC:
+        raise ValueError("truncated SHRKS container: bad end magic")
+    footer_offset, footer_crc = struct.unpack_from("<QI", blob, len(blob) - _TAIL_LEN)
+    if footer_offset < 6 or footer_offset > len(blob) - _TAIL_LEN:
+        raise ValueError("corrupt SHRKS container: footer offset out of range")
+    footer = blob[footer_offset : len(blob) - _TAIL_LEN]
+    if zlib.crc32(footer) & 0xFFFFFFFF != footer_crc:
+        raise ValueError("corrupt SHRKS container: footer CRC mismatch")
+    try:
+        pos = 0
+        n_frames, pos = read_varint(footer, pos)
+        metas: list[FrameMeta] = []
+        for _ in range(n_frames):
+            sid, pos = read_varint(footer, pos)
+            t_lo, pos = read_varint(footer, pos)
+            n, pos = read_varint(footer, pos)
+            epoch, pos = read_varint(footer, pos)
+            off, pos = read_varint(footer, pos)
+            ln, pos = read_varint(footer, pos)
+            (crc,) = struct.unpack_from("<I", footer, pos)
+            pos += 4
+            if off + ln > footer_offset:
+                raise ValueError("corrupt SHRKS container: frame extends into footer")
+            metas.append(
+                FrameMeta(
+                    series_id=sid, t_lo=t_lo, t_hi=t_lo + n, kb_epoch=epoch,
+                    offset=off, length=ln, crc32=crc,
+                )
+            )
+        kb_len, pos = read_varint(footer, pos)
+        if pos + kb_len != len(footer):
+            raise ValueError("corrupt SHRKS container: knowledge-base section length mismatch")
+        kb_bytes = bytes(footer[pos : pos + kb_len])
+    except (IndexError, struct.error) as e:
+        raise ValueError(f"corrupt SHRKS container: footer parse failed: {e}") from e
+    return metas, kb_bytes
+
+
+def frame_payload(blob: bytes, meta: FrameMeta, verify_crc: bool = True) -> bytes:
+    """Extract one frame's payload (a complete ``SHRK`` blob), checking its
+    directory CRC unless ``verify_crc=False``."""
+    payload = bytes(blob[meta.offset : meta.offset + meta.length])
+    if len(payload) != meta.length:
+        raise ValueError("truncated SHRKS container: frame payload cut short")
+    if verify_crc and zlib.crc32(payload) & 0xFFFFFFFF != meta.crc32:
+        raise ValueError(
+            f"frame payload CRC mismatch (series {meta.series_id}, "
+            f"samples [{meta.t_lo}, {meta.t_hi}))"
+        )
+    return payload

@@ -52,7 +52,14 @@ from .serialize import (
 )
 from .types import Base, CompressedSeries, ResidualStream, ShrinkConfig
 
-__all__ = ["ShrinkCodec", "cs_to_bytes", "cs_from_bytes", "original_size_bytes"]
+__all__ = [
+    "ShrinkCodec",
+    "cs_to_bytes",
+    "cs_from_bytes",
+    "decompress_at",
+    "encode_with_base",
+    "original_size_bytes",
+]
 
 _CONTAINER_MAGIC = b"SHRK"
 
@@ -89,10 +96,18 @@ class ShrinkCodec:
         )
 
     # ------------------------------------------------------------------ #
-    def build_base(self, values: np.ndarray) -> Base:
+    def build_base(
+        self,
+        values: np.ndarray,
+        value_range: tuple[float, float] | None = None,
+        n_hint: int | None = None,
+    ) -> Base:
         values = np.asarray(values, dtype=np.float64)
-        segments = extract_semantics(values, self.config)
-        vmin, vmax = global_range(values)
+        segments = extract_semantics(values, self.config, value_range=value_range, n_hint=n_hint)
+        if value_range is None:
+            vmin, vmax = global_range(values)
+        else:
+            vmin, vmax = float(value_range[0]), float(value_range[1])
         return construct_base(segments, len(values), vmin, vmax, self.config)
 
     def compress(
@@ -100,36 +115,20 @@ class ShrinkCodec:
         values: np.ndarray,
         eps_targets: list[float],
         decimals: int | None = None,
+        value_range: tuple[float, float] | None = None,
+        n_hint: int | None = None,
     ) -> CompressedSeries:
         """Alg. 1: extract semantics once, then one residual stream per eps.
 
         eps == 0.0 requests the lossless stream (needs ``decimals``).
+        ``value_range``/``n_hint`` pin the scan's global quantities (see
+        ``extract_semantics``) so an incremental scan over the same data —
+        ``core.streaming.ShrinkStreamCodec`` — produces byte-identical
+        output; ``None`` derives them from ``values`` as before.
         """
         values = np.asarray(values, dtype=np.float64)
-        base = self.build_base(values)
-        base_bytes = encode_base(base)
-        pred = base_predictions(base)
-        eps_hat = practical_eps_b(values, base, pred=pred)
-        r = values - pred
-
-        residual_bytes: dict[float, bytes | None] = {}
-        for eps in eps_targets:
-            if eps == 0.0:
-                if decimals is None:
-                    raise ValueError("lossless stream requires `decimals`")
-                stream = quantize_exact(values, base, decimals, pred=pred)
-                residual_bytes[0.0] = encode_residuals(stream, backend=self.backend)
-            elif eps >= eps_hat:
-                residual_bytes[eps] = None  # base-only suffices (Alg.1 l.9-10)
-            else:
-                stream = quantize_residuals(r, eps)
-                residual_bytes[eps] = encode_residuals(stream, backend=self.backend)
-        return CompressedSeries(
-            base=base,
-            base_bytes=base_bytes,
-            residual_bytes=residual_bytes,
-            eps_b_practical=eps_hat,
-        )
+        base = self.build_base(values, value_range=value_range, n_hint=n_hint)
+        return encode_with_base(values, base, eps_targets, decimals, backend=self.backend)
 
     def compress_batch(
         self,
@@ -216,18 +215,62 @@ class ShrinkCodec:
         ]
 
     def decompress_at(self, cs: CompressedSeries, eps: float) -> np.ndarray:
-        if eps not in cs.residual_bytes:
-            raise KeyError(f"no stream at eps={eps}")
-        blob = cs.residual_bytes[eps]
-        base = cs.base if cs.base is not None else decode_base(cs.base_bytes)
-        pred = base_predictions(base)
-        if blob is None:
-            return pred
-        stream = decode_residuals(blob)
-        if stream.mode == "exact":
-            decimals = int(round(-math.log10(stream.step)))
-            return dequantize_exact(stream, base, decimals)
-        return pred + dequantize_residuals(stream)
+        return decompress_at(cs, eps)
+
+
+def decompress_at(cs: CompressedSeries, eps: float) -> np.ndarray:
+    """Reconstruct the series from ``cs`` at resolution ``eps``.  Stateless —
+    everything needed lives in the compressed series itself, which is what
+    lets range-decode consumers reconstruct frames without a codec."""
+    if eps not in cs.residual_bytes:
+        raise KeyError(f"no stream at eps={eps}")
+    blob = cs.residual_bytes[eps]
+    base = cs.base if cs.base is not None else decode_base(cs.base_bytes)
+    pred = base_predictions(base)
+    if blob is None:
+        return pred
+    stream = decode_residuals(blob)
+    if stream.mode == "exact":
+        decimals = int(round(-math.log10(stream.step)))
+        return dequantize_exact(stream, base, decimals)
+    return pred + dequantize_residuals(stream)
+
+
+def encode_with_base(
+    values: np.ndarray,
+    base: Base,
+    eps_targets: list[float],
+    decimals: int | None = None,
+    backend: str = "best",
+) -> CompressedSeries:
+    """Residual-encoding tail of Alg. 1: given an already-constructed base,
+    emit one residual stream per eps target.  Shared by ``ShrinkCodec
+    .compress`` and the streaming frame sealer so both produce identical
+    bytes for identical (values, base) inputs."""
+    values = np.asarray(values, dtype=np.float64)
+    base_bytes = encode_base(base)
+    pred = base_predictions(base)
+    eps_hat = practical_eps_b(values, base, pred=pred)
+    r = values - pred
+
+    residual_bytes: dict[float, bytes | None] = {}
+    for eps in eps_targets:
+        if eps == 0.0:
+            if decimals is None:
+                raise ValueError("lossless stream requires `decimals`")
+            stream = quantize_exact(values, base, decimals, pred=pred)
+            residual_bytes[0.0] = encode_residuals(stream, backend=backend)
+        elif eps >= eps_hat:
+            residual_bytes[eps] = None  # base-only suffices (Alg.1 l.9-10)
+        else:
+            stream = quantize_residuals(r, eps)
+            residual_bytes[eps] = encode_residuals(stream, backend=backend)
+    return CompressedSeries(
+        base=base,
+        base_bytes=base_bytes,
+        residual_bytes=residual_bytes,
+        eps_b_practical=eps_hat,
+    )
 
 
 def cs_to_bytes(cs: CompressedSeries) -> bytes:
@@ -246,20 +289,36 @@ def cs_to_bytes(cs: CompressedSeries) -> bytes:
 
 
 def cs_from_bytes(data: bytes) -> CompressedSeries:
-    if data[:4] != _CONTAINER_MAGIC:
-        raise ValueError("bad container magic")
+    """Parse a ``SHRK`` container.  Raises ``ValueError`` (never a raw
+    ``struct.error``/``IndexError``) on foreign, truncated, or trailing-
+    garbage input — every length is validated before it is read."""
+    data = bytes(data)
+    if len(data) < 4 or data[:4] != _CONTAINER_MAGIC:
+        raise ValueError("bad container magic: not a SHRK blob")
+    if len(data) < 16:
+        raise ValueError("truncated SHRK container: incomplete header")
     eps_hat, base_len = struct.unpack_from("<dI", data, 4)
     pos = 16
+    if pos + base_len > len(data):
+        raise ValueError("truncated SHRK container: base blob cut short")
     base_bytes = data[pos : pos + base_len]
     pos += base_len
+    if pos + 4 > len(data):
+        raise ValueError("truncated SHRK container: missing stream count")
     (n_streams,) = struct.unpack_from("<I", data, pos)
     pos += 4
     residual_bytes: dict[float, bytes | None] = {}
     for _ in range(n_streams):
+        if pos + 12 > len(data):
+            raise ValueError("truncated SHRK container: stream directory cut short")
         eps, ln = struct.unpack_from("<dI", data, pos)
         pos += 12
+        if pos + ln > len(data):
+            raise ValueError("truncated SHRK container: residual stream cut short")
         residual_bytes[eps] = data[pos : pos + ln] if ln else None
         pos += ln
+    if pos != len(data):
+        raise ValueError("corrupt SHRK container: trailing bytes after last stream")
     return CompressedSeries(
         base=decode_base(base_bytes),
         base_bytes=bytes(base_bytes),

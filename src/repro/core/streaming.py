@@ -1,0 +1,568 @@
+"""Streaming ingest for SHRINK: chunk-at-a-time compression on a gateway.
+
+The one-shot codec (``ShrinkCodec.compress``) needs the whole series in
+memory.  An IoT gateway sees the opposite regime — Sprintz-style
+chunk-at-a-time ingest from many sensors at once — and SHRINK's central
+claim (compression ratio *grows* with data size as the knowledge base
+amortizes) only pays off if the codec can run in that regime.  This module
+provides it:
+
+* ``ShrinkStreamCodec`` — stateful, multi-series.  ``ingest(chunk,
+  series_id)`` advances an *incremental* cone scan whose open-cone state
+  (origin, adaptive threshold, running slope intersection) carries across
+  chunk boundaries, so segment breaks — and therefore every downstream
+  byte — are identical to the one-shot scan over the concatenated data.
+  Sealed frames accumulate; ``finalize()`` emits a ``SHRKS`` framed
+  container (layout table in ``serialize.py``).
+
+* ``KnowledgeBase`` — the gateway-resident dictionary of semantic lines
+  (fluctuation level, origin grid index, slope).  Every sealed frame's
+  sub-bases are ingested; identical lines discovered in different chunks
+  *or different series* dedup to one ref-counted entry.  ``merge``
+  combines the KBs of two gateways, ``to_bytes``/``from_bytes`` spill and
+  restore it, and the serialized KB rides in the container footer.
+
+* ``decode_range`` / ``decode_series`` — random access: a range query
+  touches only the frames overlapping [t0, t1), verifying payload CRCs
+  lazily per touched frame.
+
+Exactness contract (property-tested in tests/test_streaming_property.py):
+every frame payload is byte-identical to ``ShrinkCodec.compress`` of that
+frame's sample slice under the same pinned parameters, for ANY chunking of
+the input.  Two global quantities make the incremental scan possible:
+
+* ``value_range`` pins the fluctuation denominator delta_global (IoT
+  sensors publish their measurement range up front; the paper derives
+  eps_b from the same range).
+* The interval length L is pinned from ``n_hint`` (falling back to
+  ``frame_len``).
+
+With both pinned, the scan runs incrementally as chunks arrive, holding
+only the unscanned tail plus the current frame's raw samples.  Without
+them the scan is *deferred* to frame seal (the frame buffer is scanned
+one-shot with frame-local range/L) — still chunking-invariant, no longer
+incremental.  With ``frame_len=None`` and range/n pinned to the full
+series, flushing a fully streamed series reproduces the one-shot
+``cs_to_bytes(ShrinkCodec.compress(v, ...))`` bytes exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import struct
+
+import numpy as np
+
+from .base import construct_base, origin_index
+from .phases import default_interval_length, divide, eps_hat_for_level
+from .semantics import extract_semantics, global_range
+from .serialize import (
+    FramedWriter,
+    _read_svarint,
+    _write_svarint,
+    frame_payload,
+    parse_framed_container,
+    read_varint,
+    write_varint,
+)
+from .shrink import cs_from_bytes, cs_to_bytes, decompress_at, encode_with_base
+from .types import FrameMeta, Segment, ShrinkConfig
+
+__all__ = [
+    "KnowledgeBase",
+    "ShrinkStreamCodec",
+    "decode_range",
+    "decode_series",
+    "read_knowledge_base",
+]
+
+_INF = math.inf
+_KB_MAGIC = b"SHKB"
+_KB_VERSION = 1
+_RAW_SLOPE = 255
+
+
+# --------------------------------------------------------------------- #
+# Knowledge base: deduplicating dictionary of semantic lines
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class KBEntry:
+    """One deduplicated semantic line: value = theta(level, origin_idx) at
+    the segment start, advancing by ``slope`` per sample.  ``refs`` counts
+    the sub-bases (across all frames and series) that use this line."""
+
+    level: int
+    origin_idx: int
+    slope: float
+    slope_digits: int
+    refs: int = 0
+
+
+def _slope_key(slope: float, digits: int) -> tuple:
+    if digits <= 13:
+        return (digits, int(round(slope * 10**digits)))
+    return (_RAW_SLOPE, struct.pack("<d", slope))
+
+
+class KnowledgeBase:
+    """Gateway-resident, append-only dictionary of (level, origin, slope)
+    lines shared across chunks and series.
+
+    Entries are identified positionally: the container records each
+    frame's ``kb_epoch`` (= entry count at seal time), so entry ids below
+    a frame's epoch were known when that frame was written.  ``merge``
+    folds another gateway's KB in (summing refcounts) and returns the id
+    remap; ``to_bytes``/``from_bytes`` spill/restore the whole dictionary.
+    """
+
+    def __init__(self, config: ShrinkConfig):
+        self.config = config
+        self.entries: list[KBEntry] = []
+        self._index: dict[tuple, int] = {}
+
+    # -- identity ------------------------------------------------------ #
+    @property
+    def epoch(self) -> int:
+        """Number of entries; frames record this at seal time."""
+        return len(self.entries)
+
+    def theta_of(self, entry: KBEntry) -> float:
+        return entry.origin_idx * eps_hat_for_level(entry.level, self.config)
+
+    def _find_or_add(self, level: int, oidx: int, slope: float, digits: int) -> int:
+        key = (level, oidx) + _slope_key(slope, digits)
+        eid = self._index.get(key)
+        if eid is None:
+            eid = len(self.entries)
+            self.entries.append(
+                KBEntry(level=level, origin_idx=oidx, slope=slope, slope_digits=digits)
+            )
+            self._index[key] = eid
+        return eid
+
+    # -- ingest / merge ------------------------------------------------ #
+    def ingest_base(self, base) -> list[int]:
+        """Register every sub-base of a sealed frame's base; returns the
+        entry id for each (deduplicated, refcount bumped)."""
+        ids = []
+        for sb in base.subbases:
+            oidx = origin_index(sb.theta, sb.level, self.config)
+            eid = self._find_or_add(sb.level, oidx, sb.slope, sb.slope_digits)
+            self.entries[eid].refs += 1
+            ids.append(eid)
+        return ids
+
+    def merge(self, other: "KnowledgeBase") -> list[int]:
+        """Fold ``other`` into self (e.g. two gateways syncing).  Returns
+        ``remap`` with ``remap[other_id] == self_id``; refcounts sum."""
+        for attr in ("eps_b", "lam", "beta_levels"):
+            if getattr(self.config, attr) != getattr(other.config, attr):
+                raise ValueError(
+                    f"cannot merge knowledge bases with different configs ({attr})"
+                )
+        remap = []
+        for e in other.entries:
+            eid = self._find_or_add(e.level, e.origin_idx, e.slope, e.slope_digits)
+            self.entries[eid].refs += e.refs
+            remap.append(eid)
+        return remap
+
+    def release(self, entry_ids: list[int]) -> None:
+        """Drop one reference per id (e.g. a frame was deleted)."""
+        for eid in entry_ids:
+            e = self.entries[eid]
+            if e.refs <= 0:
+                raise ValueError(f"refcount underflow on KB entry {eid}")
+            e.refs -= 1
+
+    def stats(self) -> dict:
+        total_refs = sum(e.refs for e in self.entries)
+        return {
+            "entries": len(self.entries),
+            "total_refs": total_refs,
+            "dedup_ratio": total_refs / len(self.entries) if self.entries else 1.0,
+        }
+
+    # -- spill / restore ----------------------------------------------- #
+    def to_bytes(self) -> bytes:
+        buf = bytearray()
+        buf += _KB_MAGIC
+        buf.append(_KB_VERSION)
+        buf += struct.pack(
+            "<ddB", self.config.eps_b, self.config.lam, self.config.beta_levels
+        )
+        write_varint(buf, len(self.entries))
+        prev_idx_by_level: dict[int, int] = {}
+        for e in self.entries:
+            buf.append(e.level & 0xFF)
+            prev = prev_idx_by_level.get(e.level, 0)
+            _write_svarint(buf, e.origin_idx - prev)
+            prev_idx_by_level[e.level] = e.origin_idx
+            if e.slope_digits <= 13:
+                buf.append(e.slope_digits)
+                _write_svarint(buf, int(round(e.slope * 10**e.slope_digits)))
+            else:
+                buf.append(_RAW_SLOPE)
+                buf += struct.pack("<d", e.slope)
+            write_varint(buf, e.refs)
+        return bytes(buf)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "KnowledgeBase":
+        data = bytes(data)
+        if len(data) < 5 or data[:4] != _KB_MAGIC:
+            raise ValueError("bad knowledge-base magic")
+        if data[4] != _KB_VERSION:
+            raise ValueError(f"unsupported knowledge-base version {data[4]}")
+        try:
+            eps_b, lam, beta_levels = struct.unpack_from("<ddB", data, 5)
+            pos = 5 + 17
+            kb = cls(ShrinkConfig(eps_b=eps_b, lam=lam, beta_levels=beta_levels))
+            n, pos = read_varint(data, pos)
+            prev_idx_by_level: dict[int, int] = {}
+            for _ in range(n):
+                level = data[pos]
+                pos += 1
+                didx, pos = _read_svarint(data, pos)
+                oidx = prev_idx_by_level.get(level, 0) + didx
+                prev_idx_by_level[level] = oidx
+                digits = data[pos]
+                pos += 1
+                if digits == _RAW_SLOPE:
+                    (slope,) = struct.unpack_from("<d", data, pos)
+                    pos += 8
+                else:
+                    scaled, pos = _read_svarint(data, pos)
+                    slope = scaled / 10**digits
+                refs, pos = read_varint(data, pos)
+                eid = kb._find_or_add(level, oidx, slope, int(digits))
+                kb.entries[eid].refs += refs
+        except (IndexError, struct.error) as e:
+            raise ValueError(f"truncated or corrupt knowledge-base blob: {e}") from e
+        return kb
+
+
+# --------------------------------------------------------------------- #
+# Per-series incremental scan state
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class _SeriesState:
+    start: int = 0  # absolute sample index of the current frame's first sample
+    buf: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(1024, dtype=np.float64)
+    )
+    n_buf: int = 0
+    # incremental cone-scan state (frame-relative indices)
+    scan_pos: int = 0
+    cone_open: bool = False
+    t0: int = 0
+    theta: float = 0.0
+    level: int = 0
+    eps_hat: float = 0.0
+    psi_lo: float = -_INF
+    psi_hi: float = _INF
+    chunk: int = 256
+    segments: list[Segment] = dataclasses.field(default_factory=list)
+    total_ingested: int = 0
+
+    def append(self, vals: np.ndarray) -> None:
+        need = self.n_buf + vals.size
+        if need > self.buf.size:
+            cap = max(self.buf.size * 2, need)
+            grown = np.empty(cap, dtype=np.float64)
+            grown[: self.n_buf] = self.buf[: self.n_buf]
+            self.buf = grown
+        self.buf[self.n_buf : need] = vals
+        self.n_buf = need
+        self.total_ingested += int(vals.size)
+
+    def drop_prefix(self, n: int) -> None:
+        keep = self.n_buf - n
+        fresh = np.empty(max(1024, keep), dtype=np.float64)
+        fresh[:keep] = self.buf[n : self.n_buf]
+        self.buf = fresh
+        self.n_buf = keep
+        self.start += n
+        self.scan_pos = 0
+        self.cone_open = False
+        self.segments = []
+        self.chunk = 256
+
+
+# --------------------------------------------------------------------- #
+# The streaming codec
+# --------------------------------------------------------------------- #
+class ShrinkStreamCodec:
+    """Chunk-at-a-time SHRINK compression with a shared knowledge base.
+
+    Parameters
+    ----------
+    config:       the ShrinkConfig shared by all series on this gateway.
+    eps_targets:  residual resolutions encoded per frame (0.0 = lossless,
+                  requires ``decimals``).
+    value_range:  (vmin, vmax) spec of the sensors; pins delta_global so
+                  the cone scan can run incrementally (and makes output
+                  independent of chunking by construction).  None defers
+                  the scan to frame seal with frame-local range.
+    frame_len:    samples per frame.  A frame seals (base construction,
+                  residual encode, KB ingest) when full; ``None`` means
+                  one frame per flush — max CR, no intra-series random
+                  access granularity.
+    n_hint:       pins the interval length L (Alg. 2); defaults to
+                  ``frame_len``.  Both unset forces the deferred scan.
+    kb:           share a KnowledgeBase across codecs; default fresh.
+
+    ``ingest`` returns the frames sealed during the call (as
+    ``(series_id, t_lo, t_hi)`` tuples); ``flush`` seals partial frames;
+    ``finalize`` emits the SHRKS container.
+    """
+
+    def __init__(
+        self,
+        config: ShrinkConfig,
+        eps_targets: list[float],
+        decimals: int | None = None,
+        backend: str = "best",
+        value_range: tuple[float, float] | None = None,
+        frame_len: int | None = None,
+        n_hint: int | None = None,
+        kb: KnowledgeBase | None = None,
+    ):
+        if 0.0 in eps_targets and decimals is None:
+            raise ValueError("lossless eps target 0.0 requires `decimals`")
+        if frame_len is not None and frame_len < 1:
+            raise ValueError(f"frame_len must be >= 1, got {frame_len}")
+        self.config = config
+        self.eps_targets = list(eps_targets)
+        self.decimals = decimals
+        self.backend = backend
+        self.value_range = (
+            (float(value_range[0]), float(value_range[1])) if value_range else None
+        )
+        self.frame_len = frame_len
+        self.n_hint = int(n_hint) if n_hint is not None else None
+        self.kb = kb if kb is not None else KnowledgeBase(config)
+        n_for_l = self.n_hint if self.n_hint is not None else frame_len
+        self.incremental = self.value_range is not None and n_for_l is not None
+        if self.incremental:
+            self._L = default_interval_length(int(n_for_l), config)
+            self._delta = self.value_range[1] - self.value_range[0]
+        self._series: dict[int, _SeriesState] = {}
+        self._sealed: list[tuple[int, int, int, int, bytes]] = []
+
+    # -- ingest -------------------------------------------------------- #
+    def ingest(self, values_chunk, series_id: int = 0) -> list[tuple[int, int, int]]:
+        """Feed the next chunk of one series; returns frames sealed now."""
+        vals = np.asarray(values_chunk, dtype=np.float64).ravel()
+        st = self._series.setdefault(int(series_id), _SeriesState())
+        if vals.size:
+            st.append(vals)
+        sealed = []
+        if self.frame_len is not None:
+            while st.n_buf >= self.frame_len:
+                if self.incremental:
+                    self._advance(st, avail=self.frame_len, final=True)
+                sealed.append(self._seal(int(series_id), st, self.frame_len))
+        if self.incremental and st.n_buf:
+            self._advance(st, avail=st.n_buf, final=False)
+        return sealed
+
+    def flush(self, series_id: int | None = None) -> list[tuple[int, int, int]]:
+        """Seal the open (partial) frame of one series, or of all series."""
+        sids = [series_id] if series_id is not None else sorted(self._series)
+        sealed = []
+        for sid in sids:
+            st = self._series.get(sid)
+            if st is None or st.n_buf == 0:
+                continue
+            if self.incremental:
+                self._advance(st, avail=st.n_buf, final=True)
+            sealed.append(self._seal(sid, st, st.n_buf))
+        return sealed
+
+    def finalize(self) -> bytes:
+        """Flush everything and emit the SHRKS framed container (frames in
+        seal order, knowledge base in the footer)."""
+        self.flush()
+        w = FramedWriter()
+        for sid, t_lo, t_hi, epoch, payload in self._sealed:
+            w.add_frame(sid, t_lo, t_hi, epoch, payload)
+        return w.finish(self.kb.to_bytes())
+
+    @property
+    def sealed_frames(self) -> list[tuple[int, int, int, int]]:
+        """(series_id, t_lo, t_hi, kb_epoch) of every sealed frame so far."""
+        return [(sid, lo, hi, ep) for sid, lo, hi, ep, _ in self._sealed]
+
+    def stats(self) -> dict:
+        payload_bytes = sum(len(p) for *_, p in self._sealed)
+        ingested = sum(st.total_ingested for st in self._series.values())
+        return {
+            "series": len(self._series),
+            "frames": len(self._sealed),
+            "samples_ingested": ingested,
+            "samples_sealed": sum(hi - lo for _, lo, hi, _, _ in self._sealed),
+            "payload_bytes": payload_bytes,
+            "kb": self.kb.stats(),
+        }
+
+    # -- incremental cone scan ----------------------------------------- #
+    def _advance(self, st: _SeriesState, avail: int, final: bool) -> None:
+        """Consume buffered samples [st.scan_pos, avail) of the current
+        frame.  Mirrors ``semantics.extract_semantics`` op-for-op (same
+        expressions, same prefix-min/max recurrence), so the closed
+        segments are bit-identical to the one-shot scan of the frame slice
+        regardless of how ingest chunked the data.  ``final`` means
+        ``avail`` is the frame end: the open cone is closed there and
+        division windows truncate there, exactly like a series end."""
+        L = self._L
+        maxw = max(L, 2)
+        cap = self.frame_len
+        buf = st.buf
+        while True:
+            if not st.cone_open:
+                j = st.scan_pos
+                if j >= avail:
+                    break
+                wend = j + maxw if cap is None else min(j + maxw, cap)
+                if wend > avail:
+                    if not final:
+                        break  # wait for look-ahead before opening the cone
+                    wend = avail
+                theta, level, eps_hat = divide(buf[:wend], j, L, self._delta, self.config)
+                st.cone_open = True
+                st.t0 = j
+                st.theta, st.level, st.eps_hat = theta, level, eps_hat
+                st.psi_lo, st.psi_hi = -_INF, _INF
+                st.chunk = 256
+                st.scan_pos = j + 1
+            i, theta, eps_hat = st.t0, st.theta, st.eps_hat
+            closed = False
+            j = st.scan_pos
+            while j < avail:
+                end = min(avail, j + st.chunk)
+                dt = np.arange(j - i, end - i, dtype=np.float64)
+                seg_vals = buf[j:end]
+                hi = (seg_vals + (eps_hat - theta)) / dt
+                lo = (seg_vals - (eps_hat + theta)) / dt
+                run_hi = np.minimum(np.minimum.accumulate(hi), st.psi_hi)
+                run_lo = np.maximum(np.maximum.accumulate(lo), st.psi_lo)
+                viol = run_lo > run_hi
+                if viol.any():
+                    idx = int(np.argmax(viol))
+                    if idx > 0:
+                        st.psi_hi = float(run_hi[idx - 1])
+                        st.psi_lo = float(run_lo[idx - 1])
+                    k = j + idx
+                    st.segments.append(
+                        Segment(
+                            theta=theta, level=st.level, psi_lo=st.psi_lo,
+                            psi_hi=st.psi_hi, t0=i, length=k - i,
+                        )
+                    )
+                    st.cone_open = False
+                    st.scan_pos = k
+                    closed = True
+                    break
+                st.psi_hi = float(run_hi[-1])
+                st.psi_lo = float(run_lo[-1])
+                j = end
+                st.chunk = min(st.chunk * 2, 65536)
+            if closed:
+                continue  # a new cone opens at the violation point
+            st.scan_pos = avail
+            if final and st.cone_open:
+                st.segments.append(
+                    Segment(
+                        theta=theta, level=st.level, psi_lo=st.psi_lo,
+                        psi_hi=st.psi_hi, t0=st.t0, length=avail - st.t0,
+                    )
+                )
+                st.cone_open = False
+            break
+
+    # -- frame sealing ------------------------------------------------- #
+    def _seal(self, series_id: int, st: _SeriesState, frame_n: int) -> tuple[int, int, int]:
+        frame_vals = st.buf[:frame_n].copy()
+        if self.incremental:
+            segments = st.segments
+            vmin, vmax = self.value_range
+        else:
+            segments = extract_semantics(
+                frame_vals, self.config, value_range=self.value_range, n_hint=self.n_hint
+            )
+            if self.value_range is not None:
+                vmin, vmax = self.value_range
+            else:
+                vmin, vmax = global_range(frame_vals)
+        base = construct_base(segments, frame_n, float(vmin), float(vmax), self.config)
+        cs = encode_with_base(
+            frame_vals, base, self.eps_targets, self.decimals, backend=self.backend
+        )
+        payload = cs_to_bytes(cs)
+        self.kb.ingest_base(base)
+        t_lo, t_hi = st.start, st.start + frame_n
+        self._sealed.append((series_id, t_lo, t_hi, self.kb.epoch, payload))
+        st.drop_prefix(frame_n)
+        return (series_id, t_lo, t_hi)
+
+
+# --------------------------------------------------------------------- #
+# Random-access decode
+# --------------------------------------------------------------------- #
+def _series_frames(blob: bytes, series_id: int) -> list[FrameMeta]:
+    metas, _ = parse_framed_container(blob)
+    frames = sorted(
+        (m for m in metas if m.series_id == series_id), key=lambda m: m.t_lo
+    )
+    if not frames:
+        raise ValueError(f"no frames for series {series_id} in container")
+    return frames
+
+
+def decode_range(
+    blob: bytes, series_id: int, t0: int, t1: int, eps: float
+) -> np.ndarray:
+    """Reconstruct samples [t0, t1) of one series at resolution ``eps``,
+    decoding (and CRC-checking) only the frames that overlap the range.
+    Identical to ``decode_series(blob, series_id, eps)[t0:t1]``."""
+    return _decode_range_frames(blob, _series_frames(blob, series_id), series_id, t0, t1, eps)
+
+
+def _decode_range_frames(
+    blob: bytes, frames: list[FrameMeta], series_id: int, t0: int, t1: int, eps: float
+) -> np.ndarray:
+    if t1 <= t0:
+        raise ValueError(f"empty range [{t0}, {t1})")
+    touched = [m for m in frames if m.t_lo < t1 and m.t_hi > t0]
+    if not touched or touched[0].t_lo > t0 or touched[-1].t_hi < t1:
+        raise ValueError(
+            f"range [{t0}, {t1}) not covered by series {series_id} frames "
+            f"[{frames[0].t_lo}, {frames[-1].t_hi})"
+        )
+    out = np.empty(t1 - t0, dtype=np.float64)
+    expected = t0
+    for m in touched:
+        if m.t_lo > expected:
+            raise ValueError(f"gap in series {series_id} frames at sample {expected}")
+        cs = cs_from_bytes(frame_payload(blob, m))
+        vals = decompress_at(cs, eps)
+        lo, hi = max(t0, m.t_lo), min(t1, m.t_hi)
+        out[lo - t0 : hi - t0] = vals[lo - m.t_lo : hi - m.t_lo]
+        expected = hi
+    return out
+
+
+def decode_series(blob: bytes, series_id: int, eps: float) -> np.ndarray:
+    """Full reconstruction of one series (all frames concatenated)."""
+    frames = _series_frames(blob, series_id)
+    return _decode_range_frames(
+        blob, frames, series_id, frames[0].t_lo, frames[-1].t_hi, eps
+    )
+
+
+def read_knowledge_base(blob: bytes) -> KnowledgeBase | None:
+    """The shared knowledge base spilled into the container footer, or
+    ``None`` for containers written without one."""
+    _, kb_bytes = parse_framed_container(blob)
+    return KnowledgeBase.from_bytes(kb_bytes) if kb_bytes else None

@@ -140,6 +140,27 @@ class ResidualStream:
     q: np.ndarray  # int64 [n]
 
 
+@dataclasses.dataclass(frozen=True)
+class FrameMeta:
+    """Directory entry of one frame in a ``SHRKS`` framed stream container.
+
+    A frame covers the contiguous sample range [t_lo, t_hi) of one series;
+    its payload (a complete one-shot ``SHRK`` blob for that slice) lives at
+    [offset, offset+length) in the container.  ``kb_epoch`` is the shared
+    knowledge base's entry count when the frame sealed, so a reader can
+    tell which semantic lines were already known to the gateway at write
+    time (the segment-indexed layout direct-analytics consumers rely on).
+    """
+
+    series_id: int
+    t_lo: int
+    t_hi: int
+    kb_epoch: int
+    offset: int
+    length: int
+    crc32: int
+
+
 @dataclasses.dataclass
 class CompressedSeries:
     """A fully encoded series: one base + streams at each requested eps."""

@@ -1,30 +1,28 @@
-"""Serving launcher: continuous batching over a reduced or production model.
+"""Serving launcher: continuous batching over a reduced or production
+model, or batched range-query decode over a streamed SHRINK container.
 
+    # LLM decode loop (continuous batching)
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
         --requests 16 --slots 8 --max-new 8
+
+    # time-series range queries against a freshly streamed SHRKS container
+    PYTHONPATH=src python -m repro.launch.serve --mode range \
+        --series 8 --points 65536 --frame-len 8192 --queries 256
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from ..configs import get_config, reduced_config
-from ..models import build_model
-from ..serving import ContinuousBatcher, Request
 
+def _serve_model(args) -> int:
+    import jax
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--max-seq", type=int, default=128)
-    args = ap.parse_args(argv)
+    from ..configs import get_config, reduced_config
+    from ..models import build_model
+    from ..serving import ContinuousBatcher, Request
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -52,6 +50,89 @@ def main(argv=None) -> int:
     toks = sum(len(r.prompt) + len(r.generated) for r in done)
     print(f"served {len(done)} requests, {toks} tokens, {dt:.1f}s ({toks/dt:.1f} tok/s)")
     return 0
+
+
+def _serve_range(args) -> int:
+    """Stream synthetic gateway sensors into a SHRKS container, then serve
+    random range queries through the frame-cached batcher."""
+    from ..core import BYTES_PER_ROW, ShrinkConfig, ShrinkStreamCodec
+    from ..serving import RangeQuery, RangeQueryBatcher
+
+    rng = np.random.default_rng(0)
+    s, n = args.series, args.points
+    v = np.cumsum(rng.standard_normal((s, n)) * 0.05, axis=1)
+    v += rng.standard_normal((s, n)) * 0.02
+    v = np.round(v, 4)
+    vmin, vmax = float(v.min()), float(v.max())
+    cfg = ShrinkConfig(eps_b=0.05 * max(vmax - vmin, 1e-12), lam=1e-4)
+    eps = args.eps * (vmax - vmin)
+
+    codec = ShrinkStreamCodec(
+        cfg, eps_targets=[eps], backend="rans",
+        value_range=(vmin, vmax), frame_len=args.frame_len,
+    )
+    t0 = time.perf_counter()
+    for c0 in range(0, n, args.chunk):  # interleaved chunk-at-a-time ingest
+        for sid in range(s):
+            codec.ingest(v[sid, c0 : c0 + args.chunk], series_id=sid)
+    blob = codec.finalize()
+    dt_ingest = time.perf_counter() - t0
+    mb = s * n * BYTES_PER_ROW / 1e6
+    st = codec.stats()
+    print(
+        f"ingested {s} series x {n} samples in {dt_ingest:.2f}s "
+        f"({mb/dt_ingest:.1f} MB/s), {st['frames']} frames, "
+        f"CR={s*n*BYTES_PER_ROW/len(blob):.1f}, kb={st['kb']}"
+    )
+
+    batcher = RangeQueryBatcher(blob, cache_frames=args.cache_frames)
+    qrng = np.random.default_rng(1)
+    for qid in range(args.queries):
+        sid = int(qrng.integers(0, s))
+        t_lo = int(qrng.integers(0, n - 16))
+        t_hi = int(min(n, t_lo + qrng.integers(16, args.frame_len)))
+        batcher.submit(RangeQuery(qid=qid, series_id=sid, t0=t_lo, t1=t_hi, eps=eps))
+    t0 = time.perf_counter()
+    done = batcher.run()
+    dt_q = time.perf_counter() - t0
+    worst = 0.0
+    for q in done:
+        assert q.error is None, q.error
+        worst = max(worst, float(np.abs(q.result - v[q.series_id, q.t0 : q.t1]).max()))
+    bs = batcher.stats
+    print(
+        f"served {len(done)} range queries in {dt_q:.3f}s "
+        f"({len(done)/dt_q:.0f} q/s), frames decoded={bs['frames_decoded']} "
+        f"cache hits={bs['frame_hits']}, max |err|={worst:.2e} (eps={eps:.2e})"
+    )
+    return 0 if worst <= eps * (1 + 1e-9) else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["model", "range"], default="model")
+    # model mode
+    ap.add_argument("--arch")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=128)
+    # range mode
+    ap.add_argument("--series", type=int, default=8)
+    ap.add_argument("--points", type=int, default=65536)
+    ap.add_argument("--frame-len", type=int, default=8192)
+    ap.add_argument("--chunk", type=int, default=4096)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--eps", type=float, default=1e-3, help="fraction of value range")
+    ap.add_argument("--cache-frames", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    if args.mode == "range":
+        return _serve_range(args)
+    if not args.arch:
+        ap.error("--arch is required in --mode model")
+    return _serve_model(args)
 
 
 if __name__ == "__main__":

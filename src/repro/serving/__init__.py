@@ -1,3 +1,4 @@
-"""Serving: KV caches (+ SHRINK quantized), continuous batching."""
+"""Serving: KV caches (+ SHRINK quantized), continuous batching, and
+batched range-query decode over streamed SHRINK containers."""
 from .kvcache import QuantizedKV, dequantize_cache, promote_caches, quantize_cache  # noqa: F401
-from .batching import ContinuousBatcher, Request  # noqa: F401
+from .batching import ContinuousBatcher, RangeQuery, RangeQueryBatcher, Request  # noqa: F401

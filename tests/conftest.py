@@ -1,0 +1,26 @@
+"""Shared test configuration.
+
+Registers hypothesis profiles so CI runs the property suites
+deterministically (fixed seed via ``derandomize``, no wall-clock deadline
+on shared runners).  Select with ``HYPOTHESIS_PROFILE=ci``; the default
+profile only disables the deadline.  A missing hypothesis install keeps
+everything importable — the property suites importorskip on their own.
+"""
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile("default", settings(deadline=None))
+    settings.register_profile(
+        "ci",
+        settings(
+            deadline=None,
+            derandomize=True,  # fixed example stream: CI failures reproduce
+            print_blob=True,
+            suppress_health_check=[HealthCheck.too_slow],
+        ),
+    )
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+except ImportError:  # property suites importorskip hypothesis themselves
+    pass

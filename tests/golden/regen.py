@@ -1,0 +1,84 @@
+"""Golden wire-format fixture builders + regeneration script.
+
+The checked-in ``golden_v1.shrk`` / ``golden_v1.shrks`` fixtures pin the
+``SHRK`` and ``SHRKS`` byte layouts: tests/test_golden_format.py rebuilds
+them from source and asserts byte equality, so any accidental change to
+the serializers (varint layout, header fields, rANS framing, footer
+order...) fails CI instead of silently orphaning previously written data.
+
+Escape hatch for an INTENTIONAL format change: bump the format version in
+serialize.py, rename the fixtures to ``golden_v<new>.*`` here and in the
+test, and regenerate:
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+The input series is a closed-form signal (no RNG) so the fixture bytes
+are reproducible on any platform/numpy.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import numpy as np
+
+HERE = pathlib.Path(__file__).resolve().parent
+GOLDEN_SHRK = HERE / "golden_v1.shrk"
+GOLDEN_SHRKS = HERE / "golden_v1.shrks"
+
+N = 1536
+EPS_TARGETS = [1e-2, 0.0]
+DECIMALS = 3
+FRAME_LEN = 512
+
+
+def golden_series() -> np.ndarray:
+    """Deterministic closed-form series: smooth waves + step plateaus on a
+    3-decimal grid (exercises merging, lossy + lossless residual paths)."""
+    t = np.arange(N, dtype=np.float64)
+    v = (
+        np.sin(t * 0.02) * 2.5
+        + 0.3 * np.sign(np.sin(t * 0.15))
+        + 1e-3 * t
+    )
+    return np.round(v, DECIMALS)
+
+
+def _cfg(v):
+    from repro.core import ShrinkConfig
+
+    return ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
+
+
+def build_shrk() -> bytes:
+    from repro.core import ShrinkCodec, cs_to_bytes
+
+    v = golden_series()
+    codec = ShrinkCodec(config=_cfg(v), backend="rans")
+    return cs_to_bytes(codec.compress(v, EPS_TARGETS, decimals=DECIMALS))
+
+
+def build_shrks() -> bytes:
+    from repro.core import ShrinkStreamCodec
+    from repro.core.semantics import global_range
+
+    v = golden_series()
+    sc = ShrinkStreamCodec(
+        _cfg(v), eps_targets=EPS_TARGETS, decimals=DECIMALS, backend="rans",
+        value_range=global_range(v), frame_len=FRAME_LEN,
+    )
+    for lo in range(0, N, 100):  # chunking must not matter
+        sc.ingest(v[lo : lo + 100])
+    return sc.finalize()
+
+
+def main() -> None:
+    GOLDEN_SHRK.write_bytes(build_shrk())
+    GOLDEN_SHRKS.write_bytes(build_shrks())
+    print(f"wrote {GOLDEN_SHRK} ({GOLDEN_SHRK.stat().st_size} B)")
+    print(f"wrote {GOLDEN_SHRKS} ({GOLDEN_SHRKS.stat().st_size} B)")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, str(HERE.parent.parent / "src"))
+    main()

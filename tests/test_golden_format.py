@@ -1,0 +1,64 @@
+"""Golden-format regression: the SHRK / SHRKS wire formats must be stable
+across PRs.
+
+The fixtures under tests/golden/ were produced by tests/golden/regen.py
+from a closed-form (RNG-free) series; this test rebuilds them from the
+current code and asserts byte equality.  If this fails, either you broke
+the wire format accidentally (fix the code), or you changed it ON PURPOSE
+— in that case bump the format version in serialize.py, rename the
+fixtures to the new version, and rerun ``PYTHONPATH=src python
+tests/golden/regen.py`` (full procedure in that file's docstring).
+"""
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+_REGEN = pathlib.Path(__file__).resolve().parent / "golden" / "regen.py"
+_spec = importlib.util.spec_from_file_location("golden_regen", _REGEN)
+golden = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(golden)
+
+
+def _fixture(path):
+    if not path.exists():
+        pytest.fail(
+            f"missing golden fixture {path.name}; run "
+            "`PYTHONPATH=src python tests/golden/regen.py` and commit it"
+        )
+    return path.read_bytes()
+
+
+def test_shrk_bytes_stable():
+    expected = _fixture(golden.GOLDEN_SHRK)
+    got = golden.build_shrk()
+    assert got == expected, (
+        "SHRK container bytes changed — wire-format regression "
+        "(see tests/golden/regen.py for the intentional-change procedure)"
+    )
+
+
+def test_shrks_bytes_stable():
+    expected = _fixture(golden.GOLDEN_SHRKS)
+    got = golden.build_shrks()
+    assert got == expected, (
+        "SHRKS framed container bytes changed — wire-format regression "
+        "(see tests/golden/regen.py for the intentional-change procedure)"
+    )
+
+
+def test_golden_fixture_still_decodes():
+    """The checked-in container (not the rebuilt one) must decode: guards
+    the decoder against changes that re-encode identically but misread
+    old data."""
+    from repro.core import cs_from_bytes, decode_series
+    from repro.core.shrink import decompress_at
+
+    v = golden.golden_series()
+    cs = cs_from_bytes(_fixture(golden.GOLDEN_SHRK))
+    assert np.array_equal(
+        np.round(decompress_at(cs, 0.0), golden.DECIMALS), v
+    )
+    full = decode_series(_fixture(golden.GOLDEN_SHRKS), 0, 0.0)
+    assert np.array_equal(np.round(full, golden.DECIMALS), v)

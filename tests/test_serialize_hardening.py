@@ -1,0 +1,164 @@
+"""Negative-path tests for the wire formats: truncated, foreign, and
+corrupted input must raise a clear ``ValueError`` — never a raw
+``struct.error`` / ``IndexError`` — at every header boundary, for both
+the one-shot ``SHRK`` container and the framed ``SHRKS`` container."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    KnowledgeBase,
+    ShrinkCodec,
+    ShrinkConfig,
+    ShrinkStreamCodec,
+    cs_from_bytes,
+    cs_to_bytes,
+    decode_range,
+)
+from repro.core.semantics import global_range
+from repro.core.serialize import decode_base, decode_residuals, parse_framed_container
+
+
+def _series(n=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.round(np.cumsum(rng.standard_normal(n)) * 0.1, 4)
+
+
+@pytest.fixture(scope="module")
+def shrk_blob():
+    v = _series()
+    cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
+    cs = ShrinkCodec(config=cfg, backend="rans").compress(v, [1e-2, 0.0], decimals=4)
+    return cs_to_bytes(cs)
+
+
+@pytest.fixture(scope="module")
+def shrks_blob():
+    v = _series()
+    cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
+    sc = ShrinkStreamCodec(
+        cfg, eps_targets=[1e-2], backend="rans",
+        value_range=global_range(v), frame_len=512,
+    )
+    sc.ingest(v)
+    return sc.finalize()
+
+
+# ------------------------------------------------------------------ SHRK
+def test_cs_from_bytes_roundtrip_ok(shrk_blob):
+    cs = cs_from_bytes(shrk_blob)
+    assert set(cs.residual_bytes) == {1e-2, 0.0}
+
+
+def test_cs_from_bytes_truncated_at_every_boundary(shrk_blob):
+    """Every prefix of a valid container (including the empty one and
+    every header boundary) must raise ValueError."""
+    for cut in range(len(shrk_blob)):
+        with pytest.raises(ValueError):
+            cs_from_bytes(shrk_blob[:cut])
+
+
+def test_cs_from_bytes_foreign_magic(shrk_blob):
+    with pytest.raises(ValueError, match="magic"):
+        cs_from_bytes(b"NOPE" + shrk_blob[4:])
+    with pytest.raises(ValueError):
+        cs_from_bytes(b"")
+    with pytest.raises(ValueError):
+        cs_from_bytes(b"\x00" * 64)
+
+
+def test_cs_from_bytes_trailing_garbage(shrk_blob):
+    with pytest.raises(ValueError, match="trailing"):
+        cs_from_bytes(shrk_blob + b"\x00")
+
+
+def test_decode_base_and_residuals_truncated():
+    v = _series(500)
+    cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
+    cs = ShrinkCodec(config=cfg, backend="rans").compress(v, [1e-2])
+    for cut in range(len(cs.base_bytes)):
+        with pytest.raises(ValueError):
+            decode_base(cs.base_bytes[:cut])
+    blob = cs.residual_bytes[1e-2]
+    for cut in range(len(blob)):  # header AND entropy-payload truncations
+        with pytest.raises(ValueError):
+            decode_residuals(blob[:cut])
+
+
+# ----------------------------------------------------------------- SHRKS
+def test_framed_truncated_everywhere(shrks_blob):
+    """Any truncation (head, frames, footer, tail) raises ValueError.
+    Sweep every boundary-ish cut plus a sample of interior cuts."""
+    n = len(shrks_blob)
+    cuts = set(range(0, 32)) | set(range(n - 64, n)) | set(range(0, n, 97))
+    for cut in sorted(c for c in cuts if 0 <= c < n):
+        with pytest.raises(ValueError):
+            parse_framed_container(shrks_blob[:cut])
+
+
+def test_framed_foreign_and_bad_tail(shrks_blob):
+    with pytest.raises(ValueError, match="magic"):
+        parse_framed_container(b"AAAAA" + shrks_blob[5:])
+    with pytest.raises(ValueError, match="end magic"):
+        parse_framed_container(shrks_blob[:-4] + b"XXXX")
+    with pytest.raises(ValueError, match="version"):
+        parse_framed_container(shrks_blob[:5] + b"\x09" + shrks_blob[6:])
+
+
+def test_framed_footer_crc_mismatch(shrks_blob):
+    # flip a byte inside the footer (between footer_offset and the tail)
+    import struct
+
+    footer_offset, _ = struct.unpack_from("<QI", shrks_blob, len(shrks_blob) - 16)
+    bad = bytearray(shrks_blob)
+    bad[footer_offset + 2] ^= 0xFF
+    with pytest.raises(ValueError, match="footer CRC"):
+        parse_framed_container(bytes(bad))
+
+
+def test_framed_payload_crc_checked_lazily(shrks_blob):
+    """Corrupting one frame's payload only fails queries touching it."""
+    metas, _ = parse_framed_container(shrks_blob)
+    victim = metas[1]
+    bad = bytearray(shrks_blob)
+    bad[victim.offset + victim.length // 2] ^= 0xFF
+    bad = bytes(bad)
+    # untouched frame still decodes
+    ok = decode_range(bad, 0, metas[0].t_lo, metas[0].t_hi, 1e-2)
+    assert ok.shape == (metas[0].t_hi - metas[0].t_lo,)
+    with pytest.raises(ValueError, match="CRC mismatch"):
+        decode_range(bad, 0, victim.t_lo, victim.t_hi, 1e-2)
+
+
+def test_gapped_container_rejected_by_range_consumers():
+    """Frames [0, n) and [2n, 3n) with a hole between: both decode_range
+    and the serving batcher must refuse ranges spanning the gap instead of
+    returning uninitialized memory."""
+    from repro.core import ShrinkCodec
+    from repro.core.serialize import FramedWriter
+    from repro.serving import RangeQuery, RangeQueryBatcher
+
+    v = _series(300)
+    cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
+    codec = ShrinkCodec(config=cfg, backend="rans")
+    w = FramedWriter()
+    for lo in (0, 200):
+        w.add_frame(0, lo, lo + 100, 0, cs_to_bytes(codec.compress(v[lo : lo + 100], [1e-2])))
+    blob = w.finish()
+    with pytest.raises(ValueError, match="gap"):
+        decode_range(blob, 0, 50, 250, 1e-2)
+    b = RangeQueryBatcher(blob)
+    b.submit(RangeQuery(qid=0, series_id=0, t0=50, t1=250, eps=1e-2))
+    (q,) = b.run()
+    assert q.result is None and "gap" in q.error
+    # ranges inside one frame still work
+    assert decode_range(blob, 0, 210, 240, 1e-2).shape == (30,)
+
+
+def test_kb_from_bytes_negative():
+    kb = KnowledgeBase(ShrinkConfig(eps_b=0.5))
+    blob = kb.to_bytes()
+    with pytest.raises(ValueError):
+        KnowledgeBase.from_bytes(b"JUNK" + blob[4:])
+    for cut in range(len(blob)):
+        with pytest.raises(ValueError):
+            KnowledgeBase.from_bytes(blob[:cut])

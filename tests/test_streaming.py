@@ -1,0 +1,273 @@
+"""Deterministic streaming-ingest tests (no optional deps — these run
+everywhere; the hypothesis suite in test_streaming_property.py widens the
+same invariants to random inputs).
+
+Invariants under test:
+* streamed ingest across random chunkings == one-shot compression, byte
+  for byte (the acceptance bar: >= 3 chunkings);
+* multi-frame containers are invariant to ingest chunking, and each frame
+  equals the pinned per-slice one-shot compression;
+* decode_range == slice of the full decode; lossless round-trip;
+* the knowledge base dedups across chunks and series, merges, and spills.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    KnowledgeBase,
+    ShrinkCodec,
+    ShrinkConfig,
+    ShrinkStreamCodec,
+    cs_to_bytes,
+    decode_range,
+    decode_series,
+    read_knowledge_base,
+)
+from repro.core.semantics import global_range
+from repro.core.serialize import frame_payload, parse_framed_container
+from repro.serving import RangeQuery, RangeQueryBatcher
+
+
+def _series(n=12_000, seed=0, decimals=4):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    v = np.sin(t * 0.01) * 3 + 0.5 * np.sin(t * 0.002) + rng.normal(0, 0.05, n)
+    return np.round(v, decimals)
+
+
+def _chunkings(n, seeds=(11, 22, 33)):
+    """>= 3 random chunk splits plus two degenerate ones."""
+    outs = [[0, n], [0] + list(range(1, n, 1 + n // 7)) + [n]]
+    for seed in seeds:
+        rng = np.random.default_rng(seed)
+        k = int(rng.integers(5, 60))
+        cuts = np.sort(rng.choice(np.arange(1, n), size=k, replace=False))
+        outs.append([0] + cuts.tolist() + [n])
+    return outs
+
+
+def _stream(codec_args, v, cuts, series_id=0):
+    sc = ShrinkStreamCodec(**codec_args)
+    for lo, hi in zip(cuts[:-1], cuts[1:]):
+        sc.ingest(v[lo:hi], series_id=series_id)
+    return sc
+
+
+EPS_TS = [1e-2, 1e-3, 0.0]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    v = _series()
+    cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-4)
+    return v, cfg
+
+
+def test_streamed_equals_one_shot_bytes(setup):
+    """Acceptance bar: >=3 random chunkings, byte-identical payloads."""
+    v, cfg = setup
+    one = cs_to_bytes(
+        ShrinkCodec(config=cfg, backend="rans").compress(v, EPS_TS, decimals=4)
+    )
+    args = dict(
+        config=cfg, eps_targets=EPS_TS, decimals=4, backend="rans",
+        value_range=global_range(v), n_hint=len(v),
+    )
+    for cuts in _chunkings(len(v)):
+        sc = _stream(args, v, cuts)
+        blob = sc.finalize()
+        metas, _ = parse_framed_container(blob)
+        assert len(metas) == 1
+        assert frame_payload(blob, metas[0]) == one
+
+
+def test_framed_container_chunking_invariant(setup):
+    v, cfg = setup
+    args = dict(
+        config=cfg, eps_targets=EPS_TS, decimals=4, backend="rans",
+        value_range=global_range(v), frame_len=2048,
+    )
+    blobs = [_stream(args, v, cuts).finalize() for cuts in _chunkings(len(v))]
+    assert all(b == blobs[0] for b in blobs[1:])
+
+
+def test_frames_equal_pinned_per_slice_one_shot(setup):
+    v, cfg = setup
+    vr = global_range(v)
+    args = dict(
+        config=cfg, eps_targets=EPS_TS, decimals=4, backend="rans",
+        value_range=vr, frame_len=2048,
+    )
+    blob = _stream(args, v, _chunkings(len(v))[2]).finalize()
+    metas, _ = parse_framed_container(blob)
+    assert len(metas) == -(-len(v) // 2048)
+    codec = ShrinkCodec(config=cfg, backend="rans")
+    for m in metas:
+        one = cs_to_bytes(
+            codec.compress(v[m.t_lo : m.t_hi], EPS_TS, decimals=4,
+                           value_range=vr, n_hint=2048)
+        )
+        assert frame_payload(blob, m) == one
+
+
+def test_deferred_mode_equals_plain_per_slice(setup):
+    """No pinned range: scan defers to seal; frames == plain one-shot of
+    each slice, still chunking-invariant."""
+    v, cfg = setup
+    args = dict(config=cfg, eps_targets=[1e-2], backend="rans", frame_len=3000)
+    blobs = [_stream(args, v, cuts).finalize() for cuts in _chunkings(len(v))[:3]]
+    assert blobs[1] == blobs[0] and blobs[2] == blobs[0]
+    metas, _ = parse_framed_container(blobs[0])
+    codec = ShrinkCodec(config=cfg, backend="rans")
+    for m in metas:
+        assert frame_payload(blobs[0], m) == cs_to_bytes(
+            codec.compress(v[m.t_lo : m.t_hi], [1e-2])
+        )
+
+
+def test_decode_range_equals_slice_and_lossless_roundtrip(setup):
+    v, cfg = setup
+    args = dict(
+        config=cfg, eps_targets=EPS_TS, decimals=4, backend="rans",
+        value_range=global_range(v), frame_len=2048,
+    )
+    blob = _stream(args, v, _chunkings(len(v))[3]).finalize()
+    full = decode_series(blob, 0, 0.0)
+    assert np.array_equal(np.round(full, 4), v)  # lossless
+    for eps in EPS_TS:
+        ref = decode_series(blob, 0, eps)
+        rng = np.random.default_rng(5)
+        for _ in range(8):
+            t0 = int(rng.integers(0, len(v) - 2))
+            t1 = int(rng.integers(t0 + 1, len(v) + 1))
+            assert np.array_equal(decode_range(blob, 0, t0, t1, eps), ref[t0:t1])
+        if eps:
+            assert np.max(np.abs(ref - v)) <= eps * (1 + 1e-9)
+    with pytest.raises(ValueError):
+        decode_range(blob, 0, 0, len(v) + 1, 0.0)  # beyond coverage
+    with pytest.raises(ValueError):
+        decode_range(blob, 7, 0, 10, 0.0)  # unknown series
+    with pytest.raises(ValueError):
+        decode_range(blob, 0, 10, 10, 0.0)  # empty range
+
+
+def test_kb_dedups_across_chunks_and_series(setup):
+    v, cfg = setup
+    kb = KnowledgeBase(cfg)
+    args = dict(
+        config=cfg, eps_targets=[1e-2], backend="rans",
+        value_range=global_range(v), frame_len=2048, kb=kb,
+    )
+    sc = ShrinkStreamCodec(**args)
+    for sid in range(3):  # identical series -> maximal cross-series reuse
+        for lo in range(0, len(v), 1000):
+            sc.ingest(v[lo : lo + 1000], series_id=sid)
+    blob = sc.finalize()
+    st = kb.stats()
+    assert st["dedup_ratio"] >= 3.0  # every line shared by >= 3 series
+    # frame epochs are non-decreasing in seal order and <= final epoch
+    epochs = [ep for _, _, _, ep in sc.sealed_frames]
+    assert epochs == sorted(epochs) and epochs[-1] == kb.epoch
+    # spill -> restore -> bytes stable; container carries the same KB
+    kb2 = KnowledgeBase.from_bytes(kb.to_bytes())
+    assert kb2.to_bytes() == kb.to_bytes()
+    kb3 = read_knowledge_base(blob)
+    assert kb3 is not None and kb3.to_bytes() == kb.to_bytes()
+
+
+def test_kb_merge_sums_refs_and_remaps(setup):
+    v, cfg = setup
+    vr = global_range(v)
+
+    def kb_for(seed):
+        w = np.round(v + np.random.default_rng(seed).normal(0, 0.01, len(v)), 4)
+        sc = ShrinkStreamCodec(
+            config=cfg, eps_targets=[1e-2], backend="rans",
+            value_range=vr, frame_len=4096,
+        )
+        sc.ingest(w)
+        sc.flush()
+        return sc.kb
+
+    a, b = kb_for(1), kb_for(2)
+    refs_before = sum(e.refs for e in a.entries) + sum(e.refs for e in b.entries)
+    remap = a.merge(b)
+    assert len(remap) == len(b.entries)
+    assert sum(e.refs for e in a.entries) == refs_before
+    for i, e in enumerate(b.entries):  # remapped entries are the same lines
+        m = a.entries[remap[i]]
+        assert (m.level, m.origin_idx, m.slope) == (e.level, e.origin_idx, e.slope)
+    with pytest.raises(ValueError):
+        a.merge(KnowledgeBase(ShrinkConfig(eps_b=cfg.eps_b * 2)))
+
+
+def test_flush_and_reingest_continues_sample_range(setup):
+    """flush() seals a partial frame; later ingest continues at the next
+    absolute sample index (multiple flushes == time-partitioned frames)."""
+    v, cfg = setup
+    sc = ShrinkStreamCodec(
+        config=cfg, eps_targets=[1e-2], backend="rans", value_range=global_range(v),
+        n_hint=len(v),
+    )
+    sc.ingest(v[:5000])
+    assert sc.flush() == [(0, 0, 5000)]
+    sc.ingest(v[5000:])
+    assert sc.flush(series_id=0) == [(0, 5000, len(v))]
+    assert sc.flush() == []  # nothing open
+    blob = sc.finalize()
+    metas, _ = parse_framed_container(blob)
+    assert [(m.t_lo, m.t_hi) for m in metas] == [(0, 5000), (5000, len(v))]
+    ref = decode_series(blob, 0, 1e-2)
+    assert np.max(np.abs(ref - v)) <= 1e-2 * (1 + 1e-9)
+
+
+def test_empty_ingest_and_no_frames():
+    cfg = ShrinkConfig(eps_b=0.1)
+    sc = ShrinkStreamCodec(config=cfg, eps_targets=[1e-2], value_range=(0.0, 1.0),
+                           frame_len=64)
+    assert sc.ingest(np.array([])) == []
+    assert sc.flush() == []
+    blob = sc.finalize()  # header + empty directory + KB is still a valid container
+    metas, kb_bytes = parse_framed_container(blob)
+    assert metas == [] and kb_bytes
+    with pytest.raises(ValueError):
+        ShrinkStreamCodec(config=cfg, eps_targets=[0.0])  # lossless needs decimals
+    with pytest.raises(ValueError):
+        ShrinkStreamCodec(config=cfg, eps_targets=[1e-2], frame_len=0)
+
+
+def test_range_query_batcher_serves_and_caches(setup):
+    v, cfg = setup
+    vr = global_range(v)
+    sc = ShrinkStreamCodec(
+        config=cfg, eps_targets=[1e-3], backend="rans", value_range=vr, frame_len=2048,
+    )
+    for sid in range(2):
+        sc.ingest(v, series_id=sid)
+    blob = sc.finalize()
+    b = RangeQueryBatcher(blob, cache_frames=4)
+    assert b.series_ids == [0, 1]
+    assert b.span(0) == (0, len(v))
+    rng = np.random.default_rng(9)
+    for qid in range(24):
+        t0 = int(rng.integers(0, len(v) - 64))
+        t1 = int(min(len(v), t0 + rng.integers(32, 3000)))
+        b.submit(RangeQuery(qid=qid, series_id=qid % 2, t0=t0, t1=t1, eps=1e-3))
+    b.submit(RangeQuery(qid=99, series_id=5, t0=0, t1=10, eps=1e-3))  # bad series
+    done = b.run()
+    assert len(done) == 25 and not b.queue
+    for q in done:
+        if q.qid == 99:
+            assert q.error is not None and q.result is None
+            continue
+        assert q.error is None
+        assert np.array_equal(q.result, decode_range(blob, q.series_id, q.t0, q.t1, 1e-3))
+    # repeated hot queries come from the frame cache, not fresh decodes
+    b.submit(RangeQuery(qid=100, series_id=0, t0=100, t1=200, eps=1e-3))
+    b.run()  # warm the frame (may decode it if the LRU evicted it above)
+    decoded_before = b.stats["frames_decoded"]
+    for _ in range(10):
+        b.submit(RangeQuery(qid=101, series_id=0, t0=100, t1=200, eps=1e-3))
+    b.run()
+    assert b.stats["frames_decoded"] == decoded_before
+    assert b.stats["frame_hits"] >= 10

@@ -1,0 +1,136 @@
+"""Property-based tests (hypothesis) for streaming ingest.
+
+The contract: for ANY finite series and ANY chunking of it, streamed
+ingest + flush produces byte-identical container payloads — and identical
+``decompress_at`` reconstructions — to the one-shot ``ShrinkCodec
+.compress``, including the lossless eps=0.0 stream; and ``decode_range``
+over a framed container equals the corresponding slice of the full
+decode.  Skipped without the ``hypothesis`` dev extra; CI runs it with a
+fixed seed via the ``ci`` profile (tests/conftest.py).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ShrinkCodec,
+    ShrinkConfig,
+    ShrinkStreamCodec,
+    cs_to_bytes,
+    decode_range,
+    decode_series,
+)
+from repro.core.semantics import global_range
+from repro.core.serialize import frame_payload, parse_framed_container
+
+# Bounded finite series on a 4-decimal grid: the lossless (eps=0.0) path
+# guarantees exact reconstruction only for fixed-decimal data, mirroring
+# the paper's Table II datasets.
+_series_strategy = st.lists(
+    st.floats(min_value=-1e4, max_value=1e4, allow_nan=False, allow_infinity=False,
+              width=32),
+    min_size=2,
+    max_size=300,
+).map(lambda xs: np.round(np.array(xs, dtype=np.float64), 4))
+
+
+@st.composite
+def _series_and_chunking(draw):
+    v = draw(_series_strategy)
+    n = len(v)
+    k = draw(st.integers(min_value=0, max_value=min(n - 1, 12)))
+    cuts = sorted(draw(
+        st.lists(st.integers(min_value=1, max_value=n - 1), min_size=k, max_size=k,
+                 unique=True)
+    )) if n > 1 else []
+    return v, [0] + cuts + [n]
+
+
+def _cfg_for(v):
+    rng = float(v.max() - v.min())
+    if rng <= 0:
+        return None
+    return ShrinkConfig(eps_b=0.05 * rng, lam=1e-3)
+
+
+@given(_series_and_chunking(), st.floats(min_value=1e-4, max_value=1.0))
+@settings(max_examples=200, deadline=None)
+def test_streamed_flush_bit_identical_to_one_shot(series_chunks, eps_rel):
+    """The acceptance property: streamed ingest => flush reproduces the
+    one-shot compression bytes for any chunking, eps targets incl. 0.0."""
+    v, cuts = series_chunks
+    cfg = _cfg_for(v)
+    if cfg is None:
+        return
+    eps_targets = [eps_rel * float(v.max() - v.min()), 0.0]
+    one = cs_to_bytes(
+        ShrinkCodec(config=cfg, backend="rans").compress(v, eps_targets, decimals=4)
+    )
+    sc = ShrinkStreamCodec(
+        cfg, eps_targets=eps_targets, decimals=4, backend="rans",
+        value_range=global_range(v), n_hint=len(v),
+    )
+    for lo, hi in zip(cuts[:-1], cuts[1:]):
+        sc.ingest(v[lo:hi])
+    blob = sc.finalize()
+    metas, _ = parse_framed_container(blob)
+    assert len(metas) == 1
+    assert frame_payload(blob, metas[0]) == one
+    # reconstruction parity at every target
+    codec = ShrinkCodec(config=cfg, backend="rans")
+    cs = codec.compress(v, eps_targets, decimals=4)
+    for eps in eps_targets:
+        assert np.array_equal(decode_range(blob, 0, 0, len(v), eps),
+                              codec.decompress_at(cs, eps))
+
+
+@given(_series_and_chunking(), st.integers(min_value=8, max_value=64))
+@settings(max_examples=100, deadline=None)
+def test_framed_decode_range_equals_slice(series_chunks, frame_len):
+    v, cuts = series_chunks
+    cfg = _cfg_for(v)
+    if cfg is None:
+        return
+    eps = 0.02 * float(v.max() - v.min())
+    sc = ShrinkStreamCodec(
+        cfg, eps_targets=[eps], backend="rans",
+        value_range=global_range(v), frame_len=frame_len,
+    )
+    for lo, hi in zip(cuts[:-1], cuts[1:]):
+        sc.ingest(v[lo:hi])
+    blob = sc.finalize()
+    full = decode_series(blob, 0, eps)
+    assert full.shape == v.shape
+    # per-frame L-infinity guarantee (+ float64 reconstruction ulp slack)
+    ulp_slack = 4 * np.finfo(np.float64).eps * max(1.0, float(np.abs(v).max()))
+    assert np.max(np.abs(full - v)) <= eps * (1 + 1e-9) + ulp_slack
+    n = len(v)
+    for t0, t1 in [(0, n), (0, 1), (n - 1, n), (n // 3, 2 * n // 3 + 1)]:
+        if t1 > t0:
+            assert np.array_equal(decode_range(blob, 0, t0, t1, eps), full[t0:t1])
+
+
+@given(_series_and_chunking(), _series_and_chunking())
+@settings(max_examples=60, deadline=None)
+def test_container_invariant_to_chunking(sc_a, sc_b):
+    """Same data, two different chunkings -> identical container bytes
+    (only the chunk lists differ between the two draws)."""
+    v, cuts_a = sc_a
+    _, cuts_b = sc_b
+    cuts_b = [c for c in cuts_b if c < len(v)] + [len(v)]
+    cuts_b = sorted(set([0] + cuts_b))
+    cfg = _cfg_for(v)
+    if cfg is None:
+        return
+    blobs = []
+    for cuts in (cuts_a, cuts_b):
+        sc = ShrinkStreamCodec(
+            cfg, eps_targets=[0.0], decimals=4, backend="rans",
+            value_range=global_range(v), frame_len=32,
+        )
+        for lo, hi in zip(cuts[:-1], cuts[1:]):
+            sc.ingest(v[lo:hi])
+        blobs.append(sc.finalize())
+    assert blobs[0] == blobs[1]
