@@ -15,6 +15,7 @@ import time
 
 from . import (
     bench_compression,
+    bench_ragged,
     bench_roofline,
     bench_scaling,
     bench_sensitivity,
@@ -140,6 +141,22 @@ def main(argv=None) -> int:
             f"CR(eps=1e-3)={crg['cr_eps1e-3'][i]:6.2f}"
         )
     checks.update(bench_streaming.validate_claims(stream))
+
+    print("\n== Ragged multi-series ingest (bucketed batch + scheduler) ==")
+    ragged = bench_ragged.ragged_json(quick=args.quick)
+    engine["ragged"] = ragged
+    rp = ragged["pipeline"]
+    print(
+        f"  ragged[{rp['series']} series, len {rp['len_min']}..{rp['len_max']}] "
+        f"batch={rp['batch_mb_s']:.2f}MB/s loop={rp['loop_mb_s']:.2f}MB/s "
+        f"speedup={rp['batch_speedup']:.2f}x"
+    )
+    rs = ragged["scheduler"]
+    print(
+        f"  scheduler[{rs['series']} sensors, {rs['samples']} samples] "
+        f"ingest={rs['ingest_mb_s']:.2f}MB/s (admission + SHRKS assembly)"
+    )
+    checks.update(bench_ragged.validate_claims(ragged))
     # machine-readable perf trajectory for future PRs to diff against; only
     # full-size runs update the repo-root trajectory (quick numbers live in
     # artifacts/bench via save_result and must not clobber the baseline)

@@ -25,6 +25,7 @@ __all__ = [
     "construct_base",
     "base_predictions",
     "base_predictions_batch",
+    "base_predictions_ragged",
     "origin_index",
     "practical_eps_b",
 ]
@@ -146,6 +147,32 @@ def base_predictions_batch(bases: list[Base]) -> np.ndarray:
     start = np.repeat(np.concatenate([f[0] for f in flats]).astype(np.float64), lens)
     t = np.tile(np.arange(n, dtype=np.float64), s)
     return (theta + slope * (t - start)).reshape(s, n)
+
+
+def base_predictions_ragged(bases: list[Base], pad_to: int) -> np.ndarray:
+    """Ragged counterpart of ``base_predictions_batch``: bases may have any
+    mix of lengths; returns [S, pad_to] with row i holding
+    ``base_predictions(bases[i])`` in its first ``bases[i].n`` slots and
+    0.0 beyond (one concatenated repeat pass, no per-series python loop)."""
+    s = len(bases)
+    out = np.zeros((s, pad_to), dtype=np.float64)
+    if s == 0:
+        return out
+    ns = np.array([b.n for b in bases], dtype=np.int64)
+    if ns.max(initial=0) > pad_to:
+        raise ValueError(f"pad_to={pad_to} smaller than longest base n={ns.max()}")
+    total = int(ns.sum())
+    if total == 0:
+        return out
+    flats = [_flat_segments(b) for b in bases]
+    lens = np.concatenate([f[1] for f in flats])
+    theta = np.repeat(np.concatenate([f[2] for f in flats]), lens)
+    slope = np.repeat(np.concatenate([f[3] for f in flats]), lens)
+    start = np.repeat(np.concatenate([f[0] for f in flats]).astype(np.float64), lens)
+    series_of = np.repeat(np.arange(s), ns)
+    t_local = np.arange(total) - np.repeat(np.cumsum(ns) - ns, ns)
+    out[series_of, t_local] = theta + slope * (t_local.astype(np.float64) - start)
+    return out
 
 
 def practical_eps_b(

@@ -297,6 +297,9 @@ _RANS_PROB_BITS = 12
 _RANS_M = 1 << _RANS_PROB_BITS
 _RANS_L = 1 << 16
 _RANS_K = 64  # interleaved states
+# ragged batch: max dense scratch cells (steps x rows x K, ~5 B/cell) before
+# the encoder splits rows into step-count groups to bound memory
+_RANS_DENSE_CELLS = 16 << 20
 
 
 def _rans_normalize_freqs(counts: np.ndarray) -> np.ndarray:
@@ -522,18 +525,196 @@ def _rans_encode_batch(qs: np.ndarray) -> list[bytes]:
     return [b"".join(p) for p in parts]
 
 
-def encode_ints_batch(qs: np.ndarray, backend: str = "rans") -> list[bytes]:
-    """Batched ``encode_ints`` over equal-length rows qs[S, n]; each returned
-    blob is byte-identical to ``encode_ints(qs[s], backend)``.  Only the
-    ``rans`` backend has a genuinely batched fast path; everything else
-    falls back to a per-row loop."""
-    qs = np.ascontiguousarray(qs, dtype=np.int64)
-    if qs.ndim != 2:
-        raise ValueError(f"expected [S, n], got shape {qs.shape}")
-    if backend == "rans":
-        tag = bytes([_BACKENDS["rans"]])
-        return [tag + blob for blob in _rans_encode_batch(qs)]
-    return [encode_ints(q, backend=backend) for q in qs]
+def _rans_encode_batch_ragged(qs: list[np.ndarray]) -> list[bytes]:
+    """Ragged companion to ``_rans_encode_batch``: one blob per stream, each
+    byte-identical to ``_rans_encode(qs[i])``, for streams of ANY mix of
+    lengths.
+
+    Streams shorter than the full interleave width (n < K) use fewer rANS
+    states (the scalar coder's small-stream header saving) and are encoded
+    by the scalar path — they are tiny by definition.  The remaining
+    (stream, plane) rows run through a shared state machine with no
+    per-step masking:
+
+    * rows are sorted by step count so each step operates on the dense
+      prefix of still-active rows — total state-machine work is
+      sum_r steps_r * K, no row pays for a longer row's symbols;
+    * the scratch cube (symbols + renorm masks/words) is dense over
+      [max_steps, rows, K]; when a skewed length mix would blow it past
+      ``_RANS_DENSE_CELLS`` (one huge stream among many short ones), rows
+      are split into power-of-two step-count groups, each padded only to
+      its own longest row — memory then stays proportional to the REAL
+      symbol total (within 2x) at the cost of one extra set of loop
+      iterations, which only the pathological mixes pay;
+    * padded lane positions carry the **identity symbol** (freq = M = 2^12,
+      cum = 0): the rANS transform x -> (x//f << PROB) + x%f + c is then
+      exactly x, and the renorm threshold (f << 20) - 1 wraps to the uint32
+      max so no word is ever emitted — a padded lane is a true no-op, and
+      the inner loop stays byte-for-byte the rectangular machine's."""
+    out: list[bytes | None] = [None] * len(qs)
+    big: list[int] = []
+    for i, q in enumerate(qs):
+        if q.size < _RANS_K:
+            out[i] = _rans_encode(q)
+        else:
+            big.append(i)
+    if not big:
+        return out
+    k = _RANS_K
+    meds = {}
+    zzs = {}
+    rows: list[tuple[int, int]] = []  # (stream index, plane), plane-ascending
+    syms: list[np.ndarray] = []
+    for i in big:
+        q = qs[i]
+        med = int(np.median(q))
+        zz = _zigzag(q - med)
+        meds[i], zzs[i] = med, zz
+        nplanes = max(1, (int(zz.max()).bit_length() + 7) // 8)
+        for p in range(nplanes):
+            rows.append((i, p))
+            syms.append(((zz >> np.uint64(8 * p)) & np.uint64(0xFF)).astype(np.int64))
+    r_count = len(rows)
+    ns = np.array([sy.size for sy in syms], dtype=np.int64)
+    steps_r = -(-ns // k)
+    # per-row outputs, indexed by global row id
+    row_freqs: list[np.ndarray] = [None] * r_count  # type: ignore[list-item]
+    row_states: list[bytes] = [b""] * r_count
+    row_words: list[np.ndarray] = [None] * r_count  # type: ignore[list-item]
+    if int(steps_r.max()) * r_count * k <= _RANS_DENSE_CELLS:
+        groups = [np.arange(r_count)]  # one dense machine: zero work waste
+    else:
+        # geometric step-count groups: within a group max <= 2 * min steps
+        group_of = np.array([int(s).bit_length() for s in steps_r])
+        groups = [np.flatnonzero(group_of == g) for g in np.unique(group_of)]
+    for ids in groups:
+        _rans_encode_row_group(
+            [syms[r] for r in ids], ids, steps_r, k,
+            row_freqs, row_states, row_words,
+        )
+    native_le = np.little_endian
+    parts: dict[int, list[bytes]] = {
+        i: [struct.pack("<qQBB", meds[i], qs[i].size,
+                        max(1, (int(zzs[i].max()).bit_length() + 7) // 8), k)]
+        for i in big
+    }
+    for r in range(r_count):  # original order: planes ascending per stream
+        i, _p = rows[r]
+        freqs = row_freqs[r]
+        present = freqs > 0
+        bitmap = np.packbits(present, bitorder="little")
+        words = row_words[r]
+        parts[i].append(bitmap.tobytes())
+        parts[i].append(freqs.astype("<u2")[present].tobytes())
+        parts[i].append(row_states[r])
+        parts[i].append(struct.pack("<I", words.size))
+        parts[i].append(words.tobytes() if native_le else words.astype("<u2").tobytes())
+    for i in big:
+        out[i] = b"".join(parts[i])
+    return out
+
+
+def _rans_encode_row_group(
+    group_syms: list[np.ndarray],
+    group_ids: np.ndarray,
+    steps_r: np.ndarray,
+    k: int,
+    row_freqs: list,
+    row_states: list,
+    row_words: list,
+) -> None:
+    """Run the interleaved state machine for one step-count group of
+    (stream, plane) rows; results land in the per-row output lists (see
+    ``_rans_encode_batch_ragged`` for the grouping/identity-symbol
+    scheme)."""
+    r_count = len(group_ids)
+    order = np.argsort(-steps_r[group_ids], kind="stable")  # longest first
+    steps_sorted = steps_r[group_ids][order]
+    max_steps = int(steps_sorted[0])
+
+    # per-row tables with a reserved 257th entry: the identity symbol
+    # (freq = M, cum = 0) that padded lane positions carry
+    _ID = 256
+    freqs = np.empty((r_count, 256), dtype=np.int64)
+    sym_mat = np.full((r_count, max_steps * k), _ID, dtype=np.uint16)
+    for pos, j in enumerate(order):
+        sy = group_syms[j]
+        freqs[pos] = _rans_normalize_freqs(np.bincount(sy, minlength=256))
+        sym_mat[pos, : sy.size] = sy
+    cums = np.zeros_like(freqs)
+    np.cumsum(freqs[:, :-1], axis=1, out=cums[:, 1:])
+    f_ext = np.full((r_count, 257), _RANS_M, dtype=np.uint32)
+    f_ext[:, :256] = freqs
+    c_ext = np.zeros((r_count, 257), dtype=np.uint32)
+    c_ext[:, :256] = cums
+    f_flat, c_flat = f_ext.ravel(), c_ext.ravel()
+    row_off = np.arange(r_count, dtype=np.intp)[:, None] * 257
+    # rows active at step t form the sorted prefix [:nr_per_t[t]]
+    nr_per_t = np.count_nonzero(
+        steps_sorted[None, :] > np.arange(max_steps)[:, None], axis=1
+    )
+    sh16 = np.uint32(16)
+    sh_prob = np.uint32(_RANS_PROB_BITS)
+    x = np.full((r_count, k), _RANS_L, dtype=np.uint32)
+    masks = np.zeros((max_steps, r_count, k), dtype=bool)
+    vals = np.zeros((max_steps, r_count, k), dtype=np.uint16)
+    for t in range(max_steps - 1, -1, -1):
+        nr = int(nr_per_t[t])
+        idx = sym_mat[:nr, t * k : (t + 1) * k] + row_off[:nr]
+        f = f_flat[idx]
+        c = c_flat[idx]
+        xa = x[:nr]
+        # same uint32-wrap trick as the rectangular machine: f == 2^12 (the
+        # identity symbol included) shifts to 0 and the -1 wraps to the
+        # uint32 max -> "never renormalize"
+        need = xa > (f << np.uint32(32 - _RANS_PROB_BITS)) - np.uint32(1)
+        masks[t, :nr] = need
+        np.copyto(vals[t, :nr], xa, casting="unsafe")  # truncating low-16 store
+        xa = np.where(need, xa >> sh16, xa)
+        div, rem = np.divmod(xa, f)
+        x[:nr] = (div << sh_prob) + rem + c
+    states32 = x.astype("<u4")
+    for pos, j in enumerate(order):
+        r = int(group_ids[j])
+        row_freqs[r] = freqs[pos]
+        row_states[r] = states32[pos].tobytes()
+        row_words[r] = vals[:, pos, :][masks[:, pos, :]]  # steps asc, lanes asc
+
+
+def encode_ints_batch(
+    qs: np.ndarray | list[np.ndarray], backend: str = "rans"
+) -> list[bytes]:
+    """Batched ``encode_ints`` over rows qs — an [S, n] array (equal-length
+    rows) or a list of 1-D arrays (ragged); each returned blob is
+    byte-identical to ``encode_ints(qs[s], backend)``.  Only the ``rans``
+    backend has a genuinely batched fast path; everything else falls back
+    to a per-row loop."""
+    if isinstance(qs, np.ndarray):
+        qs = np.ascontiguousarray(qs, dtype=np.int64)
+        if qs.ndim != 2:
+            raise ValueError(f"expected [S, n], got shape {qs.shape}")
+        if backend == "rans":
+            tag = bytes([_BACKENDS["rans"]])
+            return [tag + blob for blob in _rans_encode_batch(qs)]
+        return [encode_ints(q, backend=backend) for q in qs]
+    arrs = [
+        q
+        if isinstance(q, np.ndarray)
+        and q.ndim == 1
+        and q.dtype == np.int64
+        and q.flags.c_contiguous
+        else np.ascontiguousarray(np.asarray(q).ravel(), dtype=np.int64)
+        for q in qs
+    ]
+    if not arrs:
+        return []
+    if backend != "rans":
+        return [encode_ints(q, backend=backend) for q in arrs]
+    n0 = arrs[0].size
+    if all(a.size == n0 for a in arrs):  # rectangular in disguise
+        return encode_ints_batch(np.stack(arrs), backend=backend)
+    tag = bytes([_BACKENDS["rans"]])
+    return [tag + blob for blob in _rans_encode_batch_ragged(arrs)]
 
 
 def _rans_decode(data: bytes) -> np.ndarray:

@@ -92,26 +92,55 @@ def fluctuation_table(
     values: np.ndarray,
     delta_global: np.ndarray,
     config: ShrinkConfig,
+    lengths: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Vectorized Alg. 2 for a batch of series: the (level, eps_hat) that
     ``divide`` would compute for a cone starting at every (series, index).
 
     values:       [S, T] float64.
     delta_global: [S] per-series global max - min.
+    lengths:      optional [S] valid sample count per row (ragged lanes,
+                  padded to T).  Each row gets its own interval length
+                  ``L = default_interval_length(lengths[s])`` and its
+                  division windows truncate at ``lengths[s]`` — exactly as
+                  if the row were scanned alone at its true length.
+                  Entries at positions >= lengths[s] are meaningless (the
+                  ragged cone scan masks them).
 
     Returns (levels int64 [S, T], eps_hat float64 [S, T]), bit-identical to
-    calling ``divide(values[s], t, L, delta_global[s], config)`` pointwise.
+    calling ``divide(values[s, :n_s], t, L_s, delta_global[s], config)``
+    pointwise for every valid (s, t).
     """
     values = np.asarray(values, dtype=np.float64)
     s, t = values.shape
     if t == 0:
         z = np.zeros((s, 0))
         return z.astype(np.int64), z
-    w = max(default_interval_length(t, config), 2)
-    dmax = _sliding_forward(values, w, np.maximum, -math.inf)
-    dmin = _sliding_forward(values, w, np.minimum, math.inf)
+    if lengths is None:
+        w = max(default_interval_length(t, config), 2)
+        dmax = _sliding_forward(values, w, np.maximum, -math.inf)
+        dmin = _sliding_forward(values, w, np.minimum, math.inf)
+    else:
+        lengths = np.asarray(lengths, dtype=np.int64)
+        # Truncate windows at each row's end by substituting non-constraining
+        # values past it: -inf never raises a max, +inf never lowers a min —
+        # the same semantics as the window slice stopping at the series end.
+        pad_mask = np.arange(t)[None, :] >= lengths[:, None]
+        vmax_in = np.where(pad_mask, -math.inf, values)
+        vmin_in = np.where(pad_mask, math.inf, values)
+        dmax = np.empty_like(values)
+        dmin = np.empty_like(values)
+        ws = np.array([max(default_interval_length(int(n), config), 2) for n in lengths])
+        for w in np.unique(ws):
+            rows = np.flatnonzero(ws == w)
+            dmax[rows] = _sliding_forward(vmax_in[rows], int(w), np.maximum, -math.inf)
+            dmin[rows] = _sliding_forward(vmin_in[rows], int(w), np.minimum, math.inf)
     delta_local = dmax - dmin
     delta_local[:, -1] = 0.0  # size-1 window -> divide() reports 0
+    if lengths is not None:
+        valid = np.flatnonzero(lengths > 0)
+        delta_local[valid, lengths[valid] - 1] = 0.0
+        delta_local[pad_mask] = 0.0  # masked positions: keep finite
     dg = np.asarray(delta_global, dtype=np.float64)[:, None]
     beta = np.clip(
         np.divide(delta_local, dg, out=np.zeros_like(delta_local), where=dg > 0),

@@ -61,16 +61,47 @@ def quantize_residuals(r: np.ndarray, eps_r: float) -> ResidualStream:
     )
 
 
-def quantize_residuals_batch(r: np.ndarray, eps_r: float) -> list[ResidualStream]:
+def quantize_residuals_batch(
+    r: np.ndarray, eps_r: float, lengths: np.ndarray | None = None
+) -> list[ResidualStream]:
     """Batched lossy path over rows r[S, T]; stream i is byte-identical to
-    ``quantize_residuals(r[i], eps_r)``."""
+    ``quantize_residuals(r[i], eps_r)`` — or, with ``lengths`` (ragged rows
+    padded to T), to ``quantize_residuals(r[i, :lengths[i]], eps_r)``:
+    the per-row minimum is taken over the valid prefix only and each q
+    stream is cut at its row's length, so padding never reaches the
+    entropy coder."""
     if eps_r <= 0:
         raise ValueError("eps_r must be positive for the lossy path")
     r = np.asarray(r, dtype=np.float64)
-    q, r_lo = _quantize_midpoint_rows(r, eps_r)
+    if lengths is None:
+        q, r_lo = _quantize_midpoint_rows(r, eps_r)
+        return [
+            ResidualStream(
+                eps_r=eps_r, step=2.0 * eps_r, r_lo=float(r_lo[i]), mode="midpoint", q=q[i]
+            )
+            for i in range(r.shape[0])
+        ]
+    ns = np.asarray(lengths, dtype=np.int64)
+    pad = np.arange(r.shape[1])[None, :] >= ns[:, None]
+    # pad with 0.0 so every elementwise op below stays finite; the per-row
+    # min ignores padding via +inf substitution (exact same float result as
+    # min over the unpadded slice)
+    r = np.where(pad, 0.0, r)
+    step = 2.0 * eps_r
+    r_lo = np.where(
+        ns > 0, np.where(pad, np.inf, r).min(axis=1, initial=np.inf), 0.0
+    )
+    q = np.floor((r - r_lo[:, None]) / step).astype(np.int64)
+    deq = r_lo[:, None] + (q.astype(np.float64) + 0.5) * step
+    q += (r - deq) > step / 2
+    q -= (deq - r) > step / 2
     return [
         ResidualStream(
-            eps_r=eps_r, step=2.0 * eps_r, r_lo=float(r_lo[i]), mode="midpoint", q=q[i]
+            eps_r=eps_r,
+            step=step,
+            r_lo=float(r_lo[i]),
+            mode="midpoint",
+            q=q[i, : ns[i]].copy(),
         )
         for i in range(r.shape[0])
     ]
@@ -99,16 +130,28 @@ def quantize_exact(
 
 
 def quantize_exact_batch(
-    values: np.ndarray, preds: np.ndarray, decimals: int
+    values: np.ndarray, preds: np.ndarray, decimals: int,
+    lengths: np.ndarray | None = None,
 ) -> list[ResidualStream]:
     """Batched lossless path over rows values/preds[S, T]; stream i is
-    byte-identical to ``quantize_exact(values[i], ..., pred=preds[i])``."""
+    byte-identical to ``quantize_exact(values[i], ..., pred=preds[i])``.
+    With ``lengths`` (ragged rows padded to T) each q stream is cut at its
+    row's length; the quantization itself is elementwise, so padding never
+    influences the valid symbols."""
     scale = 10.0**decimals
     v_int = np.round(np.asarray(values, dtype=np.float64) * scale).astype(np.int64)
     p_int = np.round(preds * scale).astype(np.int64)
     q = v_int - p_int
+    if lengths is None:
+        return [
+            ResidualStream(eps_r=0.0, step=1.0 / scale, r_lo=0.0, mode="exact", q=q[i])
+            for i in range(v_int.shape[0])
+        ]
+    ns = np.asarray(lengths, dtype=np.int64)
     return [
-        ResidualStream(eps_r=0.0, step=1.0 / scale, r_lo=0.0, mode="exact", q=q[i])
+        ResidualStream(
+            eps_r=0.0, step=1.0 / scale, r_lo=0.0, mode="exact", q=q[i, : ns[i]].copy()
+        )
         for i in range(v_int.shape[0])
     ]
 

@@ -49,6 +49,8 @@ _INF = math.inf
 
 
 def global_range(values: np.ndarray) -> tuple[float, float]:
+    if values.size == 0:  # empty series compress to an empty base
+        return 0.0, 0.0
     return float(values.min()), float(values.max())
 
 
@@ -158,7 +160,10 @@ def extract_semantics(
 
 
 def extract_semantics_batch(
-    values: np.ndarray, config: ShrinkConfig, chunk: int = 256
+    values: np.ndarray,
+    config: ShrinkConfig,
+    chunk: int = 256,
+    lengths: np.ndarray | None = None,
 ) -> list[list[Segment]]:
     """Multi-series cone scan: values[S, T] -> one segment list per series.
 
@@ -168,6 +173,13 @@ def extract_semantics_batch(
     the new segment start masked to non-constraining candidates.  The chunk
     length adapts to the observed break density (long segments -> bigger
     chunks); the output is invariant to chunking.
+
+    ``lengths`` makes the lanes ragged: row s holds a series of
+    ``lengths[s]`` real samples padded to T.  Positions past a row's length
+    are masked to non-constraining candidates (the padding can never break
+    or extend a cone) and the final segment closes at the row's own end, so
+    each row's output is bit-identical to ``extract_semantics`` on its
+    unpadded slice — padding never leaks into cones.
     """
     values = np.asarray(values, dtype=np.float64)
     if values.ndim != 2:
@@ -176,20 +188,35 @@ def extract_semantics_batch(
     out: list[list[Segment]] = [[] for _ in range(s)]
     if n == 0 or s == 0:
         return out
-    delta_global = values.max(axis=1) - values.min(axis=1)
-    levels_tab, eps_tab = fluctuation_table(values, delta_global, config)
+    if lengths is None:
+        ns = np.full(s, n, dtype=np.int64)
+        delta_global = values.max(axis=1) - values.min(axis=1)
+        levels_tab, eps_tab = fluctuation_table(values, delta_global, config)
+    else:
+        ns = np.asarray(lengths, dtype=np.int64)
+        if ns.shape != (s,):
+            raise ValueError(f"lengths must be [S]={s}, got shape {ns.shape}")
+        if (ns < 0).any() or (ns > n).any():
+            raise ValueError(f"lengths must lie in [0, T={n}]")
+        pad_mask = np.arange(n)[None, :] >= ns[:, None]
+        vmax_in = np.where(pad_mask, -_INF, values)
+        vmin_in = np.where(pad_mask, _INF, values)
+        delta_global = np.where(ns > 0, vmax_in.max(axis=1) - vmin_in.min(axis=1), 0.0)
+        levels_tab, eps_tab = fluctuation_table(values, delta_global, config, lengths=ns)
+    live = ns > 0  # rows with no samples emit no segments
 
     seg_level = levels_tab[:, 0].copy()
-    eps = eps_tab[:, 0].copy()
+    eps = np.where(live, eps_tab[:, 0], 1.0)  # dead rows: any finite eps
     theta = np.floor(values[:, 0] / eps) * eps
     t0 = np.zeros(s, dtype=np.int64)
     psi_lo = np.full(s, -_INF)
     psi_hi = np.full(s, _INF)
 
     c0 = 1
-    while c0 < n:
-        c1 = min(n, c0 + chunk)
-        active = np.arange(s)
+    n_scan = int(ns.max()) if s else 0
+    while c0 < n_scan:
+        c1 = min(n_scan, c0 + chunk)
+        active = np.flatnonzero(ns > c0)  # rows with real samples in this chunk
         lo0 = c0  # re-scans only need positions past the earliest new segment
         breaks = 0
         while active.size:
@@ -202,6 +229,9 @@ def extract_semantics_batch(
                 hi = (v + (ep - th)) / dt
                 lo = (v - (ep + th)) / dt
             pre = dt <= 0  # positions at/before the segment start: no constraint
+            if lengths is not None:
+                # ragged lanes: padding is likewise non-constraining
+                pre = pre | (ts[None, :] >= ns[active][:, None])
             if pre.any():
                 hi[pre] = _INF
                 lo[pre] = -_INF
@@ -247,10 +277,10 @@ def extract_semantics_batch(
         if breaks == 0:
             chunk = min(chunk * 2, 65536)
         else:  # aim for ~2x the observed mean segment length
-            mean_len = (c1 - c0) * s / breaks
+            mean_len = (c1 - c0) * max(int(np.count_nonzero(ns > c0)), 1) / breaks
             chunk = int(min(max(2 * mean_len, 128), 65536))
         c0 = c1
-    for a in range(s):
+    for a in np.flatnonzero(live):
         out[a].append(
             Segment(
                 theta=float(theta[a]),
@@ -258,7 +288,7 @@ def extract_semantics_batch(
                 psi_lo=float(psi_lo[a]),
                 psi_hi=float(psi_hi[a]),
                 t0=int(t0[a]),
-                length=int(n - t0[a]),
+                length=int(ns[a] - t0[a]),
             )
         )
     return out
@@ -268,11 +298,20 @@ _SPAN_SENTINEL = 1e38  # kernel spans at/beyond this magnitude mean "unbounded"
 
 
 def extract_semantics_batch_pallas(
-    values: np.ndarray, config: ShrinkConfig, block_t: int = 256
+    values: np.ndarray,
+    config: ShrinkConfig,
+    block_t: int = 256,
+    lengths: np.ndarray | None = None,
 ) -> list[list[Segment]]:
     """Multi-series cone scan routed through the lane-parallel Pallas kernel
     (``kernels.cone_scan``) with segment compaction done in XLA; only the
     final Segment materialization happens on the host.
+
+    ``lengths`` activates the kernel's valid-length mask path for ragged
+    lanes: row s carries ``lengths[s]`` real samples padded to T, the
+    in-kernel mask freezes a lane's cone state past its length (padding
+    can never break, constrain, or seed a cone), and each row's segments
+    partition [0, lengths[s]).
 
     The device scan runs in float32 (TPU-native), so — unlike
     ``extract_semantics_batch`` — segment spans can differ from the float64
@@ -287,16 +326,35 @@ def extract_semantics_batch_pallas(
     s, n = values.shape
     if n == 0 or s == 0:
         return [[] for _ in range(s)]
-    delta_global = values.max(axis=1) - values.min(axis=1)
-    levels_tab, eps_tab = fluctuation_table(values, delta_global, config)
+    if lengths is None:
+        ns = np.full(s, n, dtype=np.int64)
+        delta_global = values.max(axis=1) - values.min(axis=1)
+        levels_tab, eps_tab = fluctuation_table(values, delta_global, config)
+    else:
+        ns = np.asarray(lengths, dtype=np.int64)
+        if ns.shape != (s,):
+            raise ValueError(f"lengths must be [S]={s}, got shape {ns.shape}")
+        if (ns < 1).any() or (ns > n).any():
+            raise ValueError(
+                "pallas route needs lengths in [1, T]; route empty series "
+                "around the kernel (compress_batch does)"
+            )
+        pad_mask = np.arange(n)[None, :] >= ns[:, None]
+        # benign padding for the device scan: repeat each row's last real
+        # value (the kernel masks these positions; repeats just keep every
+        # float op finite in float32)
+        values = np.where(pad_mask, values[np.arange(s), ns - 1][:, None], values)
+        vmax_in = np.where(pad_mask, -_INF, values)
+        vmin_in = np.where(pad_mask, _INF, values)
+        delta_global = vmax_in.max(axis=1) - vmin_in.min(axis=1)
+        levels_tab, eps_tab = fluctuation_table(values, delta_global, config, lengths=ns)
+        eps_tab = np.where(pad_mask, eps_tab[np.arange(s), ns - 1][:, None], eps_tab)
     bt = min(block_t, n)
     x = values
     eps_in = eps_tab
     if n % bt:
-        # pad by repeating the last column so the grid stays block_t-wide.
-        # Repeated values only tighten (never widen) the final cone, so real
-        # points keep their eps guarantee; pad-region segments are dropped
-        # below and the tail segment is re-clamped to n.
+        # pad by repeating the last column so the grid stays block_t-wide;
+        # the kernel's valid-length mask keeps the pad region inert.
         pad = bt - (n % bt)
         x = np.concatenate([x, np.repeat(x[:, -1:], pad, axis=1)], axis=1)
         eps_in = np.concatenate([eps_in, np.repeat(eps_in[:, -1:], pad, axis=1)], axis=1)
@@ -306,16 +364,18 @@ def extract_semantics_batch_pallas(
             np.ascontiguousarray(x.T, dtype=np.float32),
             np.ascontiguousarray(eps_in.T, dtype=np.float32),
             block_t=bt,
+            lengths=ns,
         )
     )
     out: list[list[Segment]] = []
     for a in range(s):
+        n_a = int(ns[a])
         c = int(counts[a])
         starts = t0s[:c, a].astype(np.int64)
-        keep = starts < n  # drop segments born inside the padded tail
+        keep = starts < n_a  # defensive: masked lanes cannot break past n_a
         starts = starts[keep]
         c = starts.size
-        ends = np.minimum(np.append(starts[1:], n), n)
+        ends = np.minimum(np.append(starts[1:], n_a), n_a)
         plo = lo[:c, a].astype(np.float64)
         phi = hi[:c, a].astype(np.float64)
         plo[plo <= -_SPAN_SENTINEL] = -_INF

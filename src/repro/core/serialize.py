@@ -1,64 +1,14 @@
 """Byte-level serialization of the SHRINK knowledge base and residuals.
 
 Compression ratios in the paper are measured on real bytes; so are ours.
-Layout (little-endian):
+This module implements the ``SHRB`` base blob, the ``SHRR`` residual blob,
+and the ``SHRKS`` framed stream container (append-only frames, directory +
+knowledge base in a CRC'd footer, fixed 16-byte tail).
 
-Base blob:
-    magic  b"SHRB"
-    u8     version
-    varint n
-    f64    eps_b, f64 lam, u8 beta_levels
-    f64    vmin, f64 vmax
-    varint k (number of sub-bases)
-    per sub-base:
-        u8      level
-        svarint origin grid index (delta vs previous subbase, same-level grid)
-        u8      slope_digits (0..13; 255 = raw f64 follows)
-        svarint slope scaled int   (or f64 if raw)
-        varint  m (number of member segments)
-        varint  t0 deltas (ascending within the sub-base)
-    (All varints are LEB128; svarint = zigzag LEB128.  Segment lengths are
-    NOT stored: segments partition [0, n), so sorting all start indices
-    globally reconstructs every length — the same trick Sim-Piece uses.)
-
-Residual blob:
-    magic  b"SHRR"
-    u8     mode (0=midpoint, 1=exact)
-    f64    eps_r, f64 step, f64 r_lo
-    entropy-coded q (see entropy.py, self-describing)
-
-Framed stream container (``SHRKS`` — the streaming-ingest wire format;
-frames are appended as they seal, the directory + knowledge base land in a
-footer at finalize so a writer never rewrites emitted bytes, and a reader
-doing a range query touches only the frames that overlap):
-
-    +---------+--------------------------------------------------------+
-    | section | layout (little-endian; varint = LEB128)                |
-    +=========+========================================================+
-    | head    | magic b"SHRKS", u8 version (=1)                        |
-    +---------+--------------------------------------------------------+
-    | frames  | concatenated frame payloads; each payload is a         |
-    |         | complete one-shot ``SHRK`` container (cs_to_bytes) of  |
-    |         | that frame's sample slice                              |
-    +---------+--------------------------------------------------------+
-    | footer  | varint n_frames, then per frame:                       |
-    |         |   varint series_id                                     |
-    |         |   varint t_lo          (abs sample index, inclusive)   |
-    |         |   varint t_hi - t_lo   (frame sample count)            |
-    |         |   varint kb_epoch      (KB entry count at seal time)   |
-    |         |   varint offset        (payload start, from byte 0)    |
-    |         |   varint length        (payload byte count)            |
-    |         |   u32    crc32(payload)                                |
-    |         | varint kb_len, kb_bytes (KnowledgeBase.to_bytes; may   |
-    |         | be empty)                                              |
-    +---------+--------------------------------------------------------+
-    | tail    | u64 footer_offset, u32 crc32(footer), magic b"SHRE"    |
-    |         | (fixed 16 bytes -> a reader seeks here first)          |
-    +---------+--------------------------------------------------------+
-
-Per-frame payload CRCs are verified lazily — only when a range query
-actually decodes the frame — so corruption in cold frames never blocks
-queries against healthy ones.
+**The normative byte-layout spec — field tables, CRC rules, version-bump
+procedure, golden-fixture regeneration — lives in
+``docs/wire-format.md``.**  Change bytes only together with that document
+and the golden fixtures under ``tests/golden/``.
 """
 from __future__ import annotations
 
@@ -238,13 +188,18 @@ def encode_residuals(stream: ResidualStream, backend: str = "best") -> bytes:
 
 
 def encode_residuals_batch(streams: list[ResidualStream], backend: str = "best") -> list[bytes]:
-    """Batched ``encode_residuals`` for equal-length streams.  The entropy
-    stage runs through ``entropy.encode_ints_batch`` (one vectorized rANS
-    pass for the whole batch on that backend); each returned blob is
-    byte-identical to ``encode_residuals(streams[i], backend)``."""
+    """Batched ``encode_residuals`` for a mix of stream lengths.  The
+    entropy stage runs through ``entropy.encode_ints_batch`` — one
+    vectorized rANS pass for the whole batch when lengths agree, the masked
+    ragged machine otherwise; each returned blob is byte-identical to
+    ``encode_residuals(streams[i], backend)``."""
     if not streams:
         return []
-    qs = np.stack([st.q for st in streams])
+    n0 = streams[0].q.size
+    if all(st.q.size == n0 for st in streams):
+        qs: np.ndarray | list[np.ndarray] = np.stack([st.q for st in streams])
+    else:
+        qs = [st.q for st in streams]
     blobs = entropy.encode_ints_batch(qs, backend=backend)
     return [_residual_header(st) + blob for st, blob in zip(streams, blobs)]
 

@@ -8,8 +8,10 @@ Usage:
     exact = codec.decompress_at(cs, 0.0)                     # lossless
     blob  = cs_to_bytes(cs); cs2 = cs_from_bytes(blob)
 
-    # gateway-scale: S series of equal length in one vectorized pass
+    # gateway-scale: S series in one vectorized pass — equal-length [S, T]
+    # or a ragged list of 1-D arrays (length-bucketed, masked lanes)
     css   = codec.compress_batch(values_st, eps_targets=[1e-2])   # [S, T]
+    css   = codec.compress_batch([v1, v2, v3], eps_targets=[1e-2])  # ragged
 
 ``eps == 0.0`` denotes the lossless stream (requires ``decimals``: the fixed
 decimal precision of the source data, Table II's "Decimal" column).
@@ -26,6 +28,7 @@ import numpy as np
 from .base import (
     base_predictions,
     base_predictions_batch,
+    base_predictions_ragged,
     construct_base,
     practical_eps_b,
 )
@@ -132,28 +135,43 @@ class ShrinkCodec:
 
     def compress_batch(
         self,
-        values: np.ndarray,
+        values: np.ndarray | list[np.ndarray],
         eps_targets: list[float],
         decimals: int | None = None,
         semantics: str = "auto",
+        lengths: np.ndarray | None = None,
+        max_buckets: int = 4,
     ) -> list[CompressedSeries]:
-        """Batched Alg. 1 over S independent equal-length series values[S, T].
+        """Batched Alg. 1 over S independent series — rectangular or ragged.
 
-        Semantics extraction for all series runs as one multi-series cone
-        scan — the lane-parallel Pallas kernel with XLA segment compaction
-        on TPU, a chunked-vectorized numpy scan elsewhere — and residual
-        quantization plus the rANS entropy pass are batched across series.
-        With ``semantics="numpy"`` (the off-TPU default) every output is
-        byte-identical to ``[self.compress(v, ...) for v in values]``.
+        Accepted inputs:
+        * ``values[S, T]`` ndarray — S equal-length series (the PR 1 fast
+          path, unchanged);
+        * ``values[S, T]`` + ``lengths[S]`` — ragged lanes padded to T, row
+          i holding ``lengths[i]`` real samples;
+        * a list of 1-D arrays of ANY mix of lengths (including empty and
+          length-1 series) — the gateway's real multi-sensor regime.
+
+        Ragged inputs are length-bucketed into ≤ ``max_buckets`` padded
+        lanes (percentile buckets over the sorted lengths, so each bucket
+        holds similarly sized series and padding waste stays bounded) and
+        every stage runs the valid-length mask path: the multi-series cone
+        scan carries per-lane segment IDs/lengths so padding never leaks
+        into cones, residual quantization cuts each stream at its series'
+        end, and ALL streams of all buckets share one rANS entropy pass
+        (the masked ragged state machine).
+
+        Semantics extraction runs as one multi-series cone scan per bucket —
+        the lane-parallel Pallas kernel with XLA segment compaction on TPU,
+        a chunked-vectorized numpy scan elsewhere.  With
+        ``semantics="numpy"`` (the off-TPU default) every output is
+        byte-identical to ``[self.compress(v, ...) for v in values]``,
+        ragged or not (property-tested in tests/test_ragged_property.py).
 
         semantics: "auto" (pallas on TPU, numpy otherwise) | "numpy" |
         "pallas" (force the kernel route, e.g. for testing in interpret
         mode).
         """
-        values = np.asarray(values, dtype=np.float64)
-        if values.ndim != 2:
-            raise ValueError(f"expected values[S, T], got shape {values.shape}")
-        s, n = values.shape
         if semantics == "auto":
             # Only consult jax if something already imported it: forcing the
             # import costs ~1s, and a process that never touched jax is not
@@ -164,12 +182,52 @@ class ShrinkCodec:
             except Exception:
                 on_tpu = False
             semantics = "pallas" if on_tpu else "numpy"
-        if semantics == "pallas":
-            seg_lists = extract_semantics_batch_pallas(values, self.config)
-        elif semantics == "numpy":
-            seg_lists = extract_semantics_batch(values, self.config)
-        else:
+        if semantics not in ("numpy", "pallas"):
             raise ValueError(f"unknown semantics impl {semantics!r}")
+
+        if isinstance(values, (list, tuple)):
+            if lengths is not None:
+                raise ValueError("pass lengths only with a padded [S, T] array")
+            arrs = [np.asarray(v, dtype=np.float64).ravel() for v in values]
+            ns = np.array([a.size for a in arrs], dtype=np.int64)
+            if ns.size and (ns == ns[0]).all():  # rectangular in disguise
+                return self._compress_batch_rect(
+                    np.stack(arrs) if ns[0] else np.zeros((ns.size, 0)),
+                    eps_targets, decimals, semantics,
+                )
+            return self._compress_batch_ragged(arrs, ns, eps_targets, decimals,
+                                               semantics, max_buckets)
+        values = np.asarray(values, dtype=np.float64)
+        if values.ndim != 2:
+            raise ValueError(f"expected values[S, T], got shape {values.shape}")
+        if lengths is not None:
+            ns = np.asarray(lengths, dtype=np.int64).ravel()
+            if ns.shape != (values.shape[0],):
+                raise ValueError(
+                    f"lengths must be [S]={values.shape[0]}, got shape {ns.shape}"
+                )
+            if (ns < 0).any() or (ns > values.shape[1]).any():
+                raise ValueError(f"lengths must lie in [0, T={values.shape[1]}]")
+            if (ns == values.shape[1]).all():
+                return self._compress_batch_rect(values, eps_targets, decimals, semantics)
+            arrs = [values[i, : ns[i]] for i in range(values.shape[0])]
+            return self._compress_batch_ragged(arrs, ns, eps_targets, decimals,
+                                               semantics, max_buckets)
+        return self._compress_batch_rect(values, eps_targets, decimals, semantics)
+
+    def _compress_batch_rect(
+        self,
+        values: np.ndarray,
+        eps_targets: list[float],
+        decimals: int | None,
+        semantics: str,
+    ) -> list[CompressedSeries]:
+        """The equal-length fast path: one full-width scan, no masks."""
+        s, n = values.shape
+        if semantics == "pallas" and n:
+            seg_lists = extract_semantics_batch_pallas(values, self.config)
+        else:
+            seg_lists = extract_semantics_batch(values, self.config)
 
         vmins = values.min(axis=1) if n else np.zeros(s)
         vmaxs = values.max(axis=1) if n else np.zeros(s)
@@ -201,6 +259,105 @@ class ShrinkCodec:
                 todo.extend((int(i), eps, streams[j]) for j, i in enumerate(need))
         # one entropy pass for every stream of every target: the rANS batch
         # interleaves all of them into a single vectorized state machine
+        blobs = encode_residuals_batch([st for _, _, st in todo], backend=self.backend)
+        for (i, eps, _), blob in zip(todo, blobs):
+            residuals[i][eps] = blob
+        return [
+            CompressedSeries(
+                base=bases[i],
+                base_bytes=base_bytes[i],
+                residual_bytes=residuals[i],
+                eps_b_practical=float(eps_hats[i]),
+            )
+            for i in range(s)
+        ]
+
+    def _compress_batch_ragged(
+        self,
+        arrs: list[np.ndarray],
+        ns: np.ndarray,
+        eps_targets: list[float],
+        decimals: int | None,
+        semantics: str,
+        max_buckets: int,
+    ) -> list[CompressedSeries]:
+        """Mixed-length lanes: percentile length-buckets, masked scans, one
+        shared entropy pass.  Byte-identical (numpy semantics) to a
+        per-series ``compress`` loop."""
+        if 0.0 in eps_targets and decimals is None:
+            raise ValueError("lossless stream requires `decimals`")
+        if max_buckets < 1:
+            raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
+        s = len(arrs)
+        bases: list[Base | None] = [None] * s
+        base_bytes: list[bytes | None] = [None] * s
+        eps_hats = np.zeros(s)
+        residuals: list[dict[float, bytes | None]] = [{} for _ in range(s)]
+        todo: list[tuple[int, float, ResidualStream]] = []  # (series, eps, stream)
+
+        nonempty = np.flatnonzero(ns > 0)
+        for i in np.flatnonzero(ns == 0):
+            # an empty series carries an empty base and empty/absent streams;
+            # no batching to be had
+            b = construct_base([], 0, 0.0, 0.0, self.config)
+            cs = encode_with_base(arrs[i], b, eps_targets, decimals, backend=self.backend)
+            bases[i], base_bytes[i] = cs.base, cs.base_bytes
+            residuals[i] = cs.residual_bytes
+            eps_hats[i] = cs.eps_b_practical
+
+        # percentile buckets: equal-count groups of the length-sorted series,
+        # each padded to its own max — bounded padding waste for any spread
+        order = nonempty[np.argsort(ns[nonempty], kind="stable")]
+        buckets = (
+            [b for b in np.array_split(order, min(max_buckets, order.size)) if b.size]
+            if order.size
+            else []
+        )
+        for bucket in buckets:
+            nb = ns[bucket]
+            t_pad = int(nb.max())
+            vals = np.zeros((bucket.size, t_pad))
+            for row, i in enumerate(bucket):
+                vals[row, : nb[row]] = arrs[i]
+            if semantics == "pallas":
+                seg_lists = extract_semantics_batch_pallas(vals, self.config, lengths=nb)
+            else:
+                seg_lists = extract_semantics_batch(vals, self.config, lengths=nb)
+            valid = np.arange(t_pad)[None, :] < nb[:, None]
+            vmins = np.where(valid, vals, np.inf).min(axis=1)
+            vmaxs = np.where(valid, vals, -np.inf).max(axis=1)
+            bkt_bases = [
+                construct_base(
+                    seg_lists[row], int(nb[row]), float(vmins[row]), float(vmaxs[row]),
+                    self.config,
+                )
+                for row in range(bucket.size)
+            ]
+            preds = base_predictions_ragged(bkt_bases, t_pad)
+            r = vals - preds
+            bkt_eps_hats = np.abs(np.where(valid, r, 0.0)).max(axis=1)
+            for row, i in enumerate(bucket):
+                bases[i] = bkt_bases[row]
+                base_bytes[i] = encode_base(bkt_bases[row])
+                eps_hats[i] = bkt_eps_hats[row]
+            for eps in eps_targets:
+                if eps == 0.0:
+                    streams = quantize_exact_batch(vals, preds, decimals, lengths=nb)
+                    todo.extend(
+                        (int(i), 0.0, streams[row]) for row, i in enumerate(bucket)
+                    )
+                    continue
+                for i in bucket:
+                    residuals[i][eps] = None  # base-only unless quantized below
+                need = np.flatnonzero(eps < bkt_eps_hats)
+                if need.size:
+                    streams = quantize_residuals_batch(r[need], eps, lengths=nb[need])
+                    todo.extend(
+                        (int(bucket[row]), eps, streams[j])
+                        for j, row in enumerate(need)
+                    )
+        # ONE entropy pass across every stream of every bucket and target:
+        # the ragged rANS machine interleaves all of them
         blobs = encode_residuals_batch([st for _, _, st in todo], backend=self.backend)
         for (i, eps, _), blob in zip(todo, blobs):
             residuals[i][eps] = blob
@@ -274,7 +431,8 @@ def encode_with_base(
 
 
 def cs_to_bytes(cs: CompressedSeries) -> bytes:
-    """Container: base + directory of residual streams."""
+    """``SHRK`` container: base + directory of residual streams (normative
+    byte layout in docs/wire-format.md)."""
     buf = bytearray()
     buf += _CONTAINER_MAGIC
     buf += struct.pack("<dI", cs.eps_b_practical, len(cs.base_bytes))

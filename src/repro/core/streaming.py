@@ -13,7 +13,7 @@ provides it:
   chunk boundaries, so segment breaks — and therefore every downstream
   byte — are identical to the one-shot scan over the concatenated data.
   Sealed frames accumulate; ``finalize()`` emits a ``SHRKS`` framed
-  container (layout table in ``serialize.py``).
+  container (normative layout in docs/wire-format.md).
 
 * ``KnowledgeBase`` — the gateway-resident dictionary of semantic lines
   (fluctuation level, origin grid index, slope).  Every sealed frame's
@@ -183,7 +183,7 @@ class KnowledgeBase:
             "dedup_ratio": total_refs / len(self.entries) if self.entries else 1.0,
         }
 
-    # -- spill / restore ----------------------------------------------- #
+    # -- spill / restore (SHKB blob; byte layout in docs/wire-format.md) - #
     def to_bytes(self) -> bytes:
         buf = bytearray()
         buf += _KB_MAGIC

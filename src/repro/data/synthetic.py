@@ -20,7 +20,7 @@ from typing import Callable
 
 import numpy as np
 
-__all__ = ["DatasetSpec", "DATASETS", "load", "household_power"]
+__all__ = ["DatasetSpec", "DATASETS", "load", "household_power", "ragged_sensor_traffic"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,6 +184,41 @@ def household_power(rng_seed: int, n: int, noise_sigma: float = 0.1) -> np.ndarr
         i += m
     out = out + rng.normal(0.0, noise_sigma, size=n)
     return np.round(out, 3)
+
+
+def ragged_sensor_traffic(
+    s: int,
+    ticks: int,
+    rate_lo: float = 2.0,
+    rate_hi: float = 512.0,
+    seed: int = 0,
+) -> list[list[tuple[int, np.ndarray]]]:
+    """Heterogeneous-rate gateway traffic: ``s`` sensors whose per-tick
+    publish rates are drawn log-uniform over [rate_lo, rate_hi] (~2.5
+    decades by default — the ragged regime of Sprintz, arXiv:1808.02515).
+    Each tick, sensor ``sid`` emits ``Poisson(rate_sid)`` samples of its
+    random walk (plus measurement noise, rounded to 4 decimals).
+
+    Returns one list per tick of ``(sid, chunk)`` deliveries (zero-sample
+    ticks omitted).  Shared by ``launch/serve.py --mode ingest`` and
+    ``benchmarks/bench_ragged.py`` so the demo and the benchmark always
+    simulate the same workload.
+    """
+    rng = np.random.default_rng(seed)
+    rates = np.exp(rng.uniform(np.log(rate_lo), np.log(rate_hi), size=s))
+    walks = np.zeros(s)
+    out: list[list[tuple[int, np.ndarray]]] = []
+    for _ in range(ticks):
+        tick: list[tuple[int, np.ndarray]] = []
+        for sid in range(s):
+            n = int(rng.poisson(rates[sid]))
+            if n == 0:
+                continue
+            chunk = walks[sid] + np.cumsum(rng.standard_normal(n) * 0.03)
+            walks[sid] = chunk[-1]
+            tick.append((sid, np.round(chunk + rng.standard_normal(n) * 0.01, 4)))
+        out.append(tick)
+    return out
 
 
 _SPECS = [

@@ -13,6 +13,13 @@ idiomatic equivalent exploits two facts:
    so every per-point update is a (1, S) vector op on the VPU.  The serial
    dimension is only T/BT grid steps × BT in-kernel iterations.
 
+Ragged lanes (the gateway's real regime — series lengths span orders of
+magnitude) ride the same kernel through the **valid-length mask path**: a
+per-lane length vector freezes a lane's cone state at positions
+``t >= lengths[s]``, so padding can never constrain, break, or seed a cone
+and the final-span carry reflects the open segment at each lane's own end.
+A lane with ``lengths[s] == T`` behaves exactly as the unmasked scan.
+
 Outputs are dense per-point arrays (break flags + segment records at break
 positions); the variable-length segment compaction (a cumsum gather) happens
 in XLA outside the kernel, as does base merging on the host.
@@ -34,6 +41,7 @@ _BIG = 3.4e38
 def _cone_scan_kernel(
     x_ref,
     eps_ref,
+    len_ref,  # (1, S) int32: valid samples per lane
     brk_ref,
     theta_ref,
     lo_out_ref,
@@ -58,6 +66,8 @@ def _cone_scan_kernel(
         state_f_ref[3, :] = e0
         state_i_ref[0, :] = jnp.zeros((s,), jnp.int32)
 
+    lengths = len_ref[0, :]
+
     def body(r, carry):
         theta, lo, hi, eps_seg, t0 = carry
         t = i * block_t + r
@@ -69,7 +79,8 @@ def _cone_scan_kernel(
         cand_lo = (v - eps_seg - theta) / denom
         # dt == 0 is the segment's own start point (only t == 0 reaches here):
         # it defines theta, not a slope constraint — matching the host scan.
-        grow = dt > 0
+        # t >= lengths is a padded position: it freezes the lane entirely.
+        grow = (dt > 0) & (t < lengths)
         new_hi = jnp.where(grow, jnp.minimum(hi, cand_hi), hi)
         new_lo = jnp.where(grow, jnp.maximum(lo, cand_lo), lo)
         brk = (new_lo > new_hi) & grow
@@ -108,15 +119,22 @@ def _cone_scan_kernel(
 def cone_scan_pallas(
     x: jax.Array,
     eps_hat: jax.Array,
+    lengths: jax.Array | None = None,
     block_t: int = 256,
     interpret: bool = True,
 ):
     """x[T, S], eps_hat[T, S] -> (brk i32, theta, psi_lo, psi_hi, fin_lo[1,S],
     fin_hi[1,S]).  Semantics identical to ref.cone_scan_ref; T % block_t == 0
-    (pad with repeats of the last row if needed — breaks are unaffected)."""
+    (pad with anything — the valid-length mask keeps padding inert when
+    ``lengths`` marks it; without ``lengths`` pad with repeats of the last
+    row).  ``lengths``: optional [S] int32 of valid samples per lane (>= 1);
+    None means every lane is fully valid."""
     t, s = x.shape
     bt = min(block_t, t)
     assert t % bt == 0, f"T={t} % block_t={bt} != 0"
+    if lengths is None:
+        lengths = jnp.full((s,), t, jnp.int32)
+    len_in = jnp.asarray(lengths, jnp.int32).reshape(1, s)
     grid = (t // bt,)
     kernel = functools.partial(_cone_scan_kernel, block_t=bt)
     brk, theta, psi_lo, psi_hi, fin_lo, fin_hi = pl.pallas_call(
@@ -125,6 +143,7 @@ def cone_scan_pallas(
         in_specs=[
             pl.BlockSpec((bt, s), lambda i: (i, 0)),
             pl.BlockSpec((bt, s), lambda i: (i, 0)),
+            pl.BlockSpec((1, s), lambda i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((bt, s), lambda i: (i, 0)),
@@ -147,7 +166,7 @@ def cone_scan_pallas(
             pltpu.VMEM((1, s), jnp.int32),
         ],
         interpret=interpret,
-    )(x, eps_hat)
+    )(x, eps_hat, len_in)
     # match ref: brk[0] = 1, theta[0] = quantized origin (kernel already
     # wrote theta of the first segment at row 0 via the running state)
     brk = brk.at[0].set(1)

@@ -78,10 +78,15 @@ def residual_quant(
     step: jax.Array,
     qmax: int = 127,
     force_ref: bool = False,
+    lengths: jax.Array | None = None,
 ):
+    """``lengths`` [M] marks ragged row tails: positions >= lengths[m] emit
+    q = 0 / err = 0 so padded blocks contribute no symbols or feedback."""
     if force_ref:
-        return ref.residual_quant_ref(x, theta, slope, step, qmax=qmax)
-    return residual_quant_pallas(x, theta, slope, step, qmax=qmax, interpret=use_interpret())
+        return ref.residual_quant_ref(x, theta, slope, step, qmax=qmax, lengths=lengths)
+    return residual_quant_pallas(
+        x, theta, slope, step, lengths=lengths, qmax=qmax, interpret=use_interpret()
+    )
 
 
 def dequant_reconstruct(
@@ -96,24 +101,35 @@ def dequant_reconstruct(
     return dequant_reconstruct_pallas(q, theta, slope, step, interpret=use_interpret())
 
 
-def cone_scan(x: jax.Array, eps_hat: jax.Array, block_t: int = 256, force_ref: bool = False):
+def cone_scan(
+    x: jax.Array,
+    eps_hat: jax.Array,
+    block_t: int = 256,
+    force_ref: bool = False,
+    lengths: jax.Array | None = None,
+):
+    """``lengths`` [S] activates the valid-length mask path for ragged lanes
+    (positions past a lane's length are inert); None = all lanes full."""
     if force_ref:
-        return ref.cone_scan_ref(x, eps_hat)
-    t = x.shape[0]
+        return ref.cone_scan_ref(x, eps_hat, lengths=lengths)
+    t, s = x.shape
     bt = min(block_t, t)
     if t % bt:
         pad = bt - (t % bt)
         x = jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)], axis=0)
         eps_hat = jnp.concatenate([eps_hat, jnp.repeat(eps_hat[-1:], pad, axis=0)], axis=0)
+        # masking the pad rows keeps fin_lo/fin_hi pinned to the true open
+        # segment (repeat values no longer tighten the final span)
+        len_in = jnp.full((s,), t, jnp.int32) if lengths is None else lengths
         out = _run_auto(
-            "cone_scan", lambda i: cone_scan_pallas(x, eps_hat, block_t=bt, interpret=i)
+            "cone_scan",
+            lambda i: cone_scan_pallas(x, eps_hat, len_in, block_t=bt, interpret=i),
         )
         brk, theta, lo, hi, fin_lo, fin_hi = out
-        # NOTE: fin_lo/fin_hi reflect the padded tail; callers that need the
-        # open-segment span with padding should pass T % block_t == 0 data.
         return brk[:t], theta[:t], lo[:t], hi[:t], fin_lo, fin_hi
     return _run_auto(
-        "cone_scan", lambda i: cone_scan_pallas(x, eps_hat, block_t=bt, interpret=i)
+        "cone_scan",
+        lambda i: cone_scan_pallas(x, eps_hat, lengths, block_t=bt, interpret=i),
     )
 
 
@@ -147,28 +163,35 @@ def _compact_segments(brk, theta, psi_lo, psi_hi, fin_lo, fin_hi):
     return counts, t0s[:t_len], thetas[:t_len], lo[:t_len], hi[:t_len]
 
 
-def cone_scan_segments(x: jax.Array, eps_hat: jax.Array, block_t: int = 256):
+def cone_scan_segments(
+    x: jax.Array,
+    eps_hat: jax.Array,
+    block_t: int = 256,
+    lengths: jax.Array | None = None,
+):
     """Lane-parallel cone scan + on-device segment compaction.
 
     x[T, S], eps_hat[T, S] -> (counts[S], t0s[T, S], thetas[T, S],
     psi_lo[T, S], psi_hi[T, S]); row k of the [T, S] outputs is segment k of
     that series.  Spans use +-3.4e38 as the unbounded sentinel (map to inf
-    on the host).  Lengths follow from consecutive t0s (and T for the last
-    segment), since segments partition [0, T).
+    on the host).  Segment lengths follow from consecutive t0s (and the lane
+    end for the last segment), since each lane's segments partition
+    [0, lengths[s]).
 
-    T must be a multiple of block_t: cone_scan's internal repeat-padding
-    would otherwise pollute the open segment's fin_lo/fin_hi carry, which
-    this compaction assigns to the last segment.  Callers with ragged T pad
-    the inputs themselves and drop pad-born segments (see
-    semantics.extract_semantics_batch_pallas).
+    ``lengths`` [S] (default: T for every lane) is the valid-length mask for
+    ragged lanes: positions past a lane's length are inert, so arbitrary
+    padding up to T — including the block_t alignment padding — never
+    creates segments or pollutes the open segment's fin_lo/fin_hi carry.
+    T must be a multiple of block_t (pad x/eps_hat; the mask keeps the pad
+    inert).
     """
     t = x.shape[0]
     bt = min(block_t, t)
     assert t % bt == 0, (
         f"T={t} % block_t={bt} != 0 — pad x/eps_hat to a block multiple and "
-        "drop pad-born segments (extract_semantics_batch_pallas shows how)"
+        "pass the true per-lane `lengths` so the pad stays inert"
     )
-    brk, theta, lo, hi, fin_lo, fin_hi = cone_scan(x, eps_hat, block_t=bt)
+    brk, theta, lo, hi, fin_lo, fin_hi = cone_scan(x, eps_hat, block_t=bt, lengths=lengths)
     return _compact_segments(brk, theta, lo, hi, fin_lo, fin_hi)
 
 

@@ -42,10 +42,13 @@ def residual_quant_ref(
     slope: jax.Array,
     step: jax.Array,
     qmax: int = 127,
+    lengths: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """x[M, N]; theta/slope/step[M, 1] per-row base-line params.
 
     Returns (q int32 in [-qmax, qmax], err = x - (pred + q*step)).
+    ``lengths`` [M] marks each row's ragged tail: positions >= lengths[m]
+    emit q = 0 and err = 0 (padding carries no symbols and no feedback).
     """
     m, n = x.shape
     t = jnp.arange(n, dtype=x.dtype)[None, :]
@@ -53,6 +56,12 @@ def residual_quant_ref(
     r = x - pred
     q = jnp.clip(jnp.round(r / step), -qmax, qmax).astype(jnp.int32)
     err = r - q.astype(x.dtype) * step
+    if lengths is not None:
+        valid = jnp.arange(n, dtype=jnp.int32)[None, :] < jnp.asarray(
+            lengths, jnp.int32
+        ).reshape(m, 1)
+        q = jnp.where(valid, q, 0)
+        err = jnp.where(valid, err, 0.0)
     return q, err
 
 
@@ -72,11 +81,15 @@ def dequant_reconstruct_ref(
 def cone_scan_ref(
     x: jax.Array,
     eps_hat: jax.Array,
+    lengths: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """SHRINK shrinking-cone scan, vectorized over lanes.
 
     x[T, S], eps_hat[T, S] (adaptive threshold to use for a segment that
-    *starts* at (t, s)).
+    *starts* at (t, s)).  ``lengths`` [S] optionally marks ragged lanes:
+    positions t >= lengths[s] are padding — they never constrain, break,
+    or seed a cone, and the lane's state (hence fin_lo/fin_hi) freezes at
+    its last valid sample.
 
     Returns (brk i32[T,S], theta f32[T,S], psi_lo f32[T,S], psi_hi f32[T,S],
              fin_lo f32[1,S], fin_hi f32[1,S]):
@@ -84,11 +97,16 @@ def cone_scan_ref(
       * theta[t] = origin of the segment starting at t   (valid where brk=1).
       * psi_lo/hi[t] = span of the segment that CLOSED at t-1 (valid where
         brk=1 and t>0).
-      * fin_lo/hi = span of the still-open segment at T-1 (the host closes
-        it when compacting segments).
+      * fin_lo/hi = span of the still-open segment at the lane end (the host
+        closes it when compacting segments).
     """
     big = jnp.float32(3.4e38)
     t_steps, s = x.shape
+    len_vec = (
+        jnp.full((s,), t_steps, jnp.int32)
+        if lengths is None
+        else jnp.asarray(lengths, jnp.int32)
+    )
 
     def origin(v, eps):
         return jnp.floor(v / eps) * eps
@@ -101,7 +119,8 @@ def cone_scan_ref(
         cand_lo = (v - eps_seg - theta) / jnp.maximum(dt, 1.0)
         # dt == 0 (the segment's own start point) sets theta only; it is not
         # a slope constraint — same convention as semantics.extract_semantics.
-        grow = dt > 0
+        # t >= lengths is a padded position: the lane freezes there.
+        grow = (dt > 0) & (t < len_vec)
         new_hi = jnp.where(grow, jnp.minimum(hi, cand_hi), hi)
         new_lo = jnp.where(grow, jnp.maximum(lo, cand_lo), lo)
         brk = (new_lo > new_hi) & grow

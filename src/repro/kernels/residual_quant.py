@@ -12,6 +12,12 @@ Tiling: rows of the block matrix map to sublanes, the in-block time axis to
 lanes; the block shape is (BM, N) with N the (128-multiple) SHRINK block
 length, so one grid step owns BM complete blocks and the base parameters
 for a grid step are a (BM, 1) column.
+
+Ragged tails: an optional per-row valid length masks each row past its
+length — padded positions emit q = 0 (no symbols for the entropy stage) and
+err = 0 (no error feedback from data that does not exist).  This is the
+same valid-length mask idiom as the cone-scan kernel, applied to the
+residual side so a ragged batch's padded lanes stay inert end to end.
 """
 from __future__ import annotations
 
@@ -24,7 +30,9 @@ from jax.experimental import pallas as pl
 __all__ = ["residual_quant_kernel", "residual_quant_pallas"]
 
 
-def residual_quant_kernel(x_ref, theta_ref, slope_ref, step_ref, q_ref, err_ref, *, qmax: int):
+def residual_quant_kernel(
+    x_ref, theta_ref, slope_ref, step_ref, len_ref, q_ref, err_ref, *, qmax: int
+):
     x = x_ref[...]
     theta = theta_ref[...]  # (bm, 1)
     slope = slope_ref[...]  # (bm, 1)
@@ -35,8 +43,9 @@ def residual_quant_kernel(x_ref, theta_ref, slope_ref, step_ref, q_ref, err_ref,
     r = x - pred
     inv = 1.0 / step
     q = jnp.clip(jnp.round(r * inv), -qmax, qmax)
-    q_ref[...] = q.astype(jnp.int32)
-    err_ref[...] = r - q * step
+    valid = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1) < len_ref[...]  # (bm, 1)
+    q_ref[...] = jnp.where(valid, q, 0.0).astype(jnp.int32)
+    err_ref[...] = jnp.where(valid, r - q * step, 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("qmax", "block_m", "interpret"))
@@ -45,12 +54,18 @@ def residual_quant_pallas(
     theta: jax.Array,
     slope: jax.Array,
     step: jax.Array,
+    lengths: jax.Array | None = None,
     qmax: int = 127,
     block_m: int = 8,
     interpret: bool = True,
 ):
-    """x[M, N]; theta/slope/step[M, 1].  Returns (q int32[M,N], err[M,N])."""
+    """x[M, N]; theta/slope/step[M, 1].  Returns (q int32[M,N], err[M,N]).
+    ``lengths`` [M] marks ragged row tails (q/err forced to 0 past each
+    row's length); None means every row is fully valid."""
     m, n = x.shape
+    if lengths is None:
+        lengths = jnp.full((m,), n, jnp.int32)
+    len_in = jnp.asarray(lengths, jnp.int32).reshape(m, 1)
     bm = min(block_m, m)
     grid = (pl.cdiv(m, bm),)
     kernel = functools.partial(residual_quant_kernel, qmax=qmax)
@@ -59,6 +74,7 @@ def residual_quant_pallas(
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
             pl.BlockSpec((bm, 1), lambda i: (i, 0)),
             pl.BlockSpec((bm, 1), lambda i: (i, 0)),
             pl.BlockSpec((bm, 1), lambda i: (i, 0)),
@@ -72,4 +88,4 @@ def residual_quant_pallas(
             jax.ShapeDtypeStruct((m, n), x.dtype),
         ],
         interpret=interpret,
-    )(x, theta, slope, step)
+    )(x, theta, slope, step, len_in)

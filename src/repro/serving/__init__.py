@@ -1,4 +1,6 @@
-"""Serving: KV caches (+ SHRINK quantized), continuous batching, and
-batched range-query decode over streamed SHRINK containers."""
+"""Serving: KV caches (+ SHRINK quantized), continuous batching, batched
+range-query decode over streamed SHRINK containers, and the ragged
+multi-sensor ingest scheduler."""
 from .kvcache import QuantizedKV, dequantize_cache, promote_caches, quantize_cache  # noqa: F401
 from .batching import ContinuousBatcher, RangeQuery, RangeQueryBatcher, Request  # noqa: F401
+from .ragged import RaggedBatcher  # noqa: F401

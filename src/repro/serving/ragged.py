@@ -1,0 +1,215 @@
+"""Gateway admission scheduler for ragged multi-sensor ingest.
+
+An IoT gateway does not see tidy [S, T] blocks: hundreds of sensors publish
+at wildly different rates, so at any flush instant the pending buffers form
+a ragged batch whose lengths span orders of magnitude (Sprintz's device-side
+observation, arXiv:1808.02515).  ``RaggedBatcher`` is the admission layer
+that turns that traffic into efficient batched compression:
+
+* ``submit(series_id, chunk)`` appends a sensor's next chunk to its pending
+  buffer (O(1), no compression on the hot path).
+* Admission policy — the batch **flushes** when either trigger fires:
+  - *size*: total pending samples reach ``flush_samples`` (amortization —
+    bigger batches, fewer scans), or
+  - *deadline*: the oldest pending sample has waited ``flush_deadline_s``
+    (latency bound — a slow sensor cannot stall the gateway forever).
+  ``poll()`` checks the deadline without new data (call it from a timer).
+* A flush runs ONE ragged ``ShrinkCodec.compress_batch`` over every pending
+  buffer — percentile length-bucketing into padded lanes, masked cone
+  scans, one shared rANS entropy pass (see ``docs/architecture.md``) — and
+  seals each series' buffer as a ``SHRKS`` frame.  Every frame's sub-base
+  lines feed the shared, deduplicating ``KnowledgeBase`` (pass ``kb=`` to
+  share one dictionary with other batchers or a ``ShrinkStreamCodec``).
+* ``finalize()`` emits the standard ``SHRKS`` container
+  (``docs/wire-format.md``): the output is readable by ``decode_range`` /
+  ``decode_series`` / ``RangeQueryBatcher`` exactly like a
+  ``ShrinkStreamCodec`` container.  Indeed each frame's payload is
+  byte-identical to what a deferred-scan ``ShrinkStreamCodec`` (no pinned
+  range, flush-per-window) would seal for the same buffer boundaries —
+  property the tests pin.
+
+The scheduler is time-source agnostic: inject ``clock`` (a ``() -> float``
+monotonic-seconds callable) to drive deadlines deterministically in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..core.serialize import FramedWriter
+from ..core.shrink import ShrinkCodec, cs_to_bytes
+from ..core.streaming import KnowledgeBase
+from ..core.types import ShrinkConfig
+
+__all__ = ["RaggedBatcher"]
+
+
+@dataclasses.dataclass
+class _PendingSeries:
+    start: int  # absolute sample index of the buffer's first sample
+    chunks: list = dataclasses.field(default_factory=list)
+    samples: int = 0
+
+    def append(self, vals: np.ndarray) -> None:
+        self.chunks.append(vals)
+        self.samples += int(vals.size)
+
+    def take(self) -> np.ndarray:
+        out = np.concatenate(self.chunks) if len(self.chunks) > 1 else self.chunks[0]
+        self.chunks = []
+        self.samples = 0
+        return out
+
+
+class RaggedBatcher:
+    """Bucketed admission scheduler: many concurrent ragged series ->
+    batched ragged compression -> ``SHRKS`` frames + shared knowledge base.
+
+    Parameters
+    ----------
+    config:           ShrinkConfig shared by every series on this gateway.
+    eps_targets:      residual resolutions per frame (0.0 = lossless,
+                      requires ``decimals``).
+    flush_samples:    size trigger — flush when total pending samples reach
+                      this (None disables; flush on deadline/finalize only).
+    flush_deadline_s: latency trigger — flush when the oldest pending
+                      sample has waited this long (None disables).
+    max_buckets:      percentile length-buckets per flush (see
+                      ``ShrinkCodec.compress_batch``).
+    semantics:        scan route forwarded to ``compress_batch`` ("auto" |
+                      "numpy" | "pallas").
+    kb:               share a KnowledgeBase across batchers/codecs.
+    clock:            monotonic-seconds source (injectable for tests).
+    """
+
+    def __init__(
+        self,
+        config: ShrinkConfig,
+        eps_targets: list[float],
+        decimals: int | None = None,
+        backend: str = "rans",
+        flush_samples: int | None = 262_144,
+        flush_deadline_s: float | None = None,
+        max_buckets: int = 4,
+        semantics: str = "auto",
+        kb: KnowledgeBase | None = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if 0.0 in eps_targets and decimals is None:
+            raise ValueError("lossless eps target 0.0 requires `decimals`")
+        if flush_samples is not None and flush_samples < 1:
+            raise ValueError(f"flush_samples must be >= 1, got {flush_samples}")
+        self.codec = ShrinkCodec(config=config, backend=backend)
+        self.eps_targets = list(eps_targets)
+        self.decimals = decimals
+        self.flush_samples = flush_samples
+        self.flush_deadline_s = flush_deadline_s
+        self.max_buckets = max_buckets
+        self.semantics = semantics
+        self.kb = kb if kb is not None else KnowledgeBase(config)
+        self._clock = clock
+        self._writer = FramedWriter()
+        self._pending: dict[int, _PendingSeries] = {}
+        self._series_pos: dict[int, int] = {}  # next absolute sample index
+        self._pending_samples = 0
+        self._oldest_submit: Optional[float] = None
+        self._frames: list[tuple[int, int, int]] = []
+        self._flushes = 0
+        self._samples_in = 0
+        self._payload_bytes = 0
+        self._finalized = False
+
+    # -- admission ------------------------------------------------------ #
+    def submit(self, series_id: int, values_chunk) -> list[tuple[int, int, int]]:
+        """Append one series' next chunk; returns the frames sealed by this
+        call ([] unless a flush trigger fired)."""
+        if self._finalized:
+            raise ValueError("batcher already finalized")
+        sid = int(series_id)
+        vals = np.asarray(values_chunk, dtype=np.float64).ravel()
+        if vals.size:
+            st = self._pending.get(sid)
+            if st is None:
+                st = self._pending[sid] = _PendingSeries(
+                    start=self._series_pos.setdefault(sid, 0)
+                )
+            st.append(vals)
+            self._pending_samples += int(vals.size)
+            self._samples_in += int(vals.size)
+            if self._oldest_submit is None:
+                self._oldest_submit = self._clock()
+        return self.flush() if self.due() else []
+
+    def due(self) -> bool:
+        """True when a flush trigger (size or deadline) has fired."""
+        if self._pending_samples == 0:
+            return False
+        if self.flush_samples is not None and self._pending_samples >= self.flush_samples:
+            return True
+        return (
+            self.flush_deadline_s is not None
+            and self._oldest_submit is not None
+            and self._clock() - self._oldest_submit >= self.flush_deadline_s
+        )
+
+    def poll(self) -> list[tuple[int, int, int]]:
+        """Deadline check with no new data (drive from a timer loop)."""
+        return self.flush() if self.due() else []
+
+    # -- flush / finalize ----------------------------------------------- #
+    def flush(self) -> list[tuple[int, int, int]]:
+        """Compress every pending buffer as one ragged batch and seal each
+        as a SHRKS frame; returns (series_id, t_lo, t_hi) per frame."""
+        if not self._pending:
+            return []
+        sids = sorted(self._pending)
+        arrs = [self._pending[sid].take() for sid in sids]
+        css = self.codec.compress_batch(
+            arrs,
+            eps_targets=self.eps_targets,
+            decimals=self.decimals,
+            semantics=self.semantics,
+            max_buckets=self.max_buckets,
+        )
+        sealed = []
+        for sid, vals, cs in zip(sids, arrs, css):
+            payload = cs_to_bytes(cs)
+            self.kb.ingest_base(cs.base)
+            t_lo = self._pending[sid].start
+            t_hi = t_lo + int(vals.size)
+            self._writer.add_frame(sid, t_lo, t_hi, self.kb.epoch, payload)
+            self._payload_bytes += len(payload)
+            self._series_pos[sid] = t_hi
+            sealed.append((sid, t_lo, t_hi))
+        self._frames.extend(sealed)
+        self._pending.clear()
+        self._pending_samples = 0
+        self._oldest_submit = None
+        self._flushes += 1
+        return sealed
+
+    def finalize(self) -> bytes:
+        """Flush the remainder and emit the SHRKS container (knowledge base
+        in the footer)."""
+        self.flush()
+        self._finalized = True
+        return self._writer.finish(self.kb.to_bytes())
+
+    # -- introspection -------------------------------------------------- #
+    @property
+    def sealed_frames(self) -> list[tuple[int, int, int]]:
+        return list(self._frames)
+
+    def stats(self) -> dict:
+        return {
+            "series": len(self._series_pos),
+            "flushes": self._flushes,
+            "frames": len(self._frames),
+            "samples_ingested": self._samples_in,
+            "samples_pending": self._pending_samples,
+            "payload_bytes": self._payload_bytes,
+            "kb": self.kb.stats(),
+        }

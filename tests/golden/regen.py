@@ -25,11 +25,13 @@ import numpy as np
 HERE = pathlib.Path(__file__).resolve().parent
 GOLDEN_SHRK = HERE / "golden_v1.shrk"
 GOLDEN_SHRKS = HERE / "golden_v1.shrks"
+GOLDEN_RAGGED = HERE / "golden_v1_ragged.shrks"
 
 N = 1536
 EPS_TARGETS = [1e-2, 0.0]
 DECIMALS = 3
 FRAME_LEN = 512
+RAGGED_LENGTHS = (1536, 1, 97, 512, 2, 700)  # orders-of-magnitude spread
 
 
 def golden_series() -> np.ndarray:
@@ -72,11 +74,44 @@ def build_shrks() -> bytes:
     return sc.finalize()
 
 
+def golden_ragged_series() -> list[np.ndarray]:
+    """Deterministic ragged batch: phase-shifted prefixes of the golden
+    signal at RAGGED_LENGTHS (empty of RNG; lengths exercise every bucket
+    regime incl. length-1 and a full-length series)."""
+    base = golden_series()
+    return [
+        np.round(base[k : k + n] + 0.01 * k, DECIMALS)
+        for k, n in enumerate(RAGGED_LENGTHS)
+    ]
+
+
+def build_ragged_shrks() -> bytes:
+    """Two-flush RaggedBatcher ingest of the ragged golden set -> SHRKS.
+    Pins the whole ragged path: bucketed compress_batch payload bytes,
+    frame directory order, and the knowledge-base footer."""
+    from repro.serving.ragged import RaggedBatcher
+
+    series = golden_ragged_series()
+    allv = np.concatenate(series)
+    sc = RaggedBatcher(
+        _cfg(allv), eps_targets=EPS_TARGETS, decimals=DECIMALS, backend="rans",
+        flush_samples=None, max_buckets=3,
+    )
+    for sid, v in enumerate(series):  # first window: ~60% of each series
+        sc.submit(sid, v[: (2 * v.size) // 3])
+    sc.flush()
+    for sid, v in enumerate(series):  # second window: the remainder
+        sc.submit(sid, v[(2 * v.size) // 3 :])
+    return sc.finalize()
+
+
 def main() -> None:
     GOLDEN_SHRK.write_bytes(build_shrk())
     GOLDEN_SHRKS.write_bytes(build_shrks())
+    GOLDEN_RAGGED.write_bytes(build_ragged_shrks())
     print(f"wrote {GOLDEN_SHRK} ({GOLDEN_SHRK.stat().st_size} B)")
     print(f"wrote {GOLDEN_SHRKS} ({GOLDEN_SHRKS.stat().st_size} B)")
+    print(f"wrote {GOLDEN_RAGGED} ({GOLDEN_RAGGED.stat().st_size} B)")
 
 
 if __name__ == "__main__":

@@ -48,6 +48,28 @@ def test_shrks_bytes_stable():
     )
 
 
+def test_ragged_shrks_bytes_stable():
+    expected = _fixture(golden.GOLDEN_RAGGED)
+    got = golden.build_ragged_shrks()
+    assert got == expected, (
+        "ragged SHRKS container bytes changed — wire-format or ragged-batch "
+        "regression (see tests/golden/regen.py for the intentional-change "
+        "procedure)"
+    )
+
+
+def test_ragged_golden_fixture_still_decodes():
+    """The checked-in ragged container must reconstruct every series from
+    its two frames — guards the decoder against misreading old ragged
+    data even if re-encoding happens to match."""
+    from repro.core import decode_series
+
+    blob = _fixture(golden.GOLDEN_RAGGED)
+    for sid, v in enumerate(golden.golden_ragged_series()):
+        got = np.round(decode_series(blob, sid, 0.0), golden.DECIMALS)
+        assert np.array_equal(got, v), sid
+
+
 def test_golden_fixture_still_decodes():
     """The checked-in container (not the rebuilt one) must decode: guards
     the decoder against changes that re-encode identically but misread

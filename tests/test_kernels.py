@@ -165,6 +165,55 @@ def test_cone_scan_nonaligned_t_padding():
     out_k = cone_scan(x, eps, block_t=128)
     out_r = ref.cone_scan_ref(x, eps)
     np.testing.assert_array_equal(np.asarray(out_k[0]), np.asarray(out_r[0]))
+    # the mask keeps alignment padding out of the open segment's final span
+    for idx in (4, 5):
+        a, b = np.asarray(out_k[idx]), np.asarray(out_r[idx])
+        m = np.abs(b) < 1e30
+        np.testing.assert_allclose(a[m], b[m], rtol=1e-4, atol=1e-4)
+
+
+def test_cone_scan_valid_length_mask():
+    """Ragged lanes: the kernel's segment-ID/valid-length mask path must
+    match the masked oracle, produce no breaks inside padding, and freeze
+    each lane's final span at its own end."""
+    t, s = 384, 128
+    x = jnp.asarray(np.cumsum(_RNG.standard_normal((t, s)) * 0.05, axis=0), jnp.float32)
+    eps = jnp.full((t, s), 0.08, jnp.float32)
+    lengths = _RNG.integers(1, t + 1, s).astype(np.int32)
+    lengths[0], lengths[1] = 1, t  # degenerate + full lanes
+    out_k = cone_scan(x, eps, block_t=128, lengths=jnp.asarray(lengths))
+    out_r = ref.cone_scan_ref(x, eps, lengths=jnp.asarray(lengths))
+    brk_k = np.asarray(out_k[0])
+    np.testing.assert_array_equal(brk_k, np.asarray(out_r[0]))
+    for col in range(s):
+        assert brk_k[lengths[col] :, col].sum() == 0, col  # padding never breaks
+    for idx in (4, 5):  # final spans match the masked oracle exactly
+        a, b = np.asarray(out_k[idx]), np.asarray(out_r[idx])
+        m = np.abs(b) < 1e30
+        np.testing.assert_allclose(a[m], b[m], rtol=1e-4, atol=1e-4)
+    # a fully-valid lengths vector is the unmasked scan
+    out_full = cone_scan(x, eps, block_t=128, lengths=jnp.full((s,), t, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out_full[0]), np.asarray(cone_scan(x, eps, block_t=128)[0]))
+
+
+def test_residual_quant_ragged_tails():
+    """Padded row tails must emit q = 0 and err = 0 (no symbols, no error
+    feedback), with valid prefixes untouched."""
+    m, n = 8, 256
+    x = jnp.asarray(_RNG.standard_normal((m, n)), jnp.float32)
+    theta = jnp.asarray(_RNG.standard_normal((m, 1)), jnp.float32)
+    slope = jnp.asarray(_RNG.standard_normal((m, 1)) * 0.01, jnp.float32)
+    step = jnp.full((m, 1), 0.05, jnp.float32)
+    lengths = jnp.asarray(np.array([256, 0, 1, 100, 255, 7, 128, 13], np.int32))
+    q, err = residual_quant(x, theta, slope, step, lengths=lengths)
+    q_r, err_r = ref.residual_quant_ref(x, theta, slope, step, lengths=lengths)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(err), np.asarray(err_r), atol=2e-6)
+    q_full, err_full = residual_quant(x, theta, slope, step)
+    qn, en = np.asarray(q), np.asarray(err)
+    for i, ln in enumerate(np.asarray(lengths)):
+        assert not qn[i, ln:].any() and not en[i, ln:].any()
+        np.testing.assert_array_equal(qn[i, :ln], np.asarray(q_full)[i, :ln])
 
 
 # ------------------------------------------------------------ property sweeps

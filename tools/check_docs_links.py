@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Intra-repo link checker for the docs tree.
+
+Scans README.md and docs/*.md for inline markdown links/images and verifies
+that every relative target resolves to a real file or directory in the
+repo (fragments are stripped; http(s)/mailto targets are ignored).  CI runs
+this in the ``docs`` job so a moved/renamed file cannot silently orphan the
+documentation.
+
+    python tools/check_docs_links.py            # check, exit 1 on breakage
+    python tools/check_docs_links.py --list     # also print every link
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# inline links/images: [text](target) / ![alt](target); stops at the first
+# ')' so "[a](b) and [c](d)" yields two links.  Markdown autolinks and bare
+# URLs are out of scope — the docs use inline style throughout.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> list[pathlib.Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md")) if (REPO / "docs").is_dir() else []
+    return [f for f in files if f.is_file()]
+
+
+def check(list_all: bool = False) -> int:
+    broken: list[str] = []
+    n_links = 0
+    for md in doc_files():
+        rel_md = md.relative_to(REPO)
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for m in _LINK.finditer(line):
+                target = m.group(1)
+                if target.startswith(_EXTERNAL) or target.startswith("#"):
+                    continue
+                n_links += 1
+                path = target.split("#", 1)[0]
+                resolved = (md.parent / path).resolve()
+                ok = resolved.exists()
+                if list_all or not ok:
+                    print(f"{'ok ' if ok else 'BROKEN'} {rel_md}:{lineno}: {target}")
+                if not ok:
+                    broken.append(f"{rel_md}:{lineno}: {target}")
+    print(f"checked {n_links} intra-repo links across {len(doc_files())} files")
+    if broken:
+        print(f"{len(broken)} broken link(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true", help="print every link checked")
+    sys.exit(check(list_all=ap.parse_args().list))
