@@ -1,0 +1,140 @@
+"""Progressive residual pyramid benchmarks.
+
+``pyramid_vs_independent``: archive bytes of ONE layered 4-tier archive
+({1e-1, 1e-2, 1e-3, lossless} of range) against the pre-pyramid layout —
+the same tiers encoded as independent streams from the base (measured by
+compressing each tier alone and summing the residual sections; the base is
+shared in both layouts and excluded from the ratio).  The refinement
+layers store only the delta below the previous tier's guarantee, so the
+pyramid must be strictly smaller — asserted as claim
+``C_pyramid_smaller``.
+
+``tiered_decode``: decode MB/s at each tier through the layer-prefix
+decoder (``decompress_at`` resolving the cheapest sufficient prefix), plus
+the progressive-refinement rate: refining a coarse reconstruction to
+lossless via ``ProgressiveDecoder`` against decoding lossless cold — the
+refinement path re-uses the already-decoded coarse layers, so it is the
+cheaper way to zoom in.
+
+``progressive_json`` bundles both for the BENCH_throughput.json
+trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    BYTES_PER_ROW,
+    ProgressiveDecoder,
+    ShrinkCodec,
+    decompress_at,
+)
+
+from .datasets import bench_series, save_result
+
+
+def _best_of(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+_TIER_RELS = (1e-1, 1e-2, 1e-3)  # + lossless
+
+
+def _ladder(v: np.ndarray) -> list[float]:
+    rng = float(v.max() - v.min())
+    return [r * rng for r in _TIER_RELS] + [0.0]
+
+
+def pyramid_vs_independent(
+    n: int = 100_000,
+    datasets=("WindSpeed", "Pressure", "ECG"),
+) -> dict:
+    """Residual bytes: one layered archive vs per-tier independent streams."""
+    out = {"tiers": list(_TIER_RELS) + [0.0], "datasets": {}}
+    for name in datasets:
+        v = bench_series(name, n)
+        from repro.data.synthetic import DATASETS
+
+        decimals = DATASETS[name].decimals
+        codec = ShrinkCodec.from_fraction(v, frac=0.05, backend="rans")
+        tiers = _ladder(v)
+        cs = codec.compress(v, eps_targets=tiers, decimals=decimals)
+        pyramid_bytes = cs.pyramid.nbytes()
+        independent_bytes = sum(
+            codec.compress(v, eps_targets=[e], decimals=decimals).pyramid.nbytes()
+            for e in tiers
+        )
+        out["datasets"][name] = {
+            "n": int(len(v)),
+            "base_bytes": len(cs.base_bytes),
+            "pyramid_residual_bytes": int(pyramid_bytes),
+            "independent_residual_bytes": int(independent_bytes),
+            "pyramid_vs_independent": pyramid_bytes / max(independent_bytes, 1),
+            "per_layer_bytes": [layer.nbytes() for layer in cs.pyramid.layers],
+            "archive_bytes": int(cs.total_nbytes()),
+        }
+    return out
+
+
+def tiered_decode(n: int = 100_000, name: str = "Pressure", reps: int = 3) -> dict:
+    """Decode MB/s per tier + progressive refinement vs cold lossless."""
+    v = bench_series(name, n)
+    from repro.data.synthetic import DATASETS
+
+    decimals = DATASETS[name].decimals
+    codec = ShrinkCodec.from_fraction(v, frac=0.05, backend="rans")
+    tiers = _ladder(v)
+    cs = codec.compress(v, eps_targets=tiers, decimals=decimals)
+    mb = len(v) * BYTES_PER_ROW / 1e6
+    out = {"dataset": name, "n": int(len(v)), "decode_mb_s": {}}
+    for eps, rel in zip(tiers, list(_TIER_RELS) + ["lossless"]):
+        t = _best_of(lambda e=eps: decompress_at(cs, e), reps)
+        out["decode_mb_s"][str(rel)] = mb / t
+
+    # progressive refinement: coarse prefix already decoded, pay the delta
+    def refine():
+        dec = ProgressiveDecoder(cs)
+        dec.at(tiers[1])  # the dashboard's standing coarse view
+        t0 = time.perf_counter()
+        dec.at(0.0)
+        return time.perf_counter() - t0
+
+    refine_t = min(refine() for _ in range(reps))
+    cold_t = _best_of(lambda: decompress_at(cs, 0.0), reps)
+    out["refine_coarse_to_lossless_mb_s"] = mb / refine_t
+    out["cold_lossless_mb_s"] = mb / cold_t
+    out["refine_vs_cold"] = cold_t / refine_t
+    return out
+
+
+def progressive_json(quick: bool = False) -> dict:
+    n = 20_000 if quick else 100_000
+    return {
+        "archive": pyramid_vs_independent(n=n),
+        "decode": tiered_decode(n=n),
+    }
+
+
+def validate_claims(prog: dict) -> dict:
+    """C_pyramid_smaller: on every standard-workload dataset the 4-tier
+    layered archive's residual section is strictly smaller than the
+    independent-stream layout's."""
+    ratios = {
+        name: round(row["pyramid_vs_independent"], 4)
+        for name, row in prog["archive"]["datasets"].items()
+    }
+    checks = {
+        "C_pyramid_smaller": {
+            "pyramid_vs_independent_ratio": ratios,
+            "pass": bool(all(r < 1.0 for r in ratios.values())),
+        }
+    }
+    save_result("claims_progressive", checks)
+    return checks

@@ -30,7 +30,7 @@ def fig10_size_scaling(sizes=(50_000, 100_000, 250_000, 500_000, 1_000_000, 2_00
         eps = 1e-3 * rng
         codec = ShrinkCodec.from_fraction(v, frac=0.05, backend="rans")
         cs = codec.compress(v, eps_targets=[eps, 0.0], decimals=3)
-        res_bytes = len(cs.residual_bytes[eps] or b"")
+        res_bytes = cs.size_at(eps) - len(cs.base_bytes)  # pyramid prefix for eps
         # dictionary-only size: strip the timestamp lists
         stripped = _dc.replace(
             cs.base,

@@ -22,7 +22,6 @@ import numpy as np
 from repro.baselines import LOSSLESS, LOSSY
 from repro.core import ShrinkCodec, compute_residuals, quantize_exact, quantize_residuals
 from repro.core import entropy as entropy_mod
-from repro.core.serialize import encode_residuals
 from repro.data.synthetic import DATASETS
 
 from .datasets import NINE, Timer, bench_series, save_result
@@ -80,7 +79,7 @@ def table3_latency(n=50_000, datasets=NINE) -> dict:
                     stream = quantize_exact(v, base, d)
                 else:
                     stream = quantize_residuals(r, eps_rel * rng)
-                encode_residuals(stream, backend="rans")
+                entropy_mod.encode_ints(stream.q, backend="rans")
             res_times[str(eps_rel)] = t.seconds
         row["SHRINK_residual"] = res_times
         out[name] = row

@@ -15,6 +15,7 @@ import time
 
 from . import (
     bench_compression,
+    bench_progressive,
     bench_ragged,
     bench_roofline,
     bench_scaling,
@@ -157,6 +158,27 @@ def main(argv=None) -> int:
         f"ingest={rs['ingest_mb_s']:.2f}MB/s (admission + SHRKS assembly)"
     )
     checks.update(bench_ragged.validate_claims(ragged))
+
+    print("\n== Progressive pyramid (layered archive + tiered decode) ==")
+    prog = bench_progressive.progressive_json(quick=args.quick)
+    engine["progressive"] = prog
+    for name, row in prog["archive"]["datasets"].items():
+        print(
+            f"  {name:10s} pyramid={row['pyramid_residual_bytes']:9,d}B "
+            f"independent={row['independent_residual_bytes']:9,d}B "
+            f"({row['pyramid_vs_independent']:.2f}x)"
+        )
+    dec = prog["decode"]
+    tier_cols = "  ".join(
+        f"{k}={v:.1f}MB/s" for k, v in dec["decode_mb_s"].items()
+    )
+    print(f"  decode[{dec['dataset']}] {tier_cols}")
+    print(
+        f"  refine coarse->lossless {dec['refine_coarse_to_lossless_mb_s']:.1f}MB/s "
+        f"vs cold {dec['cold_lossless_mb_s']:.1f}MB/s "
+        f"({dec['refine_vs_cold']:.2f}x)"
+    )
+    checks.update(bench_progressive.validate_claims(prog))
     # machine-readable perf trajectory for future PRs to diff against; only
     # full-size runs update the repo-root trajectory (quick numbers live in
     # artifacts/bench via save_result and must not clobber the baseline)

@@ -49,7 +49,7 @@ def main():
         cc = ShrinkCodec.from_fraction(vv, frac=0.05, backend="rans")
         cso = cc.compress(vv, eps_targets=[1e-3 * rng])
         print(f"  n={n:8,d}  base={len(cso.base_bytes):8,d}B  "
-              f"residuals={len(cso.residual_bytes[1e-3*rng] or b''):10,d}B")
+              f"residuals={cso.pyramid.nbytes():10,d}B")
 
     # --- the on-device kernel path (interpret mode on CPU) ---
     import jax.numpy as jnp

@@ -5,6 +5,8 @@ Public API re-exports.
 from .types import (  # noqa: F401
     Base,
     CompressedSeries,
+    PyramidLayer,
+    ResidualPyramid,
     ResidualStream,
     Segment,
     ShrinkConfig,
@@ -28,13 +30,17 @@ from .residuals import (  # noqa: F401
     compute_residuals,
     dequantize_exact,
     dequantize_residuals,
+    normalize_tiers,
     quantize_exact,
     quantize_exact_batch,
+    quantize_pyramid,
+    quantize_pyramid_batch,
     quantize_residuals,
     quantize_residuals_batch,
 )
 from .shrink import (  # noqa: F401
     BYTES_PER_ROW,
+    ProgressiveDecoder,
     ShrinkCodec,
     cs_from_bytes,
     cs_to_bytes,

@@ -27,6 +27,9 @@ __all__ = [
     "quantize_exact",
     "quantize_exact_batch",
     "dequantize_exact",
+    "normalize_tiers",
+    "quantize_pyramid",
+    "quantize_pyramid_batch",
 ]
 
 
@@ -161,3 +164,141 @@ def dequantize_exact(stream: ResidualStream, base: Base, decimals: int) -> np.nd
     pred = base_predictions(base)
     p_int = np.round(pred * scale).astype(np.int64)
     return (p_int + stream.q) / scale
+
+
+# --------------------------------------------------------------------- #
+# Refinement pyramid: tier k quantizes the reconstruction error of the
+# prefix through tier k-1, so an archive with many tiers stores each bit of
+# residual information once (docs/architecture.md, "progressive decode").
+# --------------------------------------------------------------------- #
+def normalize_tiers(eps_targets: list[float], decimals: int | None) -> list[float]:
+    """Canonical tier ladder: unique eps targets sorted coarse -> fine
+    (strictly decreasing), the lossless tier (0.0) last.  The pyramid is
+    *defined* over this order — callers may pass targets in any order."""
+    tiers = sorted({float(e) for e in eps_targets}, reverse=True)
+    if tiers and tiers[-1] < 0.0:
+        raise ValueError(f"eps targets must be >= 0, got {tiers[-1]}")
+    if tiers and tiers[-1] == 0.0 and decimals is None:
+        raise ValueError("lossless stream requires `decimals`")
+    return tiers
+
+
+def _midpoint_rows_masked(
+    e: np.ndarray, eps_r: float, ns: np.ndarray | None
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Midpoint quantizer on rows e[S, T] (optionally ragged, padded past
+    ``ns``): returns (q int64 [S, T], r_lo [S], deq [S, T]) where ``deq`` is
+    recomputed from the *corrected* q — bitwise the array a decoder
+    produces from (q, r_lo, step), which is what lets the encoder carry the
+    decoder's reconstruction forward to the next layer."""
+    step = 2.0 * eps_r
+    if ns is None:
+        r_lo = e.min(axis=1) if e.size else np.zeros(e.shape[0])
+    else:
+        pad = np.arange(e.shape[1])[None, :] >= ns[:, None]
+        r_lo = np.where(
+            ns > 0, np.where(pad, np.inf, e).min(axis=1, initial=np.inf), 0.0
+        )
+    q = np.floor((e - r_lo[:, None]) / step).astype(np.int64)
+    # floor at bin boundaries can land one bin off in floating point; correct
+    # so |e - dequant| <= step/2 holds exactly (same fix as the flat path)
+    deq = r_lo[:, None] + (q.astype(np.float64) + 0.5) * step
+    q += (e - deq) > step / 2
+    q -= (deq - e) > step / 2
+    deq = r_lo[:, None] + (q.astype(np.float64) + 0.5) * step
+    return q, r_lo, deq
+
+
+def quantize_pyramid_batch(
+    values: np.ndarray,
+    preds: np.ndarray,
+    tiers: list[float],
+    decimals: int | None = None,
+    lengths: np.ndarray | None = None,
+) -> list[list[ResidualStream | None]]:
+    """Refinement-ladder quantization over rows values/preds[S, T].
+
+    ``tiers`` must be the :func:`normalize_tiers` ladder (strictly
+    decreasing, optional 0.0 last).  Returns ``layers[s][k]``: the
+    ``ResidualStream`` of series s at tier k, or ``None`` (an *identity*
+    layer) when the prefix through tier k-1 already meets tier k's
+    guarantee — e.g. every tier above the practical base error.
+
+    Guarantees, each property-tested in tests/test_pyramid_property.py:
+
+    * per-tier: |values - reconstruction through tier k| <= tiers[k];
+    * row s is bit-identical to the S == 1 call on (values[s], preds[s])
+      (every op is elementwise or a per-row masked reduction), which is
+      what keeps one-shot / streaming / batched / ragged paths
+      byte-identical per tier;
+    * the carried reconstruction is recomputed from the corrected integer
+      symbols exactly as a decoder recomputes it, so the lossless tier's
+      integer deltas match the decoder's integer view bit-for-bit.
+
+    With ``lengths`` (ragged rows padded to T) the per-row reductions run
+    over each row's valid prefix only and every emitted q stream is cut at
+    its row's length, so padding never reaches the entropy coder.
+    """
+    values = np.asarray(values, dtype=np.float64)
+    preds = np.asarray(preds, dtype=np.float64)
+    s, t = values.shape
+    ns = None if lengths is None else np.asarray(lengths, dtype=np.int64)
+    if ns is None:
+        valid = None
+    else:
+        valid = np.arange(t)[None, :] < ns[:, None]
+        values = np.where(valid, values, 0.0)
+        preds = np.where(valid, preds, 0.0)
+    out: list[list[ResidualStream | None]] = [[None] * len(tiers) for _ in range(s)]
+    recon = preds.copy()
+    for k, eps in enumerate(tiers):
+        if eps == 0.0:
+            if decimals is None:
+                raise ValueError("lossless stream requires `decimals`")
+            scale = 10.0**decimals
+            v_int = np.round(values * scale).astype(np.int64)
+            rec_int = np.round(recon * scale).astype(np.int64)
+            q = v_int - rec_int
+            for i in range(s):
+                qi = q[i] if ns is None else q[i, : ns[i]].copy()
+                out[i][k] = ResidualStream(
+                    eps_r=0.0, step=1.0 / scale, r_lo=0.0, mode="exact", q=qi
+                )
+            continue
+        e = values - recon
+        if valid is not None:
+            e = np.where(valid, e, 0.0)
+        m = np.abs(e).max(axis=1) if t else np.zeros(s)
+        need = np.flatnonzero(m > eps)
+        if need.size == 0:
+            continue  # identity layer for every row
+        full = need.size == s
+        q, r_lo, deq = _midpoint_rows_masked(
+            e if full else e[need], eps, None if ns is None else ns[need]
+        )
+        # the elementwise add is identical either way; skipping the fancy
+        # indexing when every row needs the layer (the common case) avoids
+        # two full-matrix gather/scatter copies per tier
+        if full:
+            recon = recon + deq
+        else:
+            recon[need] = recon[need] + deq
+        step = 2.0 * eps
+        for j, i in enumerate(need):
+            qi = q[j] if ns is None else q[j, : ns[i]].copy()
+            out[int(i)][k] = ResidualStream(
+                eps_r=eps, step=step, r_lo=float(r_lo[j]), mode="midpoint", q=qi
+            )
+    return out
+
+
+def quantize_pyramid(
+    values: np.ndarray,
+    pred: np.ndarray,
+    tiers: list[float],
+    decimals: int | None = None,
+) -> list[ResidualStream | None]:
+    """Single-series refinement ladder — the S == 1 row of
+    :func:`quantize_pyramid_batch` (same code path, hence bit-identical)."""
+    values = np.asarray(values, dtype=np.float64)
+    return quantize_pyramid_batch(values[None, :], pred[None, :], tiers, decimals)[0]

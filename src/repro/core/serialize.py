@@ -17,19 +17,26 @@ import zlib
 
 import numpy as np
 
-from . import entropy
 from .base import origin_index
 from .phases import eps_hat_for_level
-from .types import Base, FrameMeta, ResidualStream, ShrinkConfig, SubBase
+from .types import (
+    Base,
+    FrameMeta,
+    PyramidLayer,
+    ResidualPyramid,
+    ResidualStream,
+    ShrinkConfig,
+    SubBase,
+)
 
 __all__ = [
     "write_varint",
     "read_varint",
     "encode_base",
     "decode_base",
-    "encode_residuals",
-    "encode_residuals_batch",
-    "decode_residuals",
+    "pyramid_layers",
+    "encode_pyramid",
+    "decode_pyramid",
     "FramedWriter",
     "parse_framed_container",
     "frame_payload",
@@ -38,6 +45,9 @@ __all__ = [
 _BASE_MAGIC = b"SHRB"
 _RES_MAGIC = b"SHRR"
 _VERSION = 1
+_RES_VERSION = 2
+_MODE_CODE = {"midpoint": 0, "exact": 1, "identity": 2}
+_MODE_NAME = {v: k for k, v in _MODE_CODE.items()}
 _RAW_SLOPE = 255
 
 _STREAM_MAGIC = b"SHRKS"
@@ -175,47 +185,130 @@ def _decode_base_body(data: bytes) -> Base:
     return Base(n=n, config=config, vmin=vmin, vmax=vmax, subbases=subbases)
 
 
-def _residual_header(stream: ResidualStream) -> bytes:
-    return (
-        _RES_MAGIC
-        + bytes([0 if stream.mode == "midpoint" else 1])
-        + struct.pack("<ddd", stream.eps_r, stream.step, stream.r_lo)
+# --------------------------------------------------------------------- #
+# SHRR v2: the residual pyramid blob (per-layer directory + payload CRC;
+# normative byte layout in docs/wire-format.md)
+# --------------------------------------------------------------------- #
+def pyramid_layers(
+    tiers: list[float],
+    streams: list[ResidualStream | None],
+    payloads: list[bytes | None],
+) -> ResidualPyramid:
+    """Assemble a :class:`ResidualPyramid` from the quantizer's per-tier
+    streams and their already-entropy-coded payloads (``None`` at tier k
+    means an identity layer).  Split from :func:`encode_pyramid` so batch
+    compressors can run ONE entropy pass over every (series, layer) stream
+    and then assemble each series' pyramid from the shared result."""
+    layers: list[PyramidLayer] = []
+    for eps, st, payload in zip(tiers, streams, payloads):
+        if st is None:
+            layers.append(
+                PyramidLayer(eps=eps, mode="identity", step=0.0, r_lo=0.0, payload=None)
+            )
+        else:
+            layers.append(
+                PyramidLayer(
+                    eps=eps, mode=st.mode, step=st.step, r_lo=st.r_lo, payload=payload
+                )
+            )
+    return ResidualPyramid(layers=layers)
+
+
+def encode_pyramid(pyramid: ResidualPyramid) -> bytes:
+    """``SHRR`` v2 blob: version, per-layer directory (eps, mode, quantizer
+    params, payload length), CRC32 of directory + payload sections, then
+    the concatenated tagged entropy payloads in layer order."""
+    directory = bytearray()
+    body = bytearray()
+    for layer in pyramid.layers:
+        payload = layer.payload if layer.payload is not None else b""
+        if layer.mode == "identity" and payload:
+            raise ValueError("identity layer cannot carry a payload")
+        directory += struct.pack("<d", layer.eps)
+        directory.append(_MODE_CODE[layer.mode])
+        directory += struct.pack("<dd", layer.step, layer.r_lo)
+        write_varint(directory, len(payload))
+        body += payload
+    buf = bytearray()
+    buf += _RES_MAGIC
+    buf.append(_RES_VERSION)
+    write_varint(buf, len(pyramid.layers))
+    buf += directory
+    # one CRC over directory + payloads: a one-shot SHRK blob has no outer
+    # CRC, and a flipped f64 in the directory corrupts decode as surely as
+    # a flipped payload byte
+    buf += struct.pack(
+        "<I", zlib.crc32(bytes(directory) + bytes(body)) & 0xFFFFFFFF
     )
+    buf += body
+    return bytes(buf)
 
 
-def encode_residuals(stream: ResidualStream, backend: str = "best") -> bytes:
-    return _residual_header(stream) + entropy.encode_ints(stream.q, backend=backend)
-
-
-def encode_residuals_batch(streams: list[ResidualStream], backend: str = "best") -> list[bytes]:
-    """Batched ``encode_residuals`` for a mix of stream lengths.  The
-    entropy stage runs through ``entropy.encode_ints_batch`` — one
-    vectorized rANS pass for the whole batch when lengths agree, the masked
-    ragged machine otherwise; each returned blob is byte-identical to
-    ``encode_residuals(streams[i], backend)``."""
-    if not streams:
-        return []
-    n0 = streams[0].q.size
-    if all(st.q.size == n0 for st in streams):
-        qs: np.ndarray | list[np.ndarray] = np.stack([st.q for st in streams])
-    else:
-        qs = [st.q for st in streams]
-    blobs = entropy.encode_ints_batch(qs, backend=backend)
-    return [_residual_header(st) + blob for st, blob in zip(streams, blobs)]
-
-
-def decode_residuals(data: bytes) -> ResidualStream:
-    if data[:4] != _RES_MAGIC:
-        raise ValueError("bad residual magic")
-    if len(data) < 29:
-        raise ValueError("truncated residual blob")
-    mode = "midpoint" if data[4] == 0 else "exact"
-    eps_r, step, r_lo = struct.unpack_from("<ddd", data, 5)
+def decode_pyramid(data: bytes) -> ResidualPyramid:
+    """Parse a ``SHRR`` v2 blob.  Raises ``ValueError`` (never a raw
+    ``struct.error``/``IndexError``) on foreign, truncated, or corrupt
+    input, including a payload-section CRC mismatch."""
+    data = bytes(data)
+    if len(data) < 4 or data[:4] != _RES_MAGIC:
+        raise ValueError("bad residual pyramid magic: not a SHRR blob")
+    if len(data) < 5:
+        raise ValueError("truncated SHRR blob: missing version")
+    if data[4] != _RES_VERSION:
+        raise ValueError(
+            f"unsupported SHRR version {data[4]} (this build reads v{_RES_VERSION} "
+            "refinement pyramids; v1 independent-stream archives must be re-encoded)"
+        )
     try:
-        q = entropy.decode_ints(data[29:])
+        pos = 5
+        n_layers, pos = read_varint(data, pos)
+        dir_start = pos
+        dirent: list[tuple[float, int, float, float, int]] = []
+        for _ in range(n_layers):
+            if pos + 25 > len(data):
+                raise ValueError("truncated SHRR blob: layer directory cut short")
+            (eps,) = struct.unpack_from("<d", data, pos)
+            mode_code = data[pos + 8]
+            step, r_lo = struct.unpack_from("<dd", data, pos + 9)
+            pos += 25
+            ln, pos = read_varint(data, pos)
+            dirent.append((eps, mode_code, step, r_lo, ln))
     except (IndexError, struct.error) as e:
-        raise ValueError(f"truncated or corrupt residual payload: {e}") from e
-    return ResidualStream(eps_r=eps_r, step=step, r_lo=r_lo, mode=mode, q=q)
+        raise ValueError(f"truncated or corrupt SHRR blob: {e}") from e
+    directory = data[dir_start:pos]
+    if pos + 4 > len(data):
+        raise ValueError("truncated SHRR blob: missing CRC")
+    (crc,) = struct.unpack_from("<I", data, pos)
+    pos += 4
+    body = data[pos:]
+    if len(body) != sum(ln for *_, ln in dirent):
+        raise ValueError("corrupt SHRR blob: payload section length mismatch")
+    if zlib.crc32(directory + body) & 0xFFFFFFFF != crc:
+        raise ValueError("corrupt SHRR blob: CRC mismatch")
+    # the tier-ladder invariant resolve() depends on is normative: eps
+    # strictly decreasing coarse -> fine (0.0, the lossless tier, last)
+    eps_seq = [e for e, *_ in dirent]
+    if any(e < 0.0 for e in eps_seq):
+        raise ValueError("corrupt SHRR blob: negative tier eps")
+    if any(b >= a for a, b in zip(eps_seq, eps_seq[1:])):
+        raise ValueError(
+            "corrupt SHRR blob: tiers not strictly decreasing coarse -> fine"
+        )
+    layers: list[PyramidLayer] = []
+    off = 0
+    for eps, mode_code, step, r_lo, ln in dirent:
+        if mode_code not in _MODE_NAME:
+            raise ValueError(f"corrupt SHRR blob: unknown layer mode {mode_code}")
+        mode = _MODE_NAME[mode_code]
+        if mode == "identity" and ln:
+            raise ValueError("corrupt SHRR blob: identity layer with payload")
+        if mode != "identity" and not ln:
+            raise ValueError(f"corrupt SHRR blob: {mode} layer without payload")
+        payload = body[off : off + ln] if ln else None
+        off += ln
+        layers.append(
+            PyramidLayer(eps=eps, mode=mode, step=step, r_lo=r_lo, payload=payload)
+        )
+    return ResidualPyramid(layers=layers)
 
 
 # --------------------------------------------------------------------- #

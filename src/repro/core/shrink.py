@@ -1,10 +1,19 @@
 """The SHRINK codec (Alg. 1 of the paper): one base, many resolutions.
 
+Residuals are stored as a **layered refinement pyramid**: tier 0 quantizes
+the residual at the coarsest eps, every finer tier k quantizes the
+reconstruction error left by tiers 0..k-1 (the lossless tier as the final
+integer-domain refinement), so an archive with tiers {1e-1, 1e-2, 1e-3, 0}
+stores each bit of residual information once — decode-at-eps_k is
+``base + Σ layers 0..k`` and a multi-resolution archive is strictly
+smaller than independent per-eps streams.
+
 Usage:
 
     codec = ShrinkCodec.from_fraction(values, frac=0.05)     # eps_b = 5% range
     cs    = codec.compress(values, eps_targets=[1e-2, 1e-4], decimals=8)
     vhat  = codec.decompress_at(cs, 1e-4)                    # |vhat-v| <= 1e-4
+    mid   = codec.decompress_at(cs, 3e-3)                    # nearest tier <= 3e-3 (here 1e-4)
     exact = codec.decompress_at(cs, 0.0)                     # lossless
     blob  = cs_to_bytes(cs); cs2 = cs_from_bytes(blob)
 
@@ -13,8 +22,12 @@ Usage:
     css   = codec.compress_batch(values_st, eps_targets=[1e-2])   # [S, T]
     css   = codec.compress_batch([v1, v2, v3], eps_targets=[1e-2])  # ragged
 
-``eps == 0.0`` denotes the lossless stream (requires ``decimals``: the fixed
-decimal precision of the source data, Table II's "Decimal" column).
+``decompress_at`` accepts ANY eps: it resolves the cheapest layer prefix
+whose guarantee is <= the request (raising ``ValueError`` only when no
+tier qualifies).  ``eps == 0.0`` denotes the lossless tier (requires
+``decimals``: the fixed decimal precision of the source data, Table II's
+"Decimal" column).  ``ProgressiveDecoder`` exposes the same ladder
+incrementally — decode coarse now, refine later, paying only the delta.
 """
 from __future__ import annotations
 
@@ -25,6 +38,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from . import entropy
 from .base import (
     base_predictions,
     base_predictions_batch,
@@ -33,12 +47,9 @@ from .base import (
     practical_eps_b,
 )
 from .residuals import (
-    dequantize_exact,
-    dequantize_residuals,
-    quantize_exact,
-    quantize_exact_batch,
-    quantize_residuals,
-    quantize_residuals_batch,
+    normalize_tiers,
+    quantize_pyramid,
+    quantize_pyramid_batch,
 )
 from .semantics import (
     extract_semantics,
@@ -48,15 +59,16 @@ from .semantics import (
 )
 from .serialize import (
     decode_base,
-    decode_residuals,
+    decode_pyramid,
     encode_base,
-    encode_residuals,
-    encode_residuals_batch,
+    encode_pyramid,
+    pyramid_layers,
 )
 from .types import Base, CompressedSeries, ResidualStream, ShrinkConfig
 
 __all__ = [
     "ShrinkCodec",
+    "ProgressiveDecoder",
     "cs_to_bytes",
     "cs_from_bytes",
     "decompress_at",
@@ -121,9 +133,11 @@ class ShrinkCodec:
         value_range: tuple[float, float] | None = None,
         n_hint: int | None = None,
     ) -> CompressedSeries:
-        """Alg. 1: extract semantics once, then one residual stream per eps.
+        """Alg. 1: extract semantics once, then the residual refinement
+        pyramid over the eps-target ladder (tier k stores only the delta
+        below tier k-1's guarantee; 0.0 = lossless, needs ``decimals``).
 
-        eps == 0.0 requests the lossless stream (needs ``decimals``).
+
         ``value_range``/``n_hint`` pin the scan's global quantities (see
         ``extract_semantics``) so an incremental scan over the same data —
         ``core.streaming.ShrinkStreamCodec`` — produces byte-identical
@@ -240,33 +254,26 @@ class ShrinkCodec:
         eps_hats = np.array(
             [practical_eps_b(values[i], bases[i], pred=preds[i]) for i in range(s)]
         )
-        r = values - preds
 
-        residuals: list[dict[float, bytes | None]] = [{} for _ in range(s)]
-        todo: list[tuple[int, float, ResidualStream]] = []  # (series, eps, stream)
-        for eps in eps_targets:
-            if eps == 0.0:
-                if decimals is None:
-                    raise ValueError("lossless stream requires `decimals`")
-                streams = quantize_exact_batch(values, preds, decimals)
-                todo.extend((i, 0.0, streams[i]) for i in range(s))
-                continue
-            need = np.flatnonzero(eps < eps_hats)
-            for i in range(s):
-                residuals[i][eps] = None  # base-only unless quantized below
-            if need.size:
-                streams = quantize_residuals_batch(r[need], eps)
-                todo.extend((int(i), eps, streams[j]) for j, i in enumerate(need))
-        # one entropy pass for every stream of every target: the rANS batch
+        tiers = normalize_tiers(eps_targets, decimals)
+        layer_streams = quantize_pyramid_batch(values, preds, tiers, decimals)
+        # ONE entropy pass for every layer of every series: the rANS batch
         # interleaves all of them into a single vectorized state machine
-        blobs = encode_residuals_batch([st for _, _, st in todo], backend=self.backend)
-        for (i, eps, _), blob in zip(todo, blobs):
-            residuals[i][eps] = blob
+        todo = [
+            (i, k, st)
+            for i in range(s)
+            for k, st in enumerate(layer_streams[i])
+            if st is not None
+        ]
+        blobs = entropy.encode_ints_batch([st.q for _, _, st in todo], backend=self.backend)
+        payloads: list[list[bytes | None]] = [[None] * len(tiers) for _ in range(s)]
+        for (i, k, _), blob in zip(todo, blobs):
+            payloads[i][k] = blob
         return [
             CompressedSeries(
                 base=bases[i],
                 base_bytes=base_bytes[i],
-                residual_bytes=residuals[i],
+                pyramid=pyramid_layers(tiers, layer_streams[i], payloads[i]),
                 eps_b_practical=float(eps_hats[i]),
             )
             for i in range(s)
@@ -284,25 +291,27 @@ class ShrinkCodec:
         """Mixed-length lanes: percentile length-buckets, masked scans, one
         shared entropy pass.  Byte-identical (numpy semantics) to a
         per-series ``compress`` loop."""
-        if 0.0 in eps_targets and decimals is None:
-            raise ValueError("lossless stream requires `decimals`")
+        tiers = normalize_tiers(eps_targets, decimals)
         if max_buckets < 1:
             raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
         s = len(arrs)
         bases: list[Base | None] = [None] * s
         base_bytes: list[bytes | None] = [None] * s
         eps_hats = np.zeros(s)
-        residuals: list[dict[float, bytes | None]] = [{} for _ in range(s)]
-        todo: list[tuple[int, float, ResidualStream]] = []  # (series, eps, stream)
+        streams_of: list[list[ResidualStream | None]] = [
+            [None] * len(tiers) for _ in range(s)
+        ]
+        pyramids: list = [None] * s
+        todo: list[tuple[int, int, ResidualStream]] = []  # (series, layer, stream)
 
         nonempty = np.flatnonzero(ns > 0)
         for i in np.flatnonzero(ns == 0):
-            # an empty series carries an empty base and empty/absent streams;
+            # an empty series carries an empty base and empty/absent layers;
             # no batching to be had
             b = construct_base([], 0, 0.0, 0.0, self.config)
-            cs = encode_with_base(arrs[i], b, eps_targets, decimals, backend=self.backend)
+            cs = encode_with_base(arrs[i], b, tiers, decimals, backend=self.backend)
             bases[i], base_bytes[i] = cs.base, cs.base_bytes
-            residuals[i] = cs.residual_bytes
+            pyramids[i] = cs.pyramid
             eps_hats[i] = cs.eps_b_practical
 
         # percentile buckets: equal-count groups of the length-sorted series,
@@ -340,32 +349,28 @@ class ShrinkCodec:
                 bases[i] = bkt_bases[row]
                 base_bytes[i] = encode_base(bkt_bases[row])
                 eps_hats[i] = bkt_eps_hats[row]
-            for eps in eps_targets:
-                if eps == 0.0:
-                    streams = quantize_exact_batch(vals, preds, decimals, lengths=nb)
-                    todo.extend(
-                        (int(i), 0.0, streams[row]) for row, i in enumerate(bucket)
-                    )
-                    continue
-                for i in bucket:
-                    residuals[i][eps] = None  # base-only unless quantized below
-                need = np.flatnonzero(eps < bkt_eps_hats)
-                if need.size:
-                    streams = quantize_residuals_batch(r[need], eps, lengths=nb[need])
-                    todo.extend(
-                        (int(bucket[row]), eps, streams[j])
-                        for j, row in enumerate(need)
-                    )
-        # ONE entropy pass across every stream of every bucket and target:
+            bkt_streams = quantize_pyramid_batch(vals, preds, tiers, decimals, lengths=nb)
+            for row, i in enumerate(bucket):
+                streams_of[int(i)] = bkt_streams[row]
+                todo.extend(
+                    (int(i), k, st)
+                    for k, st in enumerate(bkt_streams[row])
+                    if st is not None
+                )
+        # ONE entropy pass across every layer of every bucket and series:
         # the ragged rANS machine interleaves all of them
-        blobs = encode_residuals_batch([st for _, _, st in todo], backend=self.backend)
-        for (i, eps, _), blob in zip(todo, blobs):
-            residuals[i][eps] = blob
+        blobs = entropy.encode_ints_batch([st.q for _, _, st in todo], backend=self.backend)
+        payloads: list[list[bytes | None]] = [[None] * len(tiers) for _ in range(s)]
+        for (i, k, _), blob in zip(todo, blobs):
+            payloads[i][k] = blob
+        for i in range(s):
+            if pyramids[i] is None:
+                pyramids[i] = pyramid_layers(tiers, streams_of[i], payloads[i])
         return [
             CompressedSeries(
                 base=bases[i],
                 base_bytes=base_bytes[i],
-                residual_bytes=residuals[i],
+                pyramid=pyramids[i],
                 eps_b_practical=float(eps_hats[i]),
             )
             for i in range(s)
@@ -375,22 +380,101 @@ class ShrinkCodec:
         return decompress_at(cs, eps)
 
 
+class ProgressiveDecoder:
+    """Incremental pyramid decode over one :class:`CompressedSeries`.
+
+    Layer prefixes are materialized on demand and every intermediate
+    reconstruction is kept, so refining from tier j to tier k > j pays
+    only for the layers in between — the serving layer's frame LRU caches
+    one of these per hot frame and a dashboard that first wants a coarse
+    sketch and then zooms in never decodes a layer twice.
+
+    ``prefix(k)``/``at(eps)`` return the reconstruction through layer k /
+    the cheapest tier satisfying ``eps``; arrays are cached and must be
+    treated as read-only by callers.
+    """
+
+    def __init__(self, cs: CompressedSeries):
+        self.cs = cs
+        self._layers = cs.pyramid.layers
+        # _recons[0] = base predictions; _recons[d + 1] = reconstruction
+        # through layer d (identity layers alias the previous entry)
+        self._recons: list[np.ndarray | None] = [None] * (len(self._layers) + 1)
+        self._depth = -1  # deepest materialized layer
+        self.layers_decoded = 0  # entropy decodes actually paid
+
+    # -- introspection ------------------------------------------------- #
+    @property
+    def depth(self) -> int:
+        """Deepest decoded layer index (-1 = base predictions only)."""
+        return self._depth
+
+    def guarantee(self, k: int | None = None) -> float:
+        """Error bound of the prefix through layer ``k`` (default: the
+        deepest decoded prefix)."""
+        d = self._depth if k is None else k
+        g = self.cs.eps_b_practical
+        if d >= 0:
+            g = min(g, self._layers[d].eps)
+        return g
+
+    def available(self) -> tuple[np.ndarray, float] | None:
+        """Best reconstruction decodable with ZERO additional entropy work:
+        ``(values, guarantee)``, or ``None`` when nothing is materialized
+        yet.  This is what lets a server answer coarse immediately and
+        fetch refinement layers on demand."""
+        if self._recons[self._depth + 1] is None:
+            return None
+        return self._recons[self._depth + 1], self.guarantee()
+
+    # -- decode -------------------------------------------------------- #
+    def _ensure_base(self) -> None:
+        if self._recons[0] is None:
+            base = self.cs.base if self.cs.base is not None else decode_base(self.cs.base_bytes)
+            self._recons[0] = base_predictions(base)
+
+    def prefix(self, k: int) -> np.ndarray:
+        """Reconstruction through layer ``k`` (-1 = base only), decoding
+        only the layers not yet materialized."""
+        self._ensure_base()
+        if k > self._depth:
+            recon = self._recons[self._depth + 1]
+            for d in range(self._depth + 1, k + 1):
+                layer = self._layers[d]
+                if layer.mode == "identity":
+                    out = recon  # tier exists, carries no bytes
+                elif layer.mode == "midpoint":
+                    q = entropy.decode_ints(layer.payload)
+                    self.layers_decoded += 1
+                    out = recon + (layer.r_lo + (q.astype(np.float64) + 0.5) * layer.step)
+                    recon = out
+                elif layer.mode == "exact":
+                    q = entropy.decode_ints(layer.payload)
+                    self.layers_decoded += 1
+                    decimals = int(round(-math.log10(layer.step)))
+                    scale = 10.0**decimals
+                    rec_int = np.round(recon * scale).astype(np.int64)
+                    out = (rec_int + q) / scale
+                else:  # pragma: no cover - constructor enforces modes
+                    raise ValueError(f"unknown layer mode {layer.mode!r}")
+                self._recons[d + 1] = out
+            self._depth = k
+        return self._recons[k + 1]
+
+    def at(self, eps: float) -> np.ndarray:
+        """Reconstruction with guarantee <= ``eps`` via the cheapest
+        sufficient layer prefix."""
+        return self.prefix(self.cs.pyramid.resolve(eps, self.cs.eps_b_practical))
+
+
 def decompress_at(cs: CompressedSeries, eps: float) -> np.ndarray:
-    """Reconstruct the series from ``cs`` at resolution ``eps``.  Stateless —
-    everything needed lives in the compressed series itself, which is what
-    lets range-decode consumers reconstruct frames without a codec."""
-    if eps not in cs.residual_bytes:
-        raise KeyError(f"no stream at eps={eps}")
-    blob = cs.residual_bytes[eps]
-    base = cs.base if cs.base is not None else decode_base(cs.base_bytes)
-    pred = base_predictions(base)
-    if blob is None:
-        return pred
-    stream = decode_residuals(blob)
-    if stream.mode == "exact":
-        decimals = int(round(-math.log10(stream.step)))
-        return dequantize_exact(stream, base, decimals)
-    return pred + dequantize_residuals(stream)
+    """Reconstruct the series from ``cs`` at resolution ``eps``: the
+    cheapest layer prefix whose guarantee is <= ``eps`` (any requested eps
+    resolves to the nearest sufficient tier; ``ValueError`` only when no
+    tier qualifies).  Stateless — everything needed lives in the compressed
+    series itself, which is what lets range-decode consumers reconstruct
+    frames without a codec."""
+    return ProgressiveDecoder(cs).at(eps)
 
 
 def encode_with_base(
@@ -401,48 +485,39 @@ def encode_with_base(
     backend: str = "best",
 ) -> CompressedSeries:
     """Residual-encoding tail of Alg. 1: given an already-constructed base,
-    emit one residual stream per eps target.  Shared by ``ShrinkCodec
-    .compress`` and the streaming frame sealer so both produce identical
-    bytes for identical (values, base) inputs."""
+    emit the refinement pyramid over the (normalized) eps-target ladder.
+    Shared by ``ShrinkCodec.compress`` and the streaming frame sealer so
+    both produce identical bytes for identical (values, base) inputs.  All
+    layers run through one batched entropy pass."""
     values = np.asarray(values, dtype=np.float64)
     base_bytes = encode_base(base)
     pred = base_predictions(base)
     eps_hat = practical_eps_b(values, base, pred=pred)
-    r = values - pred
-
-    residual_bytes: dict[float, bytes | None] = {}
-    for eps in eps_targets:
-        if eps == 0.0:
-            if decimals is None:
-                raise ValueError("lossless stream requires `decimals`")
-            stream = quantize_exact(values, base, decimals, pred=pred)
-            residual_bytes[0.0] = encode_residuals(stream, backend=backend)
-        elif eps >= eps_hat:
-            residual_bytes[eps] = None  # base-only suffices (Alg.1 l.9-10)
-        else:
-            stream = quantize_residuals(r, eps)
-            residual_bytes[eps] = encode_residuals(stream, backend=backend)
+    tiers = normalize_tiers(eps_targets, decimals)
+    streams = quantize_pyramid(values, pred, tiers, decimals)
+    todo = [(k, st) for k, st in enumerate(streams) if st is not None]
+    blobs = entropy.encode_ints_batch([st.q for _, st in todo], backend=backend)
+    payloads: list[bytes | None] = [None] * len(tiers)
+    for (k, _), blob in zip(todo, blobs):
+        payloads[k] = blob
     return CompressedSeries(
         base=base,
         base_bytes=base_bytes,
-        residual_bytes=residual_bytes,
+        pyramid=pyramid_layers(tiers, streams, payloads),
         eps_b_practical=eps_hat,
     )
 
 
 def cs_to_bytes(cs: CompressedSeries) -> bytes:
-    """``SHRK`` container: base + directory of residual streams (normative
-    byte layout in docs/wire-format.md)."""
+    """``SHRK`` container: base + the ``SHRR`` v2 residual pyramid blob
+    (normative byte layout in docs/wire-format.md)."""
+    pyr = encode_pyramid(cs.pyramid)
     buf = bytearray()
     buf += _CONTAINER_MAGIC
     buf += struct.pack("<dI", cs.eps_b_practical, len(cs.base_bytes))
     buf += cs.base_bytes
-    streams = sorted(cs.residual_bytes.items())
-    buf += struct.pack("<I", len(streams))
-    for eps, blob in streams:
-        body = blob if blob is not None else b""
-        buf += struct.pack("<dI", eps, len(body))
-        buf += body
+    buf += struct.pack("<I", len(pyr))
+    buf += pyr
     return bytes(buf)
 
 
@@ -462,24 +537,18 @@ def cs_from_bytes(data: bytes) -> CompressedSeries:
     base_bytes = data[pos : pos + base_len]
     pos += base_len
     if pos + 4 > len(data):
-        raise ValueError("truncated SHRK container: missing stream count")
-    (n_streams,) = struct.unpack_from("<I", data, pos)
+        raise ValueError("truncated SHRK container: missing pyramid length")
+    (pyr_len,) = struct.unpack_from("<I", data, pos)
     pos += 4
-    residual_bytes: dict[float, bytes | None] = {}
-    for _ in range(n_streams):
-        if pos + 12 > len(data):
-            raise ValueError("truncated SHRK container: stream directory cut short")
-        eps, ln = struct.unpack_from("<dI", data, pos)
-        pos += 12
-        if pos + ln > len(data):
-            raise ValueError("truncated SHRK container: residual stream cut short")
-        residual_bytes[eps] = data[pos : pos + ln] if ln else None
-        pos += ln
+    if pos + pyr_len > len(data):
+        raise ValueError("truncated SHRK container: residual pyramid cut short")
+    pyramid = decode_pyramid(data[pos : pos + pyr_len])
+    pos += pyr_len
     if pos != len(data):
-        raise ValueError("corrupt SHRK container: trailing bytes after last stream")
+        raise ValueError("corrupt SHRK container: trailing bytes after pyramid")
     return CompressedSeries(
         base=decode_base(base_bytes),
         base_bytes=bytes(base_bytes),
-        residual_bytes=residual_bytes,
+        pyramid=pyramid,
         eps_b_practical=eps_hat,
     )

@@ -24,7 +24,9 @@ provides it:
 
 * ``decode_range`` / ``decode_series`` — random access: a range query
   touches only the frames overlapping [t0, t1), verifying payload CRCs
-  lazily per touched frame.
+  lazily per touched frame.  Each frame payload is a ``SHRK`` container
+  holding a residual refinement *pyramid*, so any requested eps resolves
+  to the cheapest sufficient layer prefix of each touched frame.
 
 Exactness contract (property-tested in tests/test_streaming_property.py):
 every frame payload is byte-identical to ``ShrinkCodec.compress`` of that

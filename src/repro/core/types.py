@@ -162,17 +162,89 @@ class FrameMeta:
 
 
 @dataclasses.dataclass
+class PyramidLayer:
+    """One refinement layer of a :class:`ResidualPyramid`.
+
+    Layer k quantizes the reconstruction error of the prefix through layer
+    k-1 (layer 0 refines the bare base), so decoding at tier k is
+    ``base + Σ dequant(layers[0..k])`` and the whole archive stores each
+    bit of residual information once instead of once per tier.
+
+    mode 'midpoint': lossy refinement, |prefix error| <= eps after this
+                     layer (step = 2*eps, dequant at bin midpoints).
+    mode 'exact':    terminal lossless refinement in the integer domain at
+                     scale 1/step = 10^decimals (eps == 0.0).
+    mode 'identity': the previous prefix already meets this tier's eps —
+                     the tier exists in the directory but carries no bytes.
+    """
+
+    eps: float
+    mode: str  # 'midpoint' | 'exact' | 'identity'
+    step: float  # 0.0 for identity layers
+    r_lo: float  # midpoint bin origin; 0.0 for exact/identity layers
+    payload: Optional[bytes]  # tagged entropy blob; None iff mode == 'identity'
+
+    def nbytes(self) -> int:
+        return len(self.payload) if self.payload is not None else 0
+
+
+@dataclasses.dataclass
+class ResidualPyramid:
+    """Layered refinement pyramid: tiers coarse -> fine, eps strictly
+    decreasing, an optional lossless (eps == 0.0) layer last.  Replaces the
+    flat per-eps dict of independent streams: a tier is decoded by summing
+    the layer prefix 0..k, and finer tiers only pay for the *delta* below
+    the previous tier's guarantee."""
+
+    layers: list[PyramidLayer]
+
+    def tiers(self) -> list[float]:
+        return [layer.eps for layer in self.layers]
+
+    def resolve(self, eps: float, eps_b_practical: float) -> int:
+        """Index of the cheapest layer prefix whose guarantee is <= ``eps``
+        (-1 = the bare base suffices).  Any requested eps between tiers
+        resolves to the nearest finer tier; raises ``ValueError`` only when
+        no tier (nor the base) qualifies."""
+        if eps < 0.0:
+            raise ValueError(f"eps must be >= 0, got {eps}")
+        if eps >= eps_b_practical:
+            return -1
+        for k, layer in enumerate(self.layers):
+            if layer.eps <= eps:
+                return k
+        raise ValueError(
+            f"no tier with guarantee <= {eps!r}: archive tiers are "
+            f"{self.tiers()} (base-only above {eps_b_practical!r})"
+        )
+
+    def prefix_nbytes(self, k: int) -> int:
+        """Payload bytes needed to decode at layer k (-1 = base only)."""
+        return sum(layer.nbytes() for layer in self.layers[: k + 1])
+
+    def nbytes(self) -> int:
+        return self.prefix_nbytes(len(self.layers) - 1)
+
+
+@dataclasses.dataclass
 class CompressedSeries:
-    """A fully encoded series: one base + streams at each requested eps."""
+    """A fully encoded series: one base + a residual refinement pyramid."""
 
     base: Base
     base_bytes: bytes
-    # eps -> (stream_bytes or None if base-only suffices at this eps)
-    residual_bytes: dict[float, Optional[bytes]]
+    pyramid: ResidualPyramid
     # Practical base error threshold (max |v - base prediction|); eps values
     # above this are served base-only, exactly as Alg. 1 lines 8-10.
     eps_b_practical: float
 
+    def tiers(self) -> list[float]:
+        return self.pyramid.tiers()
+
     def size_at(self, eps: float) -> int:
-        rb = self.residual_bytes.get(eps)
-        return len(self.base_bytes) + (len(rb) if rb is not None else 0)
+        """Bytes needed to decode at resolution ``eps``: base + the cheapest
+        sufficient layer prefix."""
+        k = self.pyramid.resolve(eps, self.eps_b_practical)
+        return len(self.base_bytes) + self.pyramid.prefix_nbytes(k)
+
+    def total_nbytes(self) -> int:
+        return len(self.base_bytes) + self.pyramid.nbytes()

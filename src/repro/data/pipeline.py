@@ -19,9 +19,18 @@ from typing import Optional
 
 import numpy as np
 
+from ..core import entropy
 from ..core.shrink import ShrinkCodec, cs_from_bytes, cs_to_bytes
 
 __all__ = ["TokenPipeline", "ShardStore"]
+
+
+def _store_backend() -> str:
+    """zstd when the optional extra is installed (the historical choice for
+    bulk stores), the vectorized rANS engine otherwise.  NOT 'best': that
+    would pull the O(n) pure-python range coder into every encode just to
+    compare sizes."""
+    return "zstd" if "zstd" in entropy.available_backends() else "rans"
 
 
 @dataclasses.dataclass
@@ -86,7 +95,7 @@ class ShardStore:
         total = 0
         for c in range(n_chunks):
             seg = values[c * self.chunk : (c + 1) * self.chunk]
-            codec = ShrinkCodec.from_fraction(seg, frac=frac, backend="zstd")
+            codec = ShrinkCodec.from_fraction(seg, frac=frac, backend=_store_backend())
             cs = codec.compress(seg, eps_targets=eps_list, decimals=decimals)
             blob = cs_to_bytes(cs)
             (d / f"chunk_{c}.shrk").write_bytes(blob)

@@ -9,7 +9,11 @@ tests/test_kernels.py over shape/dtype sweeps):
                    adds on-device (XLA) segment compaction for the batched
                    codec pipeline
 * residual_quant — fused residual + quantize + clip + error feedback (Alg. 6)
+* pyramid_quant  — fused multi-layer refinement quantization (the device
+                   half of the residual pyramid: layer l quantizes the
+                   error layers 0..l-1 left behind, one VMEM pass)
 * dequant        — fused dequantize + linear reconstruct
+* pyramid_reconstruct — fused pred + Σ_l q_l·step_l over any layer prefix
 * flash_attention — online-softmax fused attention (sequential-kv grid)
 """
 from .ops import (  # noqa: F401
@@ -18,6 +22,8 @@ from .ops import (  # noqa: F401
     flash_attention,
     dequant_reconstruct,
     interval_stats,
+    pyramid_quant,
+    pyramid_reconstruct,
     residual_quant,
     use_interpret,
 )

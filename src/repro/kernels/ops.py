@@ -20,15 +20,17 @@ import jax.numpy as jnp
 from . import ref
 from .cone_scan import cone_scan_pallas
 from .flash_attention import flash_attention_pallas
-from .dequant import dequant_reconstruct_pallas
+from .dequant import dequant_reconstruct_pallas, pyramid_reconstruct_pallas
 from .interval_stats import interval_stats_pallas
-from .residual_quant import residual_quant_pallas
+from .residual_quant import pyramid_quant_pallas, residual_quant_pallas
 
 __all__ = [
     "flash_attention",
     "interval_stats",
     "residual_quant",
     "dequant_reconstruct",
+    "pyramid_quant",
+    "pyramid_reconstruct",
     "cone_scan",
     "cone_scan_segments",
     "use_interpret",
@@ -99,6 +101,46 @@ def dequant_reconstruct(
     if force_ref:
         return ref.dequant_reconstruct_ref(q, theta, slope, step)
     return dequant_reconstruct_pallas(q, theta, slope, step, interpret=use_interpret())
+
+
+def pyramid_quant(
+    x: jax.Array,
+    theta: jax.Array,
+    slope: jax.Array,
+    steps: jax.Array,
+    qmax: int = 127,
+    force_ref: bool = False,
+    lengths: jax.Array | None = None,
+):
+    """Fused multi-layer refinement quantization: layer l quantizes the
+    error layers 0..l-1 left behind (steps[L] coarse -> fine).  Returns
+    (qs int32 [L, M, N], err [M, N]).  ``lengths`` [M] marks ragged row
+    tails: positions >= lengths[m] emit q = 0 on every layer and err = 0."""
+    if force_ref:
+        return ref.pyramid_quant_ref(x, theta, slope, steps, qmax=qmax, lengths=lengths)
+    return _run_auto(
+        "pyramid_quant",
+        lambda i: pyramid_quant_pallas(
+            x, theta, slope, steps, lengths=lengths, qmax=qmax, interpret=i
+        ),
+    )
+
+
+def pyramid_reconstruct(
+    qs: jax.Array,
+    theta: jax.Array,
+    slope: jax.Array,
+    steps: jax.Array,
+    force_ref: bool = False,
+):
+    """Fused inverse of pyramid_quant: pred + Σ_l qs[l] * steps[l].  Feed a
+    layer prefix (qs[:k+1], steps[:k+1]) to reconstruct at tier k."""
+    if force_ref:
+        return ref.pyramid_reconstruct_ref(qs, theta, slope, steps)
+    return _run_auto(
+        "pyramid_reconstruct",
+        lambda i: pyramid_reconstruct_pallas(qs, theta, slope, steps, interpret=i),
+    )
 
 
 def cone_scan(

@@ -24,6 +24,8 @@ __all__ = [
     "interval_stats_ref",
     "residual_quant_ref",
     "dequant_reconstruct_ref",
+    "pyramid_quant_ref",
+    "pyramid_reconstruct_ref",
     "cone_scan_ref",
 ]
 
@@ -76,6 +78,62 @@ def dequant_reconstruct_ref(
     t = jnp.arange(n, dtype=theta.dtype)[None, :]
     pred = theta + slope * t
     return pred + q.astype(theta.dtype) * step
+
+
+def pyramid_quant_ref(
+    x: jax.Array,
+    theta: jax.Array,
+    slope: jax.Array,
+    steps: jax.Array,
+    qmax: int = 127,
+    lengths: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Multi-layer refinement quantization (the device half of the residual
+    pyramid): x[M, N]; theta/slope[M, 1] per-row base-line params;
+    steps[L] strictly decreasing quantizer steps, layer l quantizing the
+    error its predecessors left behind:
+
+        e_0 = x - pred;  q_l = clip(round(e_l / step_l));  e_{l+1} = e_l - q_l*step_l
+
+    Returns (qs int32 [L, M, N], err [M, N] = the error remaining after the
+    finest layer).  ``lengths`` [M] marks each row's ragged tail: positions
+    >= lengths[m] emit q = 0 across every layer and err = 0.
+    """
+    m, n = x.shape
+    t = jnp.arange(n, dtype=x.dtype)[None, :]
+    pred = theta + slope * t
+    e = x - pred
+    qs = []
+    num_layers = int(steps.shape[0])
+    for l in range(num_layers):
+        step = steps[l].astype(x.dtype)
+        q = jnp.clip(jnp.round(e / step), -qmax, qmax).astype(jnp.int32)
+        e = e - q.astype(x.dtype) * step
+        qs.append(q)
+    qs = jnp.stack(qs)
+    if lengths is not None:
+        valid = jnp.arange(n, dtype=jnp.int32)[None, :] < jnp.asarray(
+            lengths, jnp.int32
+        ).reshape(m, 1)
+        qs = jnp.where(valid[None], qs, 0)
+        e = jnp.where(valid, e, 0.0)
+    return qs, e
+
+
+def pyramid_reconstruct_ref(
+    qs: jax.Array,
+    theta: jax.Array,
+    slope: jax.Array,
+    steps: jax.Array,
+) -> jax.Array:
+    """Inverse of pyramid_quant at any layer prefix: feed qs[:k+1] and
+    steps[:k+1] to reconstruct through layer k; the full stack gives
+    pred + Σ_l q_l * step_l."""
+    m, n = qs.shape[1], qs.shape[2]
+    t = jnp.arange(n, dtype=theta.dtype)[None, :]
+    pred = theta + slope * t
+    contrib = (qs.astype(theta.dtype) * steps.astype(theta.dtype)[:, None, None]).sum(0)
+    return pred + contrib
 
 
 def cone_scan_ref(

@@ -27,7 +27,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["residual_quant_kernel", "residual_quant_pallas"]
+__all__ = [
+    "residual_quant_kernel",
+    "residual_quant_pallas",
+    "pyramid_quant_kernel",
+    "pyramid_quant_pallas",
+]
 
 
 def residual_quant_kernel(
@@ -46,6 +51,80 @@ def residual_quant_kernel(
     valid = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1) < len_ref[...]  # (bm, 1)
     q_ref[...] = jnp.where(valid, q, 0.0).astype(jnp.int32)
     err_ref[...] = jnp.where(valid, r - q * step, 0.0)
+
+
+def pyramid_quant_kernel(
+    x_ref, theta_ref, slope_ref, steps_ref, len_ref, q_ref, err_ref, *, qmax: int,
+    num_layers: int,
+):
+    """Fused multi-layer refinement quantization: one VMEM-resident pass
+    computes the base prediction once and runs the whole layer ladder on
+    the residual without ever spilling the intermediate error to HBM —
+    layer l quantizes what layers 0..l-1 left behind (the device analogue
+    of ``core.residuals.quantize_pyramid``'s ladder).  The layer loop is a
+    static python loop, so the VPU sees one straight-line elementwise
+    pipeline of L round/clip/subtract stages."""
+    x = x_ref[...]
+    theta = theta_ref[...]  # (bm, 1)
+    slope = slope_ref[...]  # (bm, 1)
+    n = x.shape[-1]
+    t = jax.lax.broadcasted_iota(x.dtype, (1, n), 1)
+    pred = theta + slope * t
+    e = x - pred
+    valid = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1) < len_ref[...]  # (bm, 1)
+    for l in range(num_layers):
+        step = steps_ref[0, l]
+        q = jnp.clip(jnp.round(e / step), -qmax, qmax)
+        e = e - q * step
+        q_ref[l, ...] = jnp.where(valid, q, 0.0).astype(jnp.int32)
+    err_ref[...] = jnp.where(valid, e, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "block_m", "interpret"))
+def pyramid_quant_pallas(
+    x: jax.Array,
+    theta: jax.Array,
+    slope: jax.Array,
+    steps: jax.Array,
+    lengths: jax.Array | None = None,
+    qmax: int = 127,
+    block_m: int = 8,
+    interpret: bool = True,
+):
+    """x[M, N]; theta/slope[M, 1]; steps[L] (coarse -> fine).  Returns
+    (qs int32 [L, M, N], err [M, N]): the per-layer refinement symbols and
+    the error left after the finest layer.  ``lengths`` [M] masks ragged
+    row tails (all layers' q and err forced to 0 past each row's
+    length)."""
+    m, n = x.shape
+    num_layers = int(steps.shape[0])
+    if lengths is None:
+        lengths = jnp.full((m,), n, jnp.int32)
+    len_in = jnp.asarray(lengths, jnp.int32).reshape(m, 1)
+    steps_in = jnp.asarray(steps, x.dtype).reshape(1, num_layers)
+    bm = min(block_m, m)
+    grid = (pl.cdiv(m, bm),)
+    kernel = functools.partial(pyramid_quant_kernel, qmax=qmax, num_layers=num_layers)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, num_layers), lambda i: (0, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((num_layers, bm, n), lambda i: (0, i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_layers, m, n), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, theta, slope, steps_in, len_in)
 
 
 @functools.partial(jax.jit, static_argnames=("qmax", "block_m", "interpret"))

@@ -45,7 +45,7 @@ from ..training.train_step import (
     make_prefill_step,
     make_train_step,
 )
-from .hlo_analysis import analyze_hlo
+from .hlo_analysis import analyze_hlo, compiled_cost_dict
 from .mesh import HW, make_production_mesh
 
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
@@ -199,7 +199,7 @@ def run_cell(
     compiled = lowered.compile()
     t_compile = time.time() - t0 - t_lower
 
-    cost = compiled.cost_analysis() or {}
+    cost = compiled_cost_dict(compiled) or {}
     try:
         mem = compiled.memory_analysis()
         mem_d = {

@@ -23,6 +23,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
     "AxisRules",
+    "abstract_mesh",
     "axis_rules",
     "current_rules",
     "shard",
@@ -142,7 +143,33 @@ def shard(x: jax.Array, *names) -> jax.Array:
     if len(names) != x.ndim:
         raise ValueError(f"shard(): {len(names)} names for rank-{x.ndim} array")
     spec = rules.spec(*names)
-    am = jax.sharding.get_abstract_mesh()
+    am = _get_abstract_mesh()
     if am is not None and not am.empty:
         return jax.lax.with_sharding_constraint(x, spec)
     return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def _get_abstract_mesh():
+    """The context AbstractMesh across jax versions: public
+    ``jax.sharding.get_abstract_mesh`` on new jax, the internal
+    ``jax._src.mesh`` getter on 0.4.x, ``None`` when neither exists (the
+    caller then constrains with an explicit NamedSharding)."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        try:
+            from jax._src import mesh as _mesh_lib
+
+            fn = getattr(_mesh_lib, "get_abstract_mesh", None)
+        except ImportError:  # pragma: no cover
+            fn = None
+    return fn() if fn is not None else None
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """Cross-version ``AbstractMesh`` constructor: new jax takes
+    ``(axis_sizes, axis_names)``, 0.4.x takes a single
+    ``((name, size), ...)`` shape tuple."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_sizes)))

@@ -25,12 +25,11 @@ import dataclasses
 from collections import OrderedDict, deque
 from typing import Callable, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.serialize import frame_payload, parse_framed_container
-from ..core.shrink import cs_from_bytes, decompress_at
+from ..core.shrink import ProgressiveDecoder, cs_from_bytes
 
 __all__ = ["Request", "ContinuousBatcher", "RangeQuery", "RangeQueryBatcher"]
 
@@ -128,7 +127,9 @@ class ContinuousBatcher:
 @dataclasses.dataclass
 class RangeQuery:
     """One range-decode request against a streamed container: reconstruct
-    samples [t0, t1) of ``series_id`` at resolution ``eps``."""
+    samples [t0, t1) of ``series_id`` at resolution ``eps``.  ``achieved``
+    reports the guarantee of the tier the pyramid actually served (always
+    <= eps on success; coarser than eps only for ``peek`` sketches)."""
 
     qid: int
     series_id: int
@@ -136,19 +137,29 @@ class RangeQuery:
     t1: int
     eps: float
     result: Optional[np.ndarray] = None
+    achieved: Optional[float] = None
     error: Optional[str] = None
 
 
 class RangeQueryBatcher:
-    """Batched random-access decode over a ``SHRKS`` framed container.
+    """Progressive batched random-access decode over a ``SHRKS`` container.
 
     The container directory is parsed once; each submitted query resolves
-    to the frames overlapping its range.  ``run`` drains the queue,
-    decoding each (frame, eps) at most once per batch and keeping up to
-    ``cache_frames`` reconstructed frames in an LRU for the next batch —
-    a gateway dashboard polling the same hot window repeatedly never
-    re-pays the entropy decode.  Frame payload CRCs are verified on first
-    touch (lazily, per the SHRKS contract).
+    to the frames overlapping its range.  Each frame payload holds a
+    residual refinement *pyramid*, and the LRU caches one
+    ``ProgressiveDecoder`` per hot frame — i.e. the frame's decoded **layer
+    prefix**, not a single-eps reconstruction:
+
+    * a query at a coarse eps decodes only the coarse layers;
+    * a later query at a finer eps on the same frame pays only the
+      refinement layers below the cached prefix (``layer_hits`` counts the
+      layers it did NOT have to re-decode);
+    * ``peek`` answers from whatever prefix is already materialized with
+      ZERO entropy work — serve the dashboard a coarse sketch immediately,
+      let ``run`` fetch refinement layers on demand.
+
+    Frame payload CRCs are verified on first touch (lazily, per the SHRKS
+    contract).
     """
 
     def __init__(self, blob: bytes, cache_frames: int = 32):
@@ -159,11 +170,18 @@ class RangeQueryBatcher:
             self._frames.setdefault(m.series_id, []).append(m)
         for frames in self._frames.values():
             frames.sort(key=lambda m: m.t_lo)
-        self._cache: OrderedDict[tuple[int, float], np.ndarray] = OrderedDict()
+        self._cache: OrderedDict[int, ProgressiveDecoder] = OrderedDict()
         self._cache_frames = cache_frames
         self.queue: deque[RangeQuery] = deque()
         self.completed: list[RangeQuery] = []
-        self.stats = {"queries": 0, "frames_decoded": 0, "frame_hits": 0, "errors": 0}
+        self.stats = {
+            "queries": 0,
+            "frames_decoded": 0,
+            "frame_hits": 0,
+            "layers_decoded": 0,
+            "layer_hits": 0,
+            "errors": 0,
+        }
 
     @property
     def series_ids(self) -> list[int]:
@@ -177,38 +195,91 @@ class RangeQueryBatcher:
     def submit(self, q: RangeQuery) -> None:
         self.queue.append(q)
 
-    def _decoded_frame(self, meta, eps: float) -> np.ndarray:
-        key = (meta.offset, eps)
-        hit = self._cache.get(key)
-        if hit is not None:
-            self._cache.move_to_end(key)
+    def _decoder(self, meta) -> ProgressiveDecoder:
+        dec = self._cache.get(meta.offset)
+        if dec is not None:
+            self._cache.move_to_end(meta.offset)
             self.stats["frame_hits"] += 1
-            return hit
-        cs = cs_from_bytes(frame_payload(self._blob, meta))
-        vals = decompress_at(cs, eps)
+            return dec
+        dec = ProgressiveDecoder(cs_from_bytes(frame_payload(self._blob, meta)))
         self.stats["frames_decoded"] += 1
-        self._cache[key] = vals
+        self._cache[meta.offset] = dec
         while len(self._cache) > self._cache_frames:
             self._cache.popitem(last=False)
-        return vals
+        return dec
 
-    def _serve(self, q: RangeQuery) -> None:
+    def _decoded_frame(self, meta, eps: float) -> tuple[np.ndarray, float]:
+        dec = self._decoder(meta)
+        k = dec.cs.pyramid.resolve(eps, dec.cs.eps_b_practical)
+        before = dec.layers_decoded
+        vals = dec.prefix(k)
+        paid = dec.layers_decoded - before
+        self.stats["layers_decoded"] += paid
+        # layers the cached prefix already covered (k+1 layers needed, minus
+        # identity layers which are free by construction)
+        needed = sum(
+            1 for layer in dec.cs.pyramid.layers[: k + 1] if layer.mode != "identity"
+        )
+        self.stats["layer_hits"] += needed - paid
+        return vals, dec.guarantee(k)
+
+    def _frames_for(self, q: RangeQuery) -> list:
         frames = self._frames.get(q.series_id)
         if not frames:
             raise ValueError(f"unknown series {q.series_id}")
         touched = [m for m in frames if m.t_lo < q.t1 and m.t_hi > q.t0]
         if q.t1 <= q.t0 or not touched or touched[0].t_lo > q.t0 or touched[-1].t_hi < q.t1:
             raise ValueError(f"range [{q.t0}, {q.t1}) not covered")
+        return touched
+
+    def _serve(self, q: RangeQuery) -> None:
+        touched = self._frames_for(q)
         out = np.empty(q.t1 - q.t0, dtype=np.float64)
+        achieved = 0.0
         expected = q.t0
         for m in touched:
             if m.t_lo > expected:
                 raise ValueError(f"gap in series {q.series_id} frames at sample {expected}")
-            vals = self._decoded_frame(m, q.eps)
+            vals, guarantee = self._decoded_frame(m, q.eps)
+            achieved = max(achieved, guarantee)
             lo, hi = max(q.t0, m.t_lo), min(q.t1, m.t_hi)
             out[lo - q.t0 : hi - q.t0] = vals[lo - m.t_lo : hi - m.t_lo]
             expected = hi
         q.result = out
+        q.achieved = achieved
+
+    def peek(self, q: RangeQuery) -> Optional[np.ndarray]:
+        """Serve ``q`` from already-cached layer prefixes with NO entropy
+        decode: returns a coarse sketch (setting ``q.result`` and
+        ``q.achieved`` to the coarsest cached guarantee among touched
+        frames), or ``None`` when any touched frame is cold.  The query
+        stays in / may still be submitted to the refinement queue —
+        ``run`` will then only pay for the missing layers."""
+        try:
+            touched = self._frames_for(q)
+        except ValueError:
+            return None
+        parts: list[tuple] = []
+        achieved = 0.0
+        expected = q.t0
+        for m in touched:
+            if m.t_lo > expected:
+                return None
+            dec = self._cache.get(m.offset)
+            avail = dec.available() if dec is not None else None
+            if avail is None:
+                return None
+            vals, guarantee = avail
+            achieved = max(achieved, guarantee)
+            parts.append((m, vals))
+            expected = m.t_hi
+        out = np.empty(q.t1 - q.t0, dtype=np.float64)
+        for m, vals in parts:
+            lo, hi = max(q.t0, m.t_lo), min(q.t1, m.t_hi)
+            out[lo - q.t0 : hi - q.t0] = vals[lo - m.t_lo : hi - m.t_lo]
+        q.result = out
+        q.achieved = achieved
+        return out
 
     def run(self) -> list[RangeQuery]:
         """Drain the queue; returns the queries completed by this call."""

@@ -38,7 +38,20 @@ except Exception:  # pragma: no cover
 
 from ..core.shrink import ShrinkCodec, cs_from_bytes, cs_to_bytes
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step", "CheckpointManager"]
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "latest_step",
+    "CheckpointManager",
+    "default_codec",
+]
+
+
+def default_codec() -> str:
+    """Best exact leaf codec available: ``zstd`` when the optional
+    ``zstandard`` extra is installed, raw bytes otherwise — checkpointing
+    must never require the extra."""
+    return "zstd" if _zstd is not None else "none"
 
 
 def _encode_leaf(arr: np.ndarray, codec: str) -> tuple[bytes, dict]:
@@ -62,7 +75,11 @@ def _encode_leaf(arr: np.ndarray, codec: str) -> tuple[bytes, dict]:
             meta["codec"] = "zstd"
             return _encode_leaf(arr, "zstd")[0], meta
         eps = max(frac * rng, 1e-12)
-        sc = ShrinkCodec.from_fraction(flat, frac=0.05, backend="zstd")
+        # zstd when installed (historical choice), rans otherwise — not
+        # "best", which would add an O(n) pure-python rc pass per leaf
+        sc = ShrinkCodec.from_fraction(
+            flat, frac=0.05, backend="zstd" if _zstd is not None else "rans"
+        )
         cs = sc.compress(flat, eps_targets=[eps])
         meta["eps"] = eps
         return cs_to_bytes(cs), meta
@@ -92,12 +109,14 @@ def save_checkpoint(
     directory: str | Path,
     step: int,
     state: Any,
-    codec: str = "zstd",
+    codec: str | None = None,
     asynchronous: bool = False,
 ) -> threading.Thread | None:
     """Snapshot `state` (any pytree) at `step`.  Returns the writer thread
-    when asynchronous."""
+    when asynchronous.  ``codec=None`` picks :func:`default_codec`."""
     directory = Path(directory)
+    if codec is None:
+        codec = default_codec()
     snap = [np.asarray(jax.device_get(x)) for x in jax.tree.leaves(state)]
     treedef = jax.tree.structure(state)
 
@@ -169,10 +188,10 @@ def load_checkpoint(
 class CheckpointManager:
     """keep_n rotation + async handles + resume helper."""
 
-    def __init__(self, directory: str | Path, keep_n: int = 3, codec: str = "zstd"):
+    def __init__(self, directory: str | Path, keep_n: int = 3, codec: str | None = None):
         self.dir = Path(directory)
         self.keep_n = keep_n
-        self.codec = codec
+        self.codec = codec if codec is not None else default_codec()
         self._pending: list[threading.Thread] = []
 
     def save(self, step: int, state: Any, asynchronous: bool = True) -> None:

@@ -110,7 +110,7 @@ class TrainingRunner:
         ckpt_dir: str,
         ckpt_every: int = 10,
         keep_n: int = 3,
-        codec: str = "zstd",
+        codec: str | None = None,  # None = best available (zstd or none)
         fail_at: Optional[int] = None,  # test hook: simulated crash
     ):
         self.step_fn = step_fn

@@ -66,6 +66,10 @@ def cache_specs(cache_tree, mesh: Mesh, batch_axes, seq_axis: str = "model") -> 
     for a in (batch_axes if isinstance(batch_axes, tuple) else (batch_axes,)):
         bsz *= mesh.shape[a]
     msz = mesh.shape.get("model", 1)
+    # canonicalize ("data",) -> "data": new jax normalizes singleton spec
+    # entries itself, 0.4.x keeps the tuple and the specs stop comparing equal
+    if isinstance(batch_axes, tuple) and len(batch_axes) == 1:
+        batch_axes = batch_axes[0]
 
     def spec(path, leaf):
         name = None

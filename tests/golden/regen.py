@@ -1,10 +1,13 @@
 """Golden wire-format fixture builders + regeneration script.
 
-The checked-in ``golden_v1.shrk`` / ``golden_v1.shrks`` fixtures pin the
-``SHRK`` and ``SHRKS`` byte layouts: tests/test_golden_format.py rebuilds
-them from source and asserts byte equality, so any accidental change to
-the serializers (varint layout, header fields, rANS framing, footer
+The checked-in ``golden_v2.shrk`` / ``golden_v2.shrks`` fixtures pin the
+``SHRK`` and ``SHRKS`` byte layouts (v2 = the SHRR v2 residual *pyramid*
+payload): tests/test_golden_format.py rebuilds them from source and
+asserts byte equality, so any accidental change to the serializers
+(varint layout, header fields, rANS framing, pyramid directory, footer
 order...) fails CI instead of silently orphaning previously written data.
+``golden_v2_pyramid.shrk`` additionally pins a full 4-tier ladder
+({1e-1, 1e-2, 1e-3, lossless} of range) including an identity layer.
 
 Escape hatch for an INTENTIONAL format change: bump the format version in
 serialize.py, rename the fixtures to ``golden_v<new>.*`` here and in the
@@ -23,9 +26,10 @@ import sys
 import numpy as np
 
 HERE = pathlib.Path(__file__).resolve().parent
-GOLDEN_SHRK = HERE / "golden_v1.shrk"
-GOLDEN_SHRKS = HERE / "golden_v1.shrks"
-GOLDEN_RAGGED = HERE / "golden_v1_ragged.shrks"
+GOLDEN_SHRK = HERE / "golden_v2.shrk"
+GOLDEN_SHRKS = HERE / "golden_v2.shrks"
+GOLDEN_RAGGED = HERE / "golden_v2_ragged.shrks"
+GOLDEN_PYRAMID = HERE / "golden_v2_pyramid.shrk"
 
 N = 1536
 EPS_TARGETS = [1e-2, 0.0]
@@ -58,6 +62,22 @@ def build_shrk() -> bytes:
     v = golden_series()
     codec = ShrinkCodec(config=_cfg(v), backend="rans")
     return cs_to_bytes(codec.compress(v, EPS_TARGETS, decimals=DECIMALS))
+
+
+def pyramid_tiers(v: np.ndarray) -> list[float]:
+    """The standard 4-tier ladder: {1e-1, 1e-2, 1e-3} of range + lossless.
+    The coarsest tier lands above the practical base error, so the fixture
+    pins an identity layer too."""
+    rng = float(v.max() - v.min())
+    return [1e-1 * rng, 1e-2 * rng, 1e-3 * rng, 0.0]
+
+
+def build_pyramid_shrk() -> bytes:
+    from repro.core import ShrinkCodec, cs_to_bytes
+
+    v = golden_series()
+    codec = ShrinkCodec(config=_cfg(v), backend="rans")
+    return cs_to_bytes(codec.compress(v, pyramid_tiers(v), decimals=DECIMALS))
 
 
 def build_shrks() -> bytes:
@@ -109,9 +129,11 @@ def main() -> None:
     GOLDEN_SHRK.write_bytes(build_shrk())
     GOLDEN_SHRKS.write_bytes(build_shrks())
     GOLDEN_RAGGED.write_bytes(build_ragged_shrks())
+    GOLDEN_PYRAMID.write_bytes(build_pyramid_shrk())
     print(f"wrote {GOLDEN_SHRK} ({GOLDEN_SHRK.stat().st_size} B)")
     print(f"wrote {GOLDEN_SHRKS} ({GOLDEN_SHRKS.stat().st_size} B)")
     print(f"wrote {GOLDEN_RAGGED} ({GOLDEN_RAGGED.stat().st_size} B)")
+    print(f"wrote {GOLDEN_PYRAMID} ({GOLDEN_PYRAMID.stat().st_size} B)")
 
 
 if __name__ == "__main__":

@@ -81,7 +81,7 @@ def test_compress_batch_roundtrip_guarantees():
     batch = codec.compress_batch(v, eps_targets=[eps, 0.0], decimals=4)
     for i in range(s):
         vhat = codec.decompress_at(batch[i], eps)
-        bound = batch[i].eps_b_practical if batch[i].residual_bytes[eps] is None else eps
+        bound = batch[i].eps_b_practical if batch[i].pyramid.layers[0].mode == "identity" else eps
         assert np.max(np.abs(vhat - v[i])) <= bound * (1 + 1e-9) + 1e-12
         exact = codec.decompress_at(batch[i], 0.0)
         np.testing.assert_array_equal(exact, v[i])
@@ -99,7 +99,7 @@ def test_compress_batch_pallas_route_runs():
     batch = codec.compress_batch(v, eps_targets=[eps], semantics="pallas")
     for i in range(s):
         vhat = codec.decompress_at(batch[i], eps)
-        bound = batch[i].eps_b_practical if batch[i].residual_bytes[eps] is None else eps
+        bound = batch[i].eps_b_practical if batch[i].pyramid.layers[0].mode == "identity" else eps
         assert np.max(np.abs(vhat - v[i])) <= bound * (1 + 1e-6) + 1e-9
 
 
@@ -122,6 +122,7 @@ def test_compress_batch_base_only_streams():
     big_eps = 10.0 * float(v.max() - v.min())
     batch = codec.compress_batch(v, eps_targets=[big_eps])
     for i in range(s):
-        assert batch[i].residual_bytes[big_eps] is None
+        assert batch[i].pyramid.layers[0].mode == "identity"
+        assert batch[i].pyramid.layers[0].payload is None
         vhat = codec.decompress_at(batch[i], big_eps)
         assert np.max(np.abs(vhat - v[i])) <= batch[i].eps_b_practical * (1 + 1e-9)

@@ -23,7 +23,27 @@ def _state(seed=0):
     }
 
 
-@pytest.mark.parametrize("codec", ["none", "zstd"])
+def _has_zstd() -> bool:
+    try:
+        import zstandard  # noqa: F401
+
+        return True
+    except ImportError:
+        return False
+
+
+@pytest.mark.parametrize(
+    "codec",
+    [
+        "none",
+        pytest.param(
+            "zstd",
+            marks=pytest.mark.skipif(
+                not _has_zstd(), reason="optional zstandard extra not installed"
+            ),
+        ),
+    ],
+)
 def test_roundtrip_exact(tmp_path, codec):
     state = _state()
     save_checkpoint(tmp_path, 3, state, codec=codec)

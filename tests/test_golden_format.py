@@ -58,6 +58,35 @@ def test_ragged_shrks_bytes_stable():
     )
 
 
+def test_pyramid_shrk_bytes_stable():
+    expected = _fixture(golden.GOLDEN_PYRAMID)
+    got = golden.build_pyramid_shrk()
+    assert got == expected, (
+        "4-tier pyramid SHRK bytes changed — wire-format regression "
+        "(see tests/golden/regen.py for the intentional-change procedure)"
+    )
+
+
+def test_pyramid_golden_fixture_still_decodes_every_tier():
+    """The checked-in 4-tier archive must decode at every tier within that
+    tier's guarantee, and bit-exactly at the lossless tier — guards the
+    layer-prefix decoder against misreading old pyramid data."""
+    import numpy as np
+
+    from repro.core import cs_from_bytes
+    from repro.core.shrink import decompress_at
+
+    v = golden.golden_series()
+    cs = cs_from_bytes(_fixture(golden.GOLDEN_PYRAMID))
+    tiers = golden.pyramid_tiers(v)
+    assert cs.tiers() == tiers
+    assert cs.pyramid.layers[0].mode == "identity"  # 1e-1·range > epŝ_b
+    for eps in tiers[:-1]:
+        err = np.max(np.abs(decompress_at(cs, eps) - v))
+        assert err <= eps * (1 + 1e-9), eps
+    assert np.array_equal(np.round(decompress_at(cs, 0.0), golden.DECIMALS), v)
+
+
 def test_ragged_golden_fixture_still_decodes():
     """The checked-in ragged container must reconstruct every series from
     its two frames — guards the decoder against misreading old ragged

@@ -9,6 +9,8 @@ from repro.kernels import (
     cone_scan,
     dequant_reconstruct,
     interval_stats,
+    pyramid_quant,
+    pyramid_reconstruct,
     residual_quant,
 )
 from repro.kernels import ref
@@ -87,6 +89,65 @@ def test_quant_dequant_error_bound():
     q, err = residual_quant(x, theta, slope, step, qmax=127)
     xh = dequant_reconstruct(q, theta, slope, step)
     assert np.max(np.abs(np.asarray(xh) - np.asarray(x))) <= 0.025 + 1e-6
+
+
+# ------------------------------------------------------------ pyramid_quant
+@pytest.mark.parametrize("m,n", [(8, 128), (32, 256), (5, 384)])
+@pytest.mark.parametrize("num_layers", [1, 3])
+def test_pyramid_quant_matches_ref(m, n, num_layers):
+    x = jnp.asarray(_RNG.standard_normal((m, n)), dtype=jnp.float32)
+    theta = jnp.asarray(_RNG.standard_normal((m, 1)), dtype=jnp.float32)
+    slope = jnp.asarray(_RNG.standard_normal((m, 1)) * 0.01, dtype=jnp.float32)
+    steps = jnp.asarray([0.5, 0.05, 0.005][:num_layers], jnp.float32)
+    qs, err = pyramid_quant(x, theta, slope, steps)
+    qs_r, err_r = ref.pyramid_quant_ref(x, theta, slope, steps)
+    assert qs.shape == (num_layers, m, n)
+    np.testing.assert_array_equal(np.asarray(qs), np.asarray(qs_r))
+    np.testing.assert_allclose(np.asarray(err), np.asarray(err_r), atol=2e-6)
+
+
+def test_pyramid_quant_ragged_tails_inert():
+    m, n = 6, 256
+    x = jnp.asarray(_RNG.standard_normal((m, n)), dtype=jnp.float32)
+    theta = jnp.zeros((m, 1), jnp.float32)
+    slope = jnp.zeros((m, 1), jnp.float32)
+    steps = jnp.asarray([0.5, 0.05], jnp.float32)
+    lengths = jnp.asarray([n, 0, 17, 100, 1, 255], jnp.int32)
+    qs, err = pyramid_quant(x, theta, slope, steps, lengths=lengths)
+    qs_r, err_r = ref.pyramid_quant_ref(x, theta, slope, steps, lengths=lengths)
+    np.testing.assert_array_equal(np.asarray(qs), np.asarray(qs_r))
+    np.testing.assert_allclose(np.asarray(err), np.asarray(err_r), atol=2e-6)
+    pos = np.arange(n)[None, :]
+    pad = pos >= np.asarray(lengths)[:, None]
+    assert (np.asarray(qs)[:, pad] == 0).all()
+    assert (np.asarray(err)[pad] == 0).all()
+
+
+def test_pyramid_reconstruct_prefix_refines():
+    """Each successive layer prefix tightens the reconstruction error down
+    to that layer's step/2 (no clipping in this regime), and the fused
+    kernel matches the oracle at every prefix."""
+    m, n = 16, 256
+    x = jnp.asarray(_RNG.standard_normal((m, n)), dtype=jnp.float32)
+    theta = jnp.asarray(_RNG.standard_normal((m, 1)), dtype=jnp.float32)
+    slope = jnp.asarray(_RNG.standard_normal((m, 1)) * 0.01, dtype=jnp.float32)
+    steps = jnp.asarray([0.5, 0.05, 0.005], jnp.float32)
+    qs, err = pyramid_quant(x, theta, slope, steps, qmax=32767)
+    prev = np.inf
+    for k in range(3):
+        xh = pyramid_reconstruct(qs[: k + 1], theta, slope, steps[: k + 1])
+        xh_r = ref.pyramid_reconstruct_ref(qs[: k + 1], theta, slope, steps[: k + 1])
+        np.testing.assert_allclose(np.asarray(xh), np.asarray(xh_r), atol=2e-6)
+        bound = float(steps[k]) / 2
+        worst = np.max(np.abs(np.asarray(xh) - np.asarray(x)))
+        assert worst <= bound + 1e-5
+        assert worst <= prev
+        prev = worst
+    # the full stack's remaining error is exactly the kernel's err output
+    xh = pyramid_reconstruct(qs, theta, slope, steps)
+    np.testing.assert_allclose(
+        np.asarray(x - xh), np.asarray(err), atol=1e-5
+    )
 
 
 # ------------------------------------------------------------ cone_scan

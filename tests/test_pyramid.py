@@ -1,0 +1,252 @@
+"""Deterministic tests for the residual refinement pyramid: tier
+resolution (nearest sufficient tier, float near-miss keys), progressive
+layer-prefix decode, archive-size ordering vs independent streams, and the
+progressive serving path."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ProgressiveDecoder,
+    ShrinkCodec,
+    ShrinkConfig,
+    ShrinkStreamCodec,
+    cs_from_bytes,
+    cs_to_bytes,
+    decompress_at,
+)
+from repro.core.semantics import global_range
+from repro.serving import RangeQuery, RangeQueryBatcher
+
+
+def _series(n=20_000, seed=0, decimals=4):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    v = np.sin(t * 0.01) * 3 + 0.5 * np.sin(t * 0.002) + rng.normal(0, 0.05, n)
+    return np.round(v, decimals)
+
+
+def _codec(v, backend="rans"):
+    return ShrinkCodec.from_fraction(v, frac=0.05, backend=backend)
+
+
+def _tiers(v):
+    rng = float(v.max() - v.min())
+    return [1e-1 * rng, 1e-2 * rng, 1e-3 * rng, 0.0]
+
+
+@pytest.fixture(scope="module")
+def archive():
+    v = _series()
+    codec = _codec(v)
+    cs = codec.compress(v, eps_targets=_tiers(v), decimals=4)
+    return v, codec, cs
+
+
+# ------------------------------------------------------------- resolution
+def test_every_tier_meets_its_guarantee(archive):
+    v, codec, cs = archive
+    for eps in cs.tiers()[:-1]:
+        err = np.max(np.abs(decompress_at(cs, eps) - v))
+        assert err <= eps * (1 + 1e-9), eps
+    assert np.array_equal(np.round(decompress_at(cs, 0.0), 4), v)
+
+
+def test_near_miss_eps_resolves_to_nearest_sufficient_tier(archive):
+    """Float keys must NOT need to match a tier exactly: any eps resolves
+    to the cheapest layer prefix with guarantee <= eps."""
+    v, codec, cs = archive
+    t0, t1, t2, _ = cs.tiers()
+    # between tiers: resolves to the finer neighbour
+    mid = 0.5 * (t1 + t2)
+    assert np.max(np.abs(decompress_at(cs, mid) - v)) <= mid
+    assert cs.size_at(mid) == cs.size_at(t2)
+    # one-ulp above a tier still uses that tier (no accidental refinement)
+    just_above = t1 * (1 + 1e-12)
+    assert cs.size_at(just_above) == cs.size_at(t1)
+    # one-ulp below a tier must refine to the next tier down
+    just_below = t1 * (1 - 1e-12)
+    assert cs.size_at(just_below) == cs.size_at(t2)
+    assert np.max(np.abs(decompress_at(cs, just_below) - v)) <= just_below
+    # way above everything: base-only
+    assert cs.size_at(10 * t0) == len(cs.base_bytes)
+
+
+def test_unsatisfiable_eps_raises_value_error_not_key_error():
+    v = _series(5_000, seed=3)
+    codec = _codec(v)
+    rng = float(v.max() - v.min())
+    cs = codec.compress(v, eps_targets=[1e-2 * rng])  # no lossless tier
+    with pytest.raises(ValueError, match="no tier"):
+        decompress_at(cs, 1e-9 * rng)
+    with pytest.raises(ValueError):
+        decompress_at(cs, -1.0)
+    # an archive with NO tiers still serves base-only above epŝ_b
+    cs0 = codec.compress(v, eps_targets=[])
+    assert cs0.tiers() == []
+    vhat = decompress_at(cs0, cs0.eps_b_practical)
+    assert np.max(np.abs(vhat - v)) <= cs0.eps_b_practical * (1 + 1e-9)
+    with pytest.raises(ValueError, match="no tier"):
+        decompress_at(cs0, cs0.eps_b_practical / 2)
+
+
+def test_requested_eps_between_base_and_first_tier(archive):
+    """epŝ_b <= eps < coarsest tier must serve base-only (the Alg. 1
+    base-only regime survives the pyramid refactor)."""
+    v, codec, cs = archive
+    eps = cs.eps_b_practical * 1.0001
+    vhat = decompress_at(cs, eps)
+    assert np.max(np.abs(vhat - v)) <= cs.eps_b_practical * (1 + 1e-9)
+    assert cs.size_at(eps) == len(cs.base_bytes)
+
+
+# ------------------------------------------------------------- size shape
+def test_layer_prefix_sizes_monotone(archive):
+    v, codec, cs = archive
+    sizes = [cs.size_at(e) for e in cs.tiers()]
+    assert sizes == sorted(sizes)
+    assert sizes[0] >= len(cs.base_bytes)
+
+
+def test_pyramid_archive_smaller_than_independent_streams(archive):
+    """The tentpole claim at unit scale: one layered archive vs the same
+    tiers encoded independently from the base (the pre-pyramid layout)."""
+    v, codec, cs = archive
+    tiers = _tiers(v)
+    independent = sum(
+        codec.compress(v, eps_targets=[e], decimals=4).pyramid.nbytes()
+        for e in tiers
+    )
+    assert cs.pyramid.nbytes() < independent
+
+
+def test_lossless_tier_total_close_to_lossless_alone(archive):
+    """The whole 4-tier ladder costs at most ~15% over encoding ONLY the
+    lossless stream — the refinement layers subsume the coarse tiers."""
+    v, codec, cs = archive
+    lossless_only = codec.compress(v, eps_targets=[0.0], decimals=4)
+    assert cs.pyramid.nbytes() <= 1.15 * lossless_only.pyramid.nbytes()
+
+
+# ------------------------------------------------------- progressive decode
+def test_progressive_decoder_refines_incrementally(archive):
+    v, codec, cs = archive
+    dec = ProgressiveDecoder(cs)
+    assert dec.depth == -1 and dec.available() is None
+    tiers = cs.tiers()
+    paid = []
+    for eps in tiers:
+        out = dec.at(eps)
+        expected = decompress_at(cs, eps)
+        np.testing.assert_array_equal(out, expected)
+        paid.append(dec.layers_decoded)
+    # refinement never re-decodes: total layer decodes == non-identity layers
+    non_identity = sum(1 for l in cs.pyramid.layers if l.mode != "identity")
+    assert paid[-1] == non_identity
+    assert paid == sorted(paid)
+    # zero-cost availability after refinement
+    vals, g = dec.available()
+    assert g == 0.0
+    np.testing.assert_array_equal(vals, decompress_at(cs, 0.0))
+    # asking for a coarser tier after refining is free and exact
+    before = dec.layers_decoded
+    np.testing.assert_array_equal(dec.at(tiers[1]), decompress_at(cs, tiers[1]))
+    assert dec.layers_decoded == before
+
+
+def test_progressive_decoder_guarantee_reporting(archive):
+    v, codec, cs = archive
+    dec = ProgressiveDecoder(cs)
+    t1 = cs.tiers()[1]
+    dec.at(t1)
+    assert dec.guarantee() <= t1
+    assert np.max(np.abs(dec.available()[0] - v)) <= dec.guarantee() * (1 + 1e-9)
+
+
+# ------------------------------------------------------- cross-path bytes
+def test_streaming_frames_byte_identical_per_tier():
+    v = _series(4_096, seed=7)
+    cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
+    tiers = _tiers(v)
+    codec = ShrinkCodec(config=cfg, backend="rans")
+    sc = ShrinkStreamCodec(
+        cfg, eps_targets=tiers, decimals=4, backend="rans",
+        value_range=global_range(v), frame_len=1024,
+    )
+    for lo in range(0, v.size, 100):
+        sc.ingest(v[lo : lo + 100])
+    blob = sc.finalize()
+    from repro.core.serialize import frame_payload, parse_framed_container
+
+    metas, _ = parse_framed_container(blob)
+    for m in metas:
+        one_shot = codec.compress(
+            v[m.t_lo : m.t_hi], eps_targets=tiers, decimals=4,
+            value_range=global_range(v), n_hint=1024,
+        )
+        assert frame_payload(blob, m) == cs_to_bytes(one_shot)
+
+
+# ------------------------------------------------------- progressive serving
+def _shrks_archive(v, tiers, frame_len=2_048):
+    cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
+    sc = ShrinkStreamCodec(
+        cfg, eps_targets=tiers, decimals=4, backend="rans",
+        value_range=global_range(v), frame_len=frame_len,
+    )
+    sc.ingest(v)
+    return sc.finalize()
+
+
+def test_range_batcher_serves_coarse_then_refines():
+    v = _series(8_192, seed=11)
+    tiers = _tiers(v)
+    blob = _shrks_archive(v, tiers)
+    b = RangeQueryBatcher(blob, cache_frames=8)
+
+    # cold peek: nothing cached yet
+    q0 = RangeQuery(qid=0, series_id=0, t0=100, t1=3_000, eps=tiers[1])
+    assert b.peek(q0) is None
+
+    # coarse pass decodes only the coarse layers
+    b.submit(q0)
+    (done0,) = b.run()
+    assert done0.error is None and done0.achieved <= tiers[1]
+    assert np.max(np.abs(done0.result - v[100:3_000])) <= done0.achieved * (1 + 1e-9)
+    coarse_layers = b.stats["layers_decoded"]
+
+    # warm peek now answers instantly at the cached guarantee
+    q1 = RangeQuery(qid=1, series_id=0, t0=100, t1=3_000, eps=0.0)
+    sketch = b.peek(q1)
+    assert sketch is not None and q1.achieved <= tiers[1]
+    layers_after_peek = b.stats["layers_decoded"]
+    assert layers_after_peek == coarse_layers  # peek paid nothing
+
+    # refining the same frames pays only the *extra* layers
+    b.submit(q1)
+    (done1,) = b.run()
+    assert done1.achieved == 0.0
+    np.testing.assert_array_equal(done1.result, v[100:3_000])
+    assert b.stats["layer_hits"] > 0  # cached coarse prefix was reused
+    # same-tier repeat is fully cached
+    before = b.stats["layers_decoded"]
+    b.submit(RangeQuery(qid=2, series_id=0, t0=200, t1=2_000, eps=0.0))
+    b.run()
+    assert b.stats["layers_decoded"] == before
+
+
+def test_range_batcher_results_match_decode_range():
+    from repro.core import decode_range
+
+    v = _series(6_000, seed=13)
+    tiers = _tiers(v)
+    blob = _shrks_archive(v, tiers, frame_len=1_024)
+    b = RangeQueryBatcher(blob, cache_frames=4)
+    for qid, (t0, t1, eps) in enumerate(
+        [(0, 6_000, tiers[2]), (512, 2_000, 0.0), (3_000, 5_999, tiers[1])]
+    ):
+        b.submit(RangeQuery(qid=qid, series_id=0, t0=t0, t1=t1, eps=eps))
+    for q in b.run():
+        assert q.error is None, q.error
+        np.testing.assert_array_equal(
+            q.result, decode_range(blob, 0, q.t0, q.t1, q.eps)
+        )

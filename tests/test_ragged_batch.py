@@ -142,7 +142,7 @@ def test_ragged_roundtrip_guarantees():
     for i, v in enumerate(series):
         cs = cs_from_bytes(cs_to_bytes(batch[i]))  # survive the container
         vhat = codec.decompress_at(cs, eps)
-        bound = batch[i].eps_b_practical if batch[i].residual_bytes[eps] is None else eps
+        bound = batch[i].eps_b_practical if batch[i].pyramid.layers[0].mode == "identity" else eps
         if v.size:
             assert np.max(np.abs(vhat - v)) <= bound * (1 + 1e-9) + 1e-12
         np.testing.assert_array_equal(np.round(codec.decompress_at(cs, 0.0), 4), v)
@@ -159,7 +159,7 @@ def test_ragged_compress_batch_pallas_route_runs():
     batch = codec.compress_batch(series, eps_targets=[eps], semantics="pallas")
     for i, v in enumerate(series):
         vhat = codec.decompress_at(batch[i], eps)
-        bound = batch[i].eps_b_practical if batch[i].residual_bytes[eps] is None else eps
+        bound = batch[i].eps_b_practical if batch[i].pyramid.layers[0].mode == "identity" else eps
         assert np.max(np.abs(vhat - v)) <= bound * (1 + 1e-6) + 1e-9, i
 
 

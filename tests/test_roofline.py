@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, compiled_cost_dict
 
 
 def _compile_text(fn, *args):
@@ -24,7 +24,7 @@ def test_cost_analysis_undercounts_scans_and_we_fix_it():
         return c
 
     compiled = jax.jit(scanned).lower(x, ws).compile()
-    raw = compiled.cost_analysis()["flops"]
+    raw = compiled_cost_dict(compiled)["flops"]
     fixed = analyze_hlo(compiled.as_text()).flops
     one_matmul = 2 * 256**3
     assert raw < 2 * one_matmul, "cost_analysis now loop-corrects; update docs"

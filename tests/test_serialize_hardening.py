@@ -15,7 +15,12 @@ from repro.core import (
     decode_range,
 )
 from repro.core.semantics import global_range
-from repro.core.serialize import decode_base, decode_residuals, parse_framed_container
+from repro.core.serialize import (
+    decode_base,
+    decode_pyramid,
+    encode_pyramid,
+    parse_framed_container,
+)
 
 
 def _series(n=2000, seed=0):
@@ -46,7 +51,7 @@ def shrks_blob():
 # ------------------------------------------------------------------ SHRK
 def test_cs_from_bytes_roundtrip_ok(shrk_blob):
     cs = cs_from_bytes(shrk_blob)
-    assert set(cs.residual_bytes) == {1e-2, 0.0}
+    assert cs.tiers() == [1e-2, 0.0]  # pyramid ladder, coarse -> fine
 
 
 def test_cs_from_bytes_truncated_at_every_boundary(shrk_blob):
@@ -71,17 +76,63 @@ def test_cs_from_bytes_trailing_garbage(shrk_blob):
         cs_from_bytes(shrk_blob + b"\x00")
 
 
-def test_decode_base_and_residuals_truncated():
+def test_decode_base_and_pyramid_truncated():
     v = _series(500)
     cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
-    cs = ShrinkCodec(config=cfg, backend="rans").compress(v, [1e-2])
+    cs = ShrinkCodec(config=cfg, backend="rans").compress(v, [1e-2], decimals=4)
     for cut in range(len(cs.base_bytes)):
         with pytest.raises(ValueError):
             decode_base(cs.base_bytes[:cut])
-    blob = cs.residual_bytes[1e-2]
-    for cut in range(len(blob)):  # header AND entropy-payload truncations
+    blob = encode_pyramid(cs.pyramid)
+    for cut in range(len(blob)):  # directory, CRC AND payload truncations
         with pytest.raises(ValueError):
-            decode_residuals(blob[:cut])
+            decode_pyramid(blob[:cut])
+
+
+def test_pyramid_crc_detects_payload_and_directory_corruption():
+    v = _series(800)
+    cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
+    cs = ShrinkCodec(config=cfg, backend="rans").compress(v, [1e-2, 0.0], decimals=4)
+    good = encode_pyramid(cs.pyramid)
+    blob = bytearray(good)
+    blob[-3] ^= 0xFF  # flip a byte inside the payload section
+    with pytest.raises(ValueError, match="CRC"):
+        decode_pyramid(bytes(blob))
+    blob = bytearray(good)
+    blob[16] ^= 0x40  # flip a bit inside layer 0's step f64 (directory)
+    with pytest.raises(ValueError, match="CRC"):
+        decode_pyramid(bytes(blob))
+
+
+def test_pyramid_rejects_misordered_tier_ladder():
+    """resolve() depends on the strictly-decreasing ladder; a blob whose
+    directory violates it must be rejected, not silently mis-resolved."""
+    import dataclasses
+
+    v = _series(800)
+    cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
+    cs = ShrinkCodec(config=cfg, backend="rans").compress(v, [1e-2, 1e-3], decimals=4)
+    swapped = dataclasses.replace(
+        cs.pyramid, layers=[cs.pyramid.layers[1], cs.pyramid.layers[0]]
+    )
+    with pytest.raises(ValueError, match="decreasing"):
+        decode_pyramid(encode_pyramid(swapped))
+    negative = dataclasses.replace(
+        cs.pyramid,
+        layers=[dataclasses.replace(cs.pyramid.layers[0], eps=-1.0)]
+    )
+    with pytest.raises(ValueError, match="negative"):
+        decode_pyramid(encode_pyramid(negative))
+
+
+def test_pyramid_rejects_v1_version_byte():
+    v = _series(500)
+    cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
+    cs = ShrinkCodec(config=cfg, backend="rans").compress(v, [1e-2], decimals=4)
+    blob = bytearray(encode_pyramid(cs.pyramid))
+    blob[4] = 1  # a v1 single-stream SHRR's byte 4 was the mode (0/1)
+    with pytest.raises(ValueError, match="version"):
+        decode_pyramid(bytes(blob))
 
 
 # ----------------------------------------------------------------- SHRKS

@@ -10,12 +10,13 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.configs import ARCHS, get_config, reduced_config
 from repro.models import build_model
 from repro.parallel.partition import fsdp_axes_for, param_specs
-from repro.parallel.sharding import make_rules
+from repro.parallel.sharding import abstract_mesh, make_rules
 
 
 def _fake_mesh_16x16():
-    # AbstractMesh: lets us build 256-device specs without devices
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    # AbstractMesh: lets us build 256-device specs without devices (the
+    # repro-side helper papers over the 0.4.x/0.5+ constructor drift)
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_param_specs_cover_all_archs():
@@ -70,7 +71,7 @@ def test_moe_expert_specs_distinct_from_stacked_mlp():
 
 
 def test_fsdp_axes_respects_dcn_flag():
-    mesh3 = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     assert fsdp_axes_for(get_config("llama3-8b"), mesh3) == "data"
     assert fsdp_axes_for(get_config("llama4-maverick-400b-a17b"), mesh3) == ("pod", "data")
 

@@ -148,7 +148,7 @@ def test_linf_guarantee(eps):
     codec = ShrinkCodec.from_fraction(v, frac=0.05)
     cs = codec.compress(v, eps_targets=[eps])
     vhat = codec.decompress_at(cs, eps)
-    if cs.residual_bytes[eps] is None:
+    if cs.pyramid.layers[0].mode == "identity":
         assert np.max(np.abs(vhat - v)) <= cs.eps_b_practical * (1 + 1e-9)
     else:
         assert np.max(np.abs(vhat - v)) <= eps * (1 + 1e-9)
@@ -193,4 +193,5 @@ def test_base_only_for_loose_eps():
     codec = ShrinkCodec.from_fraction(v, frac=0.05)
     loose = 10.0  # way above eps_b_practical
     cs = codec.compress(v, eps_targets=[loose])
-    assert cs.residual_bytes[loose] is None
+    assert cs.pyramid.layers[0].mode == "identity"
+    assert cs.pyramid.layers[0].payload is None

@@ -54,14 +54,14 @@ def test_crash_resume_full_stack(tiny_lm, tmp_path):
 
     init = {"params": params, "opt": adamw_init(params)}
     r1 = TrainingRunner(runner_step, data_fn, init, str(tmp_path / "a"),
-                        ckpt_every=5, codec="zstd")
+                        ckpt_every=5, codec=None)
     r1.run(15)
     r2 = TrainingRunner(runner_step, data_fn, init, str(tmp_path / "b"),
-                        ckpt_every=5, codec="zstd", fail_at=9)
+                        ckpt_every=5, codec=None, fail_at=9)
     with pytest.raises(RuntimeError):
         r2.run(15)
     r3 = TrainingRunner(runner_step, data_fn, init, str(tmp_path / "b"),
-                        ckpt_every=5, codec="zstd")
+                        ckpt_every=5, codec=None)
     r3.run(15)
     for a, b in zip(jax.tree.leaves(r1.state["params"]), jax.tree.leaves(r3.state["params"])):
         np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
