@@ -1,0 +1,206 @@
+"""Compressed-domain analytics benchmarks.
+
+``segment_vs_decode``: the headline claim — aggregate queries answered in
+the segment domain (closed-form over the knowledge base, ZERO entropy
+work) against the decode-then-numpy oracle at the same guarantee
+(eps = 1e-2 of range: the archive's base is built tight enough that the
+segment path already meets it, so both answers carry the same per-point
+bound).  Claim ``C_analytics_segment_10x``: the segment path is >= 10x
+faster on every standard-workload dataset.
+
+``predicate_refine``: the refine loop over a SHRKS container — a
+threshold count at the exact tier pays pyramid layers only for frames
+whose segment bounds straddle the threshold; reported as queries/s plus
+the planner's frame accounting (and differentially verified against the
+decode oracle on every query).
+
+``analytics_json`` bundles both for the BENCH_throughput.json
+trajectory.
+"""
+from __future__ import annotations
+
+import gc
+import time
+
+import numpy as np
+
+from repro.analytics import AnalyticsEngine, SeriesAnalytics
+from repro.core import BYTES_PER_ROW, ShrinkCodec, ShrinkConfig, ShrinkStreamCodec
+from repro.core.semantics import global_range
+from repro.core.shrink import decompress_at
+
+from .datasets import bench_series, save_result
+
+_AGG_OPS = ("min", "max", "sum", "mean", "stddev")
+_EPS_REL = 1e-2  # the claim's query resolution (fraction of range)
+
+
+def _timed(fn, inner: int) -> float:
+    """Mean seconds per call over ``inner`` back-to-back calls (amortizes
+    timer noise on µs-scale calls)."""
+    t0 = time.perf_counter()
+    for _ in range(inner):
+        fn()
+    return (time.perf_counter() - t0) / inner
+
+
+def _paired_ratio(fast_fn, slow_fn, reps: int, fast_inner: int = 16,
+                  slow_inner: int = 2) -> tuple[float, float, float]:
+    """(t_fast, t_slow, speedup) with the two sides timed *adjacently* in
+    each round and the speedup taken as the median of per-round ratios —
+    machine-speed drift between rounds (this box swings 2x) then cancels
+    instead of landing on one side of the ratio.  GC stays off inside the
+    timed region: earlier benches in a harness run leave enough garbage
+    that a collection mid-call swamps a 100µs measurement."""
+    gc.collect()
+    on = gc.isenabled()
+    gc.disable()
+    try:
+        pairs = [
+            (_timed(fast_fn, fast_inner), _timed(slow_fn, slow_inner))
+            for _ in range(reps)
+        ]
+    finally:
+        if on:
+            gc.enable()
+    ratios = sorted(ts / max(tf, 1e-12) for tf, ts in pairs)
+    return (
+        min(tf for tf, _ in pairs),
+        min(ts for _, ts in pairs),
+        ratios[len(ratios) // 2],
+    )
+
+
+def segment_vs_decode(
+    n: int = 100_000,
+    datasets=("WindSpeed", "Pressure", "ECG"),
+    reps: int = 5,
+) -> dict:
+    """Aggregates at eps = 1e-2·range: segment-domain closed form vs
+    decode-then-numpy, per dataset and op, answers differentially checked
+    (truth inside the interval) before timing."""
+    out: dict = {"eps_rel": _EPS_REL, "datasets": {}}
+    for name in datasets:
+        v = bench_series(name, n)
+        from repro.data.synthetic import DATASETS
+
+        decimals = DATASETS[name].decimals
+        rng = float(v.max() - v.min())
+        eps_q = _EPS_REL * rng
+        # base tight enough that eps_q is served from segments alone (the
+        # adaptive threshold can reach ~2x eps_b, hence the 0.004 margin)
+        codec = ShrinkCodec.from_fraction(v, frac=0.004, backend="rans")
+        cs = codec.compress(v, eps_targets=[eps_q, 1e-3 * rng, 0.0], decimals=decimals)
+        assert cs.eps_b_practical <= eps_q, (
+            f"{name}: base guarantee {cs.eps_b_practical:.3g} looser than "
+            f"eps {eps_q:.3g} — segment path would not qualify")
+        sa = SeriesAnalytics(cs)
+        row: dict = {
+            "n": int(len(v)),
+            "segments": sa.table.k,
+            "eps_b_practical": cs.eps_b_practical,
+            "eps_query": eps_q,
+            "ops": {},
+        }
+        for op in _AGG_OPS:
+            ans = sa.aggregate(op, eps=eps_q)
+            assert ans.source == "segments" and ans.layers_paid == 0
+            truth = {
+                "min": v.min(), "max": v.max(), "sum": v.sum(),
+                "mean": v.mean(), "stddev": v.std(),
+            }[op]
+            assert ans.lo <= truth <= ans.hi, (name, op)
+
+            def oracle(o=op):
+                vhat = decompress_at(cs, eps_q)
+                return {
+                    "min": vhat.min, "max": vhat.max, "sum": vhat.sum,
+                    "mean": vhat.mean, "stddev": vhat.std,
+                }[o]()
+
+            t_seg, t_dec, speedup = _paired_ratio(
+                lambda o=op: sa.aggregate(o, eps=eps_q), oracle, reps
+            )
+            row["ops"][op] = {
+                "segment_us": t_seg * 1e6,
+                "decode_us": t_dec * 1e6,
+                "speedup": speedup,
+            }
+        row["min_speedup"] = min(o["speedup"] for o in row["ops"].values())
+        out["datasets"][name] = row
+    return out
+
+
+def predicate_refine(
+    n: int = 100_000, name: str = "Pressure", frame_len: int = 8192,
+    queries: int = 64,
+) -> dict:
+    """Threshold counts at the exact tier over a framed container: the
+    planner decodes only straddling frames; every answer is checked
+    against the decode-then-numpy oracle."""
+    v = bench_series(name, n)
+    from repro.data.synthetic import DATASETS
+
+    decimals = DATASETS[name].decimals
+    rng = float(v.max() - v.min())
+    cfg = ShrinkConfig(eps_b=0.01 * rng, lam=1e-4)
+    sc = ShrinkStreamCodec(
+        cfg, eps_targets=[1e-2 * rng, 1e-3 * rng, 0.0], decimals=decimals,
+        backend="rans", value_range=global_range(v), frame_len=frame_len,
+    )
+    sc.ingest(v)
+    eng = AnalyticsEngine(sc.finalize())
+    qrng = np.random.default_rng(0)
+    thresholds = np.quantile(v, qrng.uniform(0.02, 0.98, queries))
+    t0 = time.perf_counter()
+    for c in thresholds:
+        ans = eng.count_where(0, "gt", float(c), eps=0.0)
+        assert ans.exact and ans.lo == float(int((v > c).sum()))
+    dt = time.perf_counter() - t0
+    st = eng.stats
+    frames = st["frames_touched"]
+    return {
+        "dataset": name,
+        "n": int(len(v)),
+        "queries": int(queries),
+        "queries_per_s": queries / dt,
+        "frames_touched": frames,
+        "frames_refined": st["frames_refined"],
+        "frames_settled_by_segments": st["frames_skipped"],
+        "refine_fraction": st["frames_refined"] / max(frames, 1),
+        "layers_paid": st["layers_paid"],
+        "mb_covered_per_s": queries * len(v) * BYTES_PER_ROW / 1e6 / dt,
+    }
+
+
+def analytics_json(quick: bool = False) -> dict:
+    # the 10x claim is defined at the standard workload size: at small n
+    # the decode oracle's O(n) cost shrinks toward the segment path's
+    # fixed python overhead and the ratio measures interpreter noise, so
+    # --quick trims reps and the predicate sweep but NOT the claim's n
+    return {
+        "segment_vs_decode": segment_vs_decode(n=100_000, reps=3 if quick else 5),
+        "predicate": predicate_refine(
+            n=20_000 if quick else 100_000,
+            frame_len=4096 if quick else 8192,
+            queries=32 if quick else 64,
+        ),
+    }
+
+
+def validate_claims(analytics: dict) -> dict:
+    """C_analytics_segment_10x: on every standard-workload dataset,
+    segment-domain aggregates at eps = 1e-2·range beat decode-then-numpy
+    by >= 10x (same per-point guarantee on both sides)."""
+    speedups = {
+        name: round(row["min_speedup"], 2)
+        for name, row in analytics["segment_vs_decode"]["datasets"].items()
+    }
+    checks = {
+        "C_analytics_segment_10x": {
+            "min_speedup_per_dataset": speedups,
+            "pass": bool(all(s >= 10.0 for s in speedups.values())),
+        }
+    }
+    save_result("claims_analytics", checks)
+    return checks

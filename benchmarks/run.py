@@ -14,6 +14,7 @@ import sys
 import time
 
 from . import (
+    bench_analytics,
     bench_compression,
     bench_progressive,
     bench_ragged,
@@ -179,6 +180,24 @@ def main(argv=None) -> int:
         f"({dec['refine_vs_cold']:.2f}x)"
     )
     checks.update(bench_progressive.validate_claims(prog))
+
+    print("\n== Compressed-domain analytics (segment algebra + refine planner) ==")
+    analytics = bench_analytics.analytics_json(quick=args.quick)
+    engine["analytics"] = analytics
+    for name, row in analytics["segment_vs_decode"]["datasets"].items():
+        worst = min(row["ops"], key=lambda o: row["ops"][o]["speedup"])
+        print(
+            f"  {name:10s} segments={row['segments']:6d} "
+            f"min speedup={row['min_speedup']:6.1f}x (op={worst}) "
+            f"eps_b={row['eps_b_practical']:.3g} <= eps_q={row['eps_query']:.3g}"
+        )
+    pred = analytics["predicate"]
+    print(
+        f"  predicate[{pred['dataset']}] {pred['queries_per_s']:.0f} q/s exact counts, "
+        f"refined {pred['frames_refined']}/{pred['frames_touched']} frames "
+        f"({pred['mb_covered_per_s']:.0f} MB/s covered)"
+    )
+    checks.update(bench_analytics.validate_claims(analytics))
     # machine-readable perf trajectory for future PRs to diff against; only
     # full-size runs update the repo-root trajectory (quick numbers live in
     # artifacts/bench via save_result and must not clobber the baseline)

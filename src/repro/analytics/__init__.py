@@ -1,0 +1,15 @@
+"""Compressed-domain analytics: query SHRK archives and SHRKS containers
+without decoding them.
+
+The engine answers aggregates (min/max/sum/mean/count/stddev), range
+predicates (``count_where``), and top-k segment/similarity queries
+directly on the knowledge base's linear segments plus the residual
+pyramid's per-tier error bounds.  Every answer is an interval
+``[lo, hi]`` guaranteed to contain the exact (decode-then-numpy) value;
+a refine loop pays pyramid layers — through the same
+``ProgressiveDecoder`` prefixes the serving LRU caches — only for frames
+whose bounds still straddle the query.  See docs/analytics.md for the
+query model, bound semantics, and cost model.
+"""
+from .engine import AggregateAnswer, SeriesAnalytics  # noqa: F401
+from .planner import AnalyticsEngine  # noqa: F401

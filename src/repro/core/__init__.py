@@ -25,6 +25,13 @@ from .semantics import (  # noqa: F401
     extract_semantics_py,
 )
 from .base import base_predictions, construct_base, practical_eps_b  # noqa: F401
+from .segment_algebra import (  # noqa: F401
+    BaseStats,
+    SegmentTable,
+    base_aggregate,
+    count_cmp,
+    segment_table,
+)
 from .slope import optimized_slope, shortest_decimal_in_interval  # noqa: F401
 from .residuals import (  # noqa: F401
     compute_residuals,

@@ -1,0 +1,300 @@
+"""Closed-form segment-domain aggregates over the SHRINK knowledge base.
+
+The follow-up work on direct analytics (PAPERS.md: "Highly Efficient
+Direct Analytics on Semantic-aware Time Series Data Compression") rests on
+one observation: SHRINK's base is a piecewise-*linear* partition of the
+series, so sums, extrema, and threshold counts of the base approximation
+have closed forms per segment — a query over [t0, t1) costs O(#segments
+touched), not O(#samples), and never touches the entropy-coded residuals.
+
+For a segment with origin ``theta``, slope ``s`` covering local indices
+``i in [a, b)``:
+
+* ``sum   = m*theta + s * (S1(b) - S1(a))``            with ``S1(x) = x(x-1)/2``
+* ``sumsq = m*theta^2 + 2 theta s (S1(b)-S1(a)) + s^2 (S2(b)-S2(a))``
+  with ``S2(x) = x(x-1)(2x-1)/6``
+* ``min/max`` at the endpoints (the segment is monotone), and
+* ``count(pred cmp c)`` is an index-interval count because
+  ``theta + s*i cmp c`` solves to a half-line in ``i``.
+
+Everything here describes the *base approximation* exactly (up to float
+rounding).  The analytics engine (``repro.analytics``) turns these into
+guaranteed intervals for the *true* values by composing them with a
+per-point error bound: the base's practical eps, or a pyramid tier's
+``eps_k`` after refinement.  Threshold counts bisect the actual float
+predictions (which are monotone per segment even under rounding), so the
+closed-form count equals a dense ``(pred cmp c).sum()`` over the same
+float predictions for any magnitudes — the engine's margins, not this
+module, absorb the approximation error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .base import _flat_segments
+from .types import Base
+
+__all__ = [
+    "BaseStats",
+    "SegmentTable",
+    "segment_table",
+    "base_aggregate",
+    "base_aggregate_with_m2",
+    "base_central_m2",
+    "count_cmp",
+]
+
+_CMPS = ("gt", "ge", "lt", "le")
+
+
+@dataclasses.dataclass(frozen=True)
+class BaseStats:
+    """Exact aggregates of the base approximation over one sample range.
+
+    ``m`` samples; ``total``/``sumsq`` are Σ pred / Σ pred²; ``vmin``/
+    ``vmax`` the extrema (+inf/-inf for an empty range, matching the
+    identity of min/max composition)."""
+
+    m: int
+    total: float
+    sumsq: float
+    vmin: float
+    vmax: float
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.m if self.m else math.nan
+
+    def std(self) -> float:
+        """Population stddev of the base approximation (clamped at 0 so
+        float cancellation in E[x²] − E[x]² cannot go negative)."""
+        if not self.m:
+            return math.nan
+        var = self.sumsq / self.m - (self.total / self.m) ** 2
+        return math.sqrt(max(var, 0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentTable:
+    """The base's member segments as parallel arrays sorted by t0 (a
+    partition of [0, n)) — the queryable form of the knowledge base.  Built
+    once per base/frame and cached by the analytics engine; every query
+    against the same frame reuses it."""
+
+    n: int
+    t0s: np.ndarray  # int64 [k] segment start indices
+    lens: np.ndarray  # int64 [k]
+    thetas: np.ndarray  # float64 [k]
+    slopes: np.ndarray  # float64 [k]
+
+    @property
+    def k(self) -> int:
+        return int(self.t0s.size)
+
+    def ends(self) -> np.ndarray:
+        return self.t0s + self.lens
+
+    def overlap(self, t0: int, t1: int):
+        """(segment indices, local start a[], local end b[]) of every
+        segment intersecting [t0, t1); a/b are segment-local, b exclusive."""
+        t0, t1 = max(int(t0), 0), min(int(t1), self.n)
+        if t1 <= t0 or not self.k:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z, z
+        ends = self.ends()
+        i0 = int(np.searchsorted(ends, t0, side="right"))
+        i1 = int(np.searchsorted(self.t0s, t1, side="left"))
+        idx = np.arange(i0, i1, dtype=np.int64)
+        a = np.maximum(t0 - self.t0s[idx], 0)
+        b = np.minimum(t1 - self.t0s[idx], self.lens[idx])
+        keep = b > a
+        return idx[keep], a[keep], b[keep]
+
+
+def segment_table(base: Base) -> SegmentTable:
+    t0s, lens, thetas, slopes = _flat_segments(base)
+    return SegmentTable(n=base.n, t0s=t0s, lens=lens, thetas=thetas, slopes=slopes)
+
+
+def _s1(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.float64)
+    return x * (x - 1.0) / 2.0
+
+
+def _s2(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.float64)
+    return x * (x - 1.0) * (2.0 * x - 1.0) / 6.0
+
+
+def base_aggregate(table: SegmentTable, t0: int, t1: int) -> BaseStats:
+    """Exact (up to float rounding) aggregates of the base approximation
+    over samples [t0, t1), in O(#segments touched)."""
+    idx, a, b = table.overlap(t0, t1)
+    if not idx.size:
+        return BaseStats(m=0, total=0.0, sumsq=0.0, vmin=math.inf, vmax=-math.inf)
+    theta = table.thetas[idx]
+    slope = table.slopes[idx]
+    m = (b - a).astype(np.float64)
+    d1 = _s1(b) - _s1(a)
+    d2 = _s2(b) - _s2(a)
+    total = m * theta + slope * d1
+    sumsq = m * theta * theta + 2.0 * theta * slope * d1 + slope * slope * d2
+    # a linear segment attains its extrema at the endpoints
+    va = theta + slope * a.astype(np.float64)
+    vb = theta + slope * (b - 1).astype(np.float64)
+    return BaseStats(
+        m=int((b - a).sum()),
+        total=float(total.sum()),
+        sumsq=float(sumsq.sum()),
+        vmin=float(np.minimum(va, vb).min()),
+        vmax=float(np.maximum(va, vb).max()),
+    )
+
+
+def base_aggregate_with_m2(
+    table: SegmentTable, t0: int, t1: int
+) -> tuple[BaseStats, float]:
+    """One overlap pass returning both :func:`base_aggregate` and the
+    central second moment about the range's own mean — the stddev fast
+    path (a stddev query would otherwise walk the segments twice)."""
+    idx, a, b = table.overlap(t0, t1)
+    if not idx.size:
+        return BaseStats(m=0, total=0.0, sumsq=0.0, vmin=math.inf, vmax=-math.inf), 0.0
+    theta = table.thetas[idx]
+    slope = table.slopes[idx]
+    mseg = (b - a).astype(np.float64)
+    d1 = _s1(b) - _s1(a)
+    d2 = _s2(b) - _s2(a)
+    total = mseg * theta + slope * d1
+    sumsq = mseg * theta * theta + 2.0 * theta * slope * d1 + slope * slope * d2
+    va = theta + slope * a.astype(np.float64)
+    vb = theta + slope * (b - 1).astype(np.float64)
+    m = int((b - a).sum())
+    grand = float(total.sum())
+    mu = grand / m
+    ibar = (a + b - 1).astype(np.float64) / 2.0
+    seg_mean = theta + slope * ibar
+    m2_within = slope * slope * mseg * (mseg * mseg - 1.0) / 12.0
+    m2 = float((m2_within + mseg * (seg_mean - mu) ** 2).sum())
+    stats = BaseStats(
+        m=m,
+        total=grand,
+        sumsq=float(sumsq.sum()),
+        vmin=float(np.minimum(va, vb).min()),
+        vmax=float(np.maximum(va, vb).max()),
+    )
+    return stats, m2
+
+
+def base_central_m2(table: SegmentTable, t0: int, t1: int, mu: float) -> float:
+    """Σ (pred − mu)² over samples [t0, t1), closed form per segment.
+
+    Computed the well-conditioned way (per-segment deviation around the
+    segment's own window mean, then a Welford-style shift to ``mu``):
+    within one segment the deviations are ``s·(i − ī)`` whose sum of
+    squares is *exactly* ``s²·m(m²−1)/12`` — no large-moment cancellation,
+    so stddev bounds stay tight even when |values| ≫ stddev."""
+    idx, a, b = table.overlap(t0, t1)
+    if not idx.size:
+        return 0.0
+    theta = table.thetas[idx]
+    slope = table.slopes[idx]
+    m = (b - a).astype(np.float64)
+    ibar = (a + b - 1).astype(np.float64) / 2.0
+    seg_mean = theta + slope * ibar
+    m2_within = slope * slope * m * (m * m - 1.0) / 12.0
+    return float((m2_within + m * (seg_mean - mu) ** 2).sum())
+
+
+def _first_true(
+    sat_fn, lo0: np.ndarray, hi0: np.ndarray, active: np.ndarray
+) -> np.ndarray:
+    """Vectorized lower-bound search: per row, the smallest i in
+    [lo0, hi0) with ``sat_fn(i)`` True (hi0 = none), given that the
+    predicate is a True-*suffix* over i on active rows.  O(log n) exact
+    integer bisection — no float crossing guess anywhere, so it is immune
+    to the ulp(theta)/|slope| error that breaks a solve-and-adjust
+    approach on near-flat large-magnitude segments."""
+    lo = lo0.astype(np.int64).copy()
+    hi = hi0.astype(np.int64).copy()
+    lo[~active] = hi[~active]
+    while True:
+        open_ = lo < hi
+        if not open_.any():
+            return lo
+        mid = (lo + hi) // 2
+        s = sat_fn(mid.astype(np.float64))
+        hi = np.where(open_ & s, mid, hi)
+        lo = np.where(open_ & ~s, mid + 1, lo)
+
+
+def _count_upset(
+    theta: np.ndarray,
+    slope: np.ndarray,
+    a: np.ndarray,
+    b: np.ndarray,
+    c: float,
+    strict: bool,
+) -> np.ndarray:
+    """Per-segment count of local i in [a, b) with ``theta + slope*i > c``
+    (``>= c`` when not strict).
+
+    ``theta + slope*i`` is monotone in i even in floats (multiplying by a
+    positive constant and adding a constant are monotone under rounding),
+    so the satisfied set is a half-line of indices and an integer
+    bisection against the *actual float predictions* finds its boundary
+    exactly: the result equals the dense ``(pred cmp c).sum()`` over the
+    same float predictions for ANY magnitudes.
+    """
+    m = (b - a).astype(np.float64)
+    out = np.zeros(theta.shape, dtype=np.float64)
+
+    def sat(i: np.ndarray) -> np.ndarray:
+        v = theta + slope * i
+        return v > c if strict else v >= c
+
+    flat = slope == 0.0
+    if flat.any():
+        v0 = theta > c if strict else theta >= c
+        out[flat] = np.where(v0[flat], m[flat], 0.0)
+
+    pos = slope > 0.0
+    if pos.any():
+        # fp-nondecreasing pred: satisfied set is {i >= imin}
+        imin = _first_true(sat, a, b, pos)
+        out[pos] = (b - imin).astype(np.float64)[pos]
+
+    neg = slope < 0.0
+    if neg.any():
+        # fp-nonincreasing pred: satisfied is a True-prefix; count ends at
+        # the first NON-satisfied index
+        end = _first_true(lambda i: ~sat(i), a, b, neg)
+        out[neg] = (end - a).astype(np.float64)[neg]
+    return out
+
+
+def count_cmp(table: SegmentTable, t0: int, t1: int, op: str, c: float) -> int:
+    """Exact count of samples in [t0, t1) whose *base approximation*
+    satisfies ``pred <op> c`` — O(#segments · log len), no per-sample
+    work.  Matches the dense count over the same float predictions
+    (integer bisection against the actual float values)."""
+    if op not in _CMPS:
+        raise ValueError(f"unknown comparison {op!r}: expected one of {_CMPS}")
+    idx, a, b = table.overlap(t0, t1)
+    if not idx.size:
+        return 0
+    theta = table.thetas[idx]
+    slope = table.slopes[idx]
+    m = (b - a).astype(np.float64)
+    if op == "gt":
+        cnt = _count_upset(theta, slope, a, b, c, strict=True)
+    elif op == "ge":
+        cnt = _count_upset(theta, slope, a, b, c, strict=False)
+    elif op == "lt":  # pred < c  ==  m - (pred >= c)
+        cnt = m - _count_upset(theta, slope, a, b, c, strict=False)
+    else:  # "le":     pred <= c  ==  m - (pred > c)
+        cnt = m - _count_upset(theta, slope, a, b, c, strict=True)
+    return int(cnt.sum())

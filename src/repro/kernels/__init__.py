@@ -14,6 +14,10 @@ tests/test_kernels.py over shape/dtype sweeps):
                    error layers 0..l-1 left behind, one VMEM pass)
 * dequant        — fused dequantize + linear reconstruct
 * pyramid_reconstruct — fused pred + Σ_l q_l·step_l over any layer prefix
+* segment_agg    — closed-form per-segment aggregates (sum/sumsq/min/max):
+                   the device counterpart of core.segment_algebra for
+                   batched compressed-domain analytics; O(segments), no
+                   per-sample work (host engine runs the numpy path today)
 * flash_attention — online-softmax fused attention (sequential-kv grid)
 """
 from .ops import (  # noqa: F401
@@ -25,6 +29,7 @@ from .ops import (  # noqa: F401
     pyramid_quant,
     pyramid_reconstruct,
     residual_quant,
+    segment_agg,
     use_interpret,
 )
 from . import ref  # noqa: F401

@@ -23,6 +23,7 @@ from .flash_attention import flash_attention_pallas
 from .dequant import dequant_reconstruct_pallas, pyramid_reconstruct_pallas
 from .interval_stats import interval_stats_pallas
 from .residual_quant import pyramid_quant_pallas, residual_quant_pallas
+from .segment_agg import segment_agg_pallas
 
 __all__ = [
     "flash_attention",
@@ -33,6 +34,7 @@ __all__ = [
     "pyramid_reconstruct",
     "cone_scan",
     "cone_scan_segments",
+    "segment_agg",
     "use_interpret",
 ]
 
@@ -140,6 +142,25 @@ def pyramid_reconstruct(
     return _run_auto(
         "pyramid_reconstruct",
         lambda i: pyramid_reconstruct_pallas(qs, theta, slope, steps, interpret=i),
+    )
+
+
+def segment_agg(
+    theta: jax.Array,
+    slope: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    force_ref: bool = False,
+):
+    """Closed-form per-segment aggregates for compressed-domain analytics:
+    theta/slope/a/b [M, 1] -> (sum, sumsq, min, max) [M, 1] of each
+    segment's predictions over its local window [a, b) — O(segments), no
+    per-sample work (rows with b <= a emit the aggregate identity)."""
+    if force_ref:
+        return ref.segment_agg_ref(theta, slope, a, b)
+    return _run_auto(
+        "segment_agg",
+        lambda i: segment_agg_pallas(theta, slope, a, b, interpret=i),
     )
 
 

@@ -27,6 +27,7 @@ __all__ = [
     "pyramid_quant_ref",
     "pyramid_reconstruct_ref",
     "cone_scan_ref",
+    "segment_agg_ref",
 ]
 
 
@@ -212,6 +213,33 @@ def cone_scan_ref(
     brk = brk.at[0].set(jnp.ones((s,), jnp.int32))
     theta = theta.at[0].set(origin(v0, eps0))
     return brk, theta, psi_lo, psi_hi, lo_f[None, :], hi_f[None, :]
+
+
+def segment_agg_ref(
+    theta: jax.Array,
+    slope: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Closed-form per-segment aggregates (the compressed-domain analytics
+    primitive): theta/slope/a/b [M, 1] line params + local overlap window
+    [a, b).  Returns (sum, sumsq, min, max) [M, 1] of the segment's
+    predictions over the window; rows with b <= a emit the aggregate
+    identity (0, 0, +3.4e38, -3.4e38)."""
+    big = jnp.asarray(3.4e38, theta.dtype)
+    m = jnp.maximum(b - a, 0.0)
+    d1 = (b * (b - 1.0) - a * (a - 1.0)) * 0.5
+    d2 = (b * (b - 1.0) * (2.0 * b - 1.0) - a * (a - 1.0) * (2.0 * a - 1.0)) / 6.0
+    live = m > 0.0
+    seg_sum = jnp.where(live, m * theta + slope * d1, 0.0)
+    seg_sumsq = jnp.where(
+        live, m * theta * theta + 2.0 * theta * slope * d1 + slope * slope * d2, 0.0
+    )
+    va = theta + slope * a
+    vb = theta + slope * (b - 1.0)
+    seg_min = jnp.where(live, jnp.minimum(va, vb), big)
+    seg_max = jnp.where(live, jnp.maximum(va, vb), -big)
+    return seg_sum, seg_sumsq, seg_min, seg_max
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:

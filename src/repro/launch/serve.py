@@ -14,6 +14,11 @@ ragged multi-sensor gateway ingest through the admission scheduler.
     # (size/deadline admission, bucketed ragged compress_batch) -> SHRKS
     PYTHONPATH=src python -m repro.launch.serve --mode ingest \
         --series 64 --ticks 200 --flush-samples 131072
+
+    # compressed-domain analytics: aggregates / threshold counts / top-k
+    # straight off the container, differentially checked against decode
+    PYTHONPATH=src python -m repro.launch.serve --mode analytics \
+        --series 8 --points 65536 --frame-len 8192 --queries 256
 """
 from __future__ import annotations
 
@@ -114,6 +119,80 @@ def _serve_range(args) -> int:
     return 0 if worst <= eps * (1 + 1e-9) else 1
 
 
+def _serve_analytics(args) -> int:
+    """Compressed-domain analytics over a freshly streamed container: a
+    mixed workload of aggregates (random ranges and resolutions),
+    threshold counts at the exact tier, and top-k segment queries —
+    every answer differentially verified against the decode-then-numpy
+    oracle before it counts."""
+    from ..analytics import AnalyticsEngine
+    from ..core import BYTES_PER_ROW, ShrinkConfig, ShrinkStreamCodec
+    from ..serving import RangeQueryBatcher
+
+    rng = np.random.default_rng(0)
+    s, n = args.series, args.points
+    v = np.cumsum(rng.standard_normal((s, n)) * 0.05, axis=1)
+    v += rng.standard_normal((s, n)) * 0.02
+    v = np.round(v, 4)
+    vmin, vmax = float(v.min()), float(v.max())
+    vrng = max(vmax - vmin, 1e-12)
+    cfg = ShrinkConfig(eps_b=0.02 * vrng, lam=1e-4)
+    tiers = [1e-2 * vrng, 1e-3 * vrng, 0.0]
+
+    codec = ShrinkStreamCodec(
+        cfg, eps_targets=tiers, decimals=4, backend="rans",
+        value_range=(vmin, vmax), frame_len=args.frame_len,
+    )
+    for sid in range(s):
+        codec.ingest(v[sid], series_id=sid)
+    blob = codec.finalize()
+    print(
+        f"streamed {s} series x {n} samples into {codec.stats()['frames']} frames, "
+        f"CR={s * n * BYTES_PER_ROW / len(blob):.1f}"
+    )
+
+    eng = AnalyticsEngine(RangeQueryBatcher(blob, cache_frames=args.cache_frames))
+    qrng = np.random.default_rng(1)
+    ops = ["min", "max", "sum", "mean", "stddev"]
+    checked = 0
+    t0 = time.perf_counter()
+    for qid in range(args.queries):
+        sid = int(qrng.integers(0, s))
+        lo = int(qrng.integers(0, n - 16))
+        hi = int(min(n, lo + qrng.integers(16, 4 * args.frame_len)))
+        sl = v[sid, lo:hi]
+        kind = qid % 3
+        if kind == 0:  # zero-decode sketch aggregate off the segments
+            op = ops[qid % len(ops)]
+            ans = eng.aggregate(sid, op, lo, hi, eps=None)
+        elif kind == 1:  # tiered aggregate (refine loop through the LRU)
+            op = ops[qid % len(ops)]
+            ans = eng.aggregate(sid, op, lo, hi, eps=tiers[qid % len(tiers)])
+        else:  # exact threshold count: refine only straddling frames
+            c = float(qrng.uniform(sl.min(), sl.max() + 1e-9))
+            ans = eng.count_where(sid, "gt", c, lo, hi, eps=0.0)
+        truth = {
+            "min": sl.min, "max": sl.max, "sum": sl.sum, "mean": sl.mean,
+            "stddev": sl.std,
+        }[op]() if kind != 2 else float((sl > c).sum())
+        assert ans.lo - 1e-9 <= truth <= ans.hi + 1e-9, (qid, ans, truth)
+        if kind == 2:
+            assert ans.exact
+        checked += 1
+    dt = time.perf_counter() - t0
+    st = eng.stats
+    top = eng.topk_segments(0, k=3, by="length")
+    print(
+        f"answered {checked} verified queries in {dt:.3f}s ({checked / dt:.0f} q/s): "
+        f"{st['segment_frames']} segment-domain frames, "
+        f"{st['frames_skipped']} skipped, {st['frames_refined']} refined, "
+        f"{st['layers_paid']} layers paid "
+        f"(serving LRU hits={eng.batcher.stats['frame_hits']})"
+    )
+    print(f"top-3 longest segments of series 0: {[(r['t0'], r['length']) for r in top]}")
+    return 0
+
+
 def _serve_ingest(args) -> int:
     """Ragged gateway simulation: sensors publish at rates spanning orders
     of magnitude; every tick delivers one chunk per sensor into the
@@ -174,7 +253,9 @@ def _serve_ingest(args) -> int:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["model", "range", "ingest"], default="model")
+    ap.add_argument(
+        "--mode", choices=["model", "range", "ingest", "analytics"], default="model"
+    )
     # model mode
     ap.add_argument("--arch")
     ap.add_argument("--reduced", action="store_true")
@@ -200,6 +281,8 @@ def main(argv=None) -> int:
 
     if args.mode == "ingest":
         return _serve_ingest(args)
+    if args.mode == "analytics":
+        return _serve_analytics(args)
     if args.mode == "range":
         return _serve_range(args)
     if not args.arch:

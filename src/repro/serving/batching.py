@@ -184,16 +184,32 @@ class RangeQueryBatcher:
         }
 
     @property
+    def blob(self) -> bytes:
+        """The raw container bytes (frame payloads are slices of this)."""
+        return self._blob
+
+    @property
     def series_ids(self) -> list[int]:
         return sorted(self._frames)
 
     def span(self, series_id: int) -> tuple[int, int]:
         """[t_lo, t_hi) covered by a series' frames."""
-        frames = self._frames[series_id]
+        frames = self._frames.get(series_id)
+        if not frames:
+            raise ValueError(f"unknown series {series_id}")
         return frames[0].t_lo, frames[-1].t_hi
 
     def submit(self, q: RangeQuery) -> None:
         self.queue.append(q)
+
+    def decoder(self, meta) -> ProgressiveDecoder:
+        """The cached :class:`ProgressiveDecoder` for one frame (decoding
+        the frame's container bytes on first touch).  Public so the
+        compressed-domain analytics engine (``repro.analytics``) can
+        refine through the SAME layer-prefix LRU range queries use — a
+        dashboard mixing range decodes and aggregates never decodes a
+        layer twice."""
+        return self._decoder(meta)
 
     def _decoder(self, meta) -> ProgressiveDecoder:
         dec = self._cache.get(meta.offset)
@@ -223,14 +239,20 @@ class RangeQueryBatcher:
         self.stats["layer_hits"] += needed - paid
         return vals, dec.guarantee(k)
 
-    def _frames_for(self, q: RangeQuery) -> list:
-        frames = self._frames.get(q.series_id)
+    def frames_overlapping(self, series_id: int, t0: int, t1: int) -> list:
+        """Directory entries of the frames covering samples [t0, t1) of a
+        series, in time order; raises ``ValueError`` for an unknown series
+        or a range the frames do not fully cover."""
+        frames = self._frames.get(series_id)
         if not frames:
-            raise ValueError(f"unknown series {q.series_id}")
-        touched = [m for m in frames if m.t_lo < q.t1 and m.t_hi > q.t0]
-        if q.t1 <= q.t0 or not touched or touched[0].t_lo > q.t0 or touched[-1].t_hi < q.t1:
-            raise ValueError(f"range [{q.t0}, {q.t1}) not covered")
+            raise ValueError(f"unknown series {series_id}")
+        touched = [m for m in frames if m.t_lo < t1 and m.t_hi > t0]
+        if t1 <= t0 or not touched or touched[0].t_lo > t0 or touched[-1].t_hi < t1:
+            raise ValueError(f"range [{t0}, {t1}) not covered")
         return touched
+
+    def _frames_for(self, q: RangeQuery) -> list:
+        return self.frames_overlapping(q.series_id, q.t0, q.t1)
 
     def _serve(self, q: RangeQuery) -> None:
         touched = self._frames_for(q)

@@ -20,6 +20,7 @@ are reproducible on any platform/numpy.
 """
 from __future__ import annotations
 
+import json
 import pathlib
 import sys
 
@@ -30,6 +31,7 @@ GOLDEN_SHRK = HERE / "golden_v2.shrk"
 GOLDEN_SHRKS = HERE / "golden_v2.shrks"
 GOLDEN_RAGGED = HERE / "golden_v2_ragged.shrks"
 GOLDEN_PYRAMID = HERE / "golden_v2_pyramid.shrk"
+GOLDEN_ANALYTICS = HERE / "golden_analytics.json"
 
 N = 1536
 EPS_TARGETS = [1e-2, 0.0]
@@ -125,15 +127,79 @@ def build_ragged_shrks() -> bytes:
     return sc.finalize()
 
 
+def _ans(a) -> dict:
+    """AggregateAnswer -> the stable golden record (everything a wire or
+    planner drift would move: bounds, guarantee, provenance, work)."""
+    return {
+        "lo": a.lo, "hi": a.hi, "m": a.m, "eps": a.eps, "exact": a.exact,
+        "source": a.source, "frames_touched": a.frames_touched,
+        "frames_skipped": a.frames_skipped, "frames_refined": a.frames_refined,
+    }
+
+
+def build_analytics() -> dict:
+    """Compressed-domain query answers over the checked-in archives.
+
+    Pins the analytics engine's observable behavior — interval bounds,
+    achieved guarantees, segment records, and the planner's frame
+    accounting — over BOTH golden inputs, so wire-format drift *or*
+    planner/bound drift fails loudly even when the archive bytes are
+    unchanged."""
+    from repro.analytics import AnalyticsEngine, SeriesAnalytics
+    from repro.core import cs_from_bytes
+
+    v = golden_series()
+    cs = cs_from_bytes(GOLDEN_PYRAMID.read_bytes())
+    sa = SeriesAnalytics(cs)
+    tiers = pyramid_tiers(v)
+    out: dict = {"pyramid": {"tiers": tiers, "aggregate": {}, "count_where": {}}}
+    spans = {"full": (0, N), "mid": (100, 1100)}
+    for span_name, (t0, t1) in spans.items():
+        for eps_name, eps in [("base", None)] + [(f"tier{i}", e) for i, e in enumerate(tiers)]:
+            for op in ("min", "max", "sum", "mean", "count", "stddev"):
+                key = f"{span_name}/{eps_name}/{op}"
+                out["pyramid"]["aggregate"][key] = _ans(sa.aggregate(op, t0, t1, eps=eps))
+    for op, q in (("gt", 0.75), ("le", 0.25)):
+        c = float(np.quantile(v, q))
+        for eps_name, eps in [("base", None), ("fine", tiers[2]), ("exact", 0.0)]:
+            key = f"{op}/{eps_name}"
+            out["pyramid"]["count_where"][key] = _ans(
+                sa.count_where(op, c, eps=eps))
+            out["pyramid"]["count_where"][key]["threshold"] = c
+    out["pyramid"]["topk_length"] = sa.topk_segments(k=3, by="length")
+    out["pyramid"]["topk_max"] = sa.topk_segments(k=2, by="max")
+
+    eng = AnalyticsEngine(GOLDEN_RAGGED.read_bytes())
+    ragged: dict = {"series": {}}
+    for sid, arr in enumerate(golden_ragged_series()):
+        if arr.size == 0:
+            continue
+        rec: dict = {}
+        for eps_name, eps in (("base", None), ("exact", 0.0)):
+            for op in ("min", "max", "sum", "mean", "stddev"):
+                rec[f"{eps_name}/{op}"] = _ans(eng.aggregate(sid, op, eps=eps))
+        c = float(np.quantile(arr, 0.5))
+        rec["gt_median"] = _ans(eng.count_where(sid, "gt", c, eps=0.0))
+        rec["gt_median"]["threshold"] = c
+        rec["topk_length"] = eng.topk_segments(sid, k=2, by="length")
+        ragged["series"][str(sid)] = rec
+    out["ragged"] = ragged
+    return out
+
+
 def main() -> None:
     GOLDEN_SHRK.write_bytes(build_shrk())
     GOLDEN_SHRKS.write_bytes(build_shrks())
     GOLDEN_RAGGED.write_bytes(build_ragged_shrks())
     GOLDEN_PYRAMID.write_bytes(build_pyramid_shrk())
+    GOLDEN_ANALYTICS.write_text(
+        json.dumps(build_analytics(), indent=2, sort_keys=True) + "\n"
+    )
     print(f"wrote {GOLDEN_SHRK} ({GOLDEN_SHRK.stat().st_size} B)")
     print(f"wrote {GOLDEN_SHRKS} ({GOLDEN_SHRKS.stat().st_size} B)")
     print(f"wrote {GOLDEN_RAGGED} ({GOLDEN_RAGGED.stat().st_size} B)")
     print(f"wrote {GOLDEN_PYRAMID} ({GOLDEN_PYRAMID.stat().st_size} B)")
+    print(f"wrote {GOLDEN_ANALYTICS} ({GOLDEN_ANALYTICS.stat().st_size} B)")
 
 
 if __name__ == "__main__":

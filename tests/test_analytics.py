@@ -1,0 +1,377 @@
+"""Compressed-domain analytics: deterministic oracle-differential tests.
+
+Every engine answer is checked against the decode-then-numpy oracle: the
+truth must lie inside the returned [lo, hi] at every tier, the lossless
+tier must collapse to the oracle exactly, and the planner must do the
+amount of work (segment-domain frames, skipped frames, paid layers) its
+contract promises.  The hypothesis campaign lives in
+tests/test_analytics_property.py; this file pins concrete behaviors.
+"""
+import numpy as np
+import pytest
+
+from repro.analytics import AnalyticsEngine, SeriesAnalytics
+from repro.core import ShrinkCodec, ShrinkConfig, ShrinkStreamCodec
+from repro.core.base import base_predictions
+from repro.core.segment_algebra import (
+    base_aggregate,
+    base_central_m2,
+    count_cmp,
+    segment_table,
+)
+from repro.core.semantics import global_range
+
+_DEC = 4
+_CMP_FNS = {
+    "gt": np.greater,
+    "ge": np.greater_equal,
+    "lt": np.less,
+    "le": np.less_equal,
+}
+
+
+def _series(n=1536, seed=5, scale=1.0, offset=0.0):
+    rng = np.random.default_rng(seed)
+    v = np.cumsum(rng.standard_normal(n)) * 0.1 * scale + offset
+    v += 0.3 * scale * np.sign(np.sin(np.arange(n) * 0.05))
+    return np.round(v, _DEC)
+
+
+def _compress(v, tiers_rel=(1e-1, 1e-2, 1e-3), lossless=True, frac=0.05):
+    rng = float(v.max() - v.min())
+    codec = ShrinkCodec(
+        config=ShrinkConfig(eps_b=max(frac * rng, 1e-9), lam=1e-3), backend="rans"
+    )
+    tiers = [r * rng for r in tiers_rel] + ([0.0] if lossless else [])
+    return codec.compress(v, eps_targets=tiers, decimals=_DEC), tiers
+
+
+# --------------------------------------------------------------------- #
+# segment algebra: closed form == dense numpy over the base predictions
+# --------------------------------------------------------------------- #
+def test_segment_algebra_matches_dense_base():
+    v = _series()
+    cs, _ = _compress(v)
+    pred = base_predictions(cs.base)
+    tab = segment_table(cs.base)
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        t0 = int(rng.integers(0, len(v)))
+        t1 = int(rng.integers(t0 + 1, len(v) + 1))
+        sl = pred[t0:t1]
+        st = base_aggregate(tab, t0, t1)
+        assert st.m == sl.size
+        assert st.vmin == sl.min() and st.vmax == sl.max()
+        assert abs(st.total - sl.sum()) <= 1e-9 * max(1.0, abs(sl).max() * sl.size)
+        mu = st.total / st.m
+        assert abs(base_central_m2(tab, t0, t1, mu) - ((sl - mu) ** 2).sum()) <= 1e-6
+
+
+def test_segment_count_matches_dense_comparisons():
+    v = _series(seed=9)
+    cs, _ = _compress(v)
+    pred = base_predictions(cs.base)
+    tab = segment_table(cs.base)
+    rng = np.random.default_rng(1)
+    for _ in range(30):
+        t0 = int(rng.integers(0, len(v)))
+        t1 = int(rng.integers(t0 + 1, len(v) + 1))
+        sl = pred[t0:t1]
+        # random thresholds plus exact prediction values (float crossings)
+        cands = [float(rng.uniform(v.min() - 1, v.max() + 1)),
+                 float(sl[int(rng.integers(0, sl.size))])]
+        for c in cands:
+            for op, fn in _CMP_FNS.items():
+                assert count_cmp(tab, t0, t1, op, c) == int(fn(sl, c).sum()), (op, c)
+
+
+def test_segment_count_exact_on_near_flat_large_magnitude_segments():
+    """Regression: a near-flat segment of large-magnitude data (counter
+    around 1e12 with slope 1e-10) puts the float crossing index off by
+    ~ulp(theta)/|slope| ≫ 1 — the count must come from bisecting the
+    actual float predictions, not from a solve-and-adjust guess."""
+    from repro.core.segment_algebra import SegmentTable
+
+    tab = SegmentTable(
+        n=8192,
+        t0s=np.array([0], dtype=np.int64),
+        lens=np.array([8192], dtype=np.int64),
+        thetas=np.array([1e12]),
+        slopes=np.array([1e-10]),
+    )
+    pred = 1e12 + 1e-10 * np.arange(8192, dtype=np.float64)
+    for c in (1e12, 1e12 - 1.0, float(np.nextafter(1e12, np.inf))):
+        for op, fn in _CMP_FNS.items():
+            assert count_cmp(tab, 0, 8192, op, c) == int(fn(pred, c).sum()), (op, c)
+
+
+def test_segment_algebra_empty_range():
+    v = _series(n=64)
+    cs, _ = _compress(v)
+    tab = segment_table(cs.base)
+    st = base_aggregate(tab, 10, 10)
+    assert st.m == 0 and st.vmin == np.inf and st.vmax == -np.inf
+    assert count_cmp(tab, 10, 10, "gt", 0.0) == 0
+
+
+def test_count_cmp_rejects_unknown_op():
+    v = _series(n=64)
+    cs, _ = _compress(v)
+    with pytest.raises(ValueError, match="unknown comparison"):
+        count_cmp(segment_table(cs.base), 0, 10, "eq", 0.0)
+
+
+# --------------------------------------------------------------------- #
+# SeriesAnalytics: containment at every tier, exact collapse at lossless
+# --------------------------------------------------------------------- #
+def test_aggregates_contain_truth_at_every_tier():
+    v = _series()
+    cs, tiers = _compress(v)
+    sa = SeriesAnalytics(cs)
+    rng = np.random.default_rng(2)
+    for _ in range(20):
+        t0 = int(rng.integers(0, len(v)))
+        t1 = int(rng.integers(t0 + 1, len(v) + 1))
+        sl = v[t0:t1]
+        truths = {
+            "min": sl.min(), "max": sl.max(), "sum": sl.sum(),
+            "mean": sl.mean(), "count": float(sl.size), "stddev": sl.std(),
+        }
+        for eps in [None] + tiers:
+            for op, tr in truths.items():
+                ans = sa.aggregate(op, t0, t1, eps=eps)
+                assert ans.lo <= tr <= ans.hi, (op, eps, ans, tr)
+
+
+def test_lossless_tier_collapses_to_numpy_oracle():
+    v = _series(seed=11)
+    cs, _ = _compress(v)
+    sa = SeriesAnalytics(cs)
+    sl = v[100:900]
+    for op, tr in [("min", sl.min()), ("max", sl.max()), ("sum", np.sum(sl)),
+                   ("mean", np.mean(sl)), ("stddev", np.std(sl))]:
+        ans = sa.aggregate(op, 100, 900, eps=0.0)
+        assert ans.exact and ans.lo == ans.hi == tr, (op, ans, tr)
+
+
+def test_bounds_tighten_monotonically():
+    v = _series(seed=3)
+    cs, tiers = _compress(v)
+    sa = SeriesAnalytics(cs)
+    for op in ("min", "max", "sum", "mean", "stddev"):
+        widths = [sa.aggregate(op, 17, 1400, eps=e).width for e in [None] + tiers]
+        assert widths == sorted(widths, reverse=True), (op, widths)
+        assert widths[-1] == 0.0  # lossless collapse
+
+
+def test_segment_path_pays_zero_entropy_decodes():
+    v = _series(seed=4)
+    cs, tiers = _compress(v)
+    sa = SeriesAnalytics(cs)
+    for op in ("min", "max", "sum", "mean", "count", "stddev"):
+        ans = sa.aggregate(op, eps=None)
+        assert ans.source == "segments" and ans.layers_paid == 0
+    assert sa.dec.layers_decoded == 0
+    # a tier request above the base guarantee also stays segment-domain
+    ans = sa.aggregate("mean", eps=max(tiers[0], cs.eps_b_practical * 2))
+    assert ans.source == "segments" and sa.dec.layers_decoded == 0
+
+
+def test_count_where_contains_truth_and_collapses_lossless():
+    v = _series(seed=6)
+    cs, tiers = _compress(v)
+    sa = SeriesAnalytics(cs)
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        c = float(rng.uniform(v.min() - 0.1, v.max() + 0.1))
+        t0 = int(rng.integers(0, len(v) - 1))
+        t1 = int(rng.integers(t0 + 1, len(v) + 1))
+        sl = v[t0:t1]
+        for op, fn in _CMP_FNS.items():
+            tr = int(fn(sl, c).sum())
+            prev = None
+            for eps in [None] + tiers:
+                ans = sa.count_where(op, c, t0, t1, eps=eps)
+                assert ans.lo <= tr <= ans.hi, (op, c, eps, ans, tr)
+                if prev is not None:
+                    assert ans.width <= prev  # refine only tightens
+                prev = ans.width
+            final = sa.count_where(op, c, t0, t1, eps=0.0)
+            assert final.exact and final.lo == tr == final.hi
+
+
+def test_count_where_refine_stops_when_bounds_decide():
+    """A threshold far outside the data is decided by the segment bounds
+    alone — the refine loop must not touch a single residual layer."""
+    v = _series(seed=7)
+    cs, _ = _compress(v)
+    sa = SeriesAnalytics(cs)
+    ans = sa.count_where("gt", float(v.max()) + 100.0, eps=0.0)
+    assert ans.exact and ans.lo == 0.0 and ans.layers_paid == 0
+    assert ans.source == "segments"
+    ans = sa.count_where("le", float(v.max()) + 100.0, eps=0.0)
+    assert ans.exact and ans.lo == float(len(v)) and ans.layers_paid == 0
+
+
+def test_aggregate_rejects_bad_input():
+    v = _series(n=128)
+    cs, _ = _compress(v)
+    sa = SeriesAnalytics(cs)
+    with pytest.raises(ValueError, match="unknown aggregate"):
+        sa.aggregate("median")
+    with pytest.raises(ValueError, match="empty sample range"):
+        sa.aggregate("min", 50, 50)
+    with pytest.raises(ValueError, match="unknown comparison"):
+        sa.count_where("eq", 0.0)
+    # count of an empty range is simply 0
+    assert sa.aggregate("count", 50, 50).m == 0
+
+
+def test_topk_and_similarity_are_exact_segment_facts():
+    v = _series(seed=8)
+    cs, _ = _compress(v)
+    sa = SeriesAnalytics(cs)
+    segs = sa.segments()
+    assert sum(s["length"] for s in segs) == len(v)  # a partition
+    top = sa.topk_segments(k=3, by="length")
+    assert len(top) == 3
+    assert [s["length"] for s in top] == sorted(
+        [s["length"] for s in segs], reverse=True)[:3]
+    peak = sa.topk_segments(k=1, by="max")[0]
+    pred = base_predictions(cs.base)
+    assert peak["vmax"] == pred.max()
+    sim = sa.similar_segments(slope=segs[0]["slope"], length=segs[0]["length"], k=1)
+    assert sim[0]["distance"] == 0.0 and sim[0]["t0"] == segs[0]["t0"]
+    with pytest.raises(ValueError, match="unknown top-k"):
+        sa.topk_segments(by="entropy")
+
+
+# --------------------------------------------------------------------- #
+# AnalyticsEngine: frame planning over a SHRKS container
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def container():
+    v = _series(n=6144, seed=12)
+    rng = float(v.max() - v.min())
+    cfg = ShrinkConfig(eps_b=0.05 * rng, lam=1e-4)
+    tiers = [1e-2 * rng, 1e-3 * rng, 0.0]
+    sc = ShrinkStreamCodec(
+        cfg, eps_targets=tiers, decimals=_DEC, backend="rans",
+        value_range=global_range(v), frame_len=1024,
+    )
+    for lo in range(0, len(v), 777):  # uneven chunking
+        sc.ingest(v[lo : lo + 777])
+    return v, tiers, sc.finalize()
+
+
+def test_engine_aggregates_match_oracle(container):
+    v, tiers, blob = container
+    eng = AnalyticsEngine(blob)
+    rng = np.random.default_rng(4)
+    for _ in range(25):
+        t0 = int(rng.integers(0, len(v) - 1))
+        t1 = int(rng.integers(t0 + 1, len(v) + 1))
+        sl = v[t0:t1]
+        for op, tr in [("min", sl.min()), ("max", sl.max()), ("sum", sl.sum()),
+                       ("mean", sl.mean()), ("stddev", sl.std()),
+                       ("count", float(sl.size))]:
+            for eps in [None] + tiers:
+                ans = eng.aggregate(0, op, t0, t1, eps=eps)
+                assert ans.lo <= tr <= ans.hi, (op, eps, ans, tr)
+
+
+def test_engine_count_where_matches_oracle(container):
+    v, tiers, blob = container
+    eng = AnalyticsEngine(blob)
+    rng = np.random.default_rng(5)
+    for _ in range(10):
+        c = float(rng.uniform(v.min(), v.max()))
+        t0 = int(rng.integers(0, len(v) - 1))
+        t1 = int(rng.integers(t0 + 1, len(v) + 1))
+        sl = v[t0:t1]
+        for op, fn in _CMP_FNS.items():
+            tr = int(fn(sl, c).sum())
+            for eps in [None] + tiers:
+                ans = eng.count_where(0, op, c, t0, t1, eps=eps)
+                assert ans.lo <= tr <= ans.hi, (op, c, eps, ans, tr)
+            exact = eng.count_where(0, op, c, t0, t1, eps=0.0)
+            assert exact.exact and exact.lo == tr == exact.hi
+
+
+def test_engine_min_skips_dead_frames(container):
+    v, tiers, blob = container
+    eng = AnalyticsEngine(blob)
+    ans = eng.aggregate(0, "min", eps=tiers[1])
+    assert ans.lo <= v.min() <= ans.hi
+    # the walk spans several frames; most cannot contain the minimum and
+    # must be pruned from refinement by their sketch bounds
+    assert ans.frames_touched == 6
+    assert ans.frames_skipped > 0
+    assert ans.frames_refined == ans.frames_touched - ans.frames_skipped
+
+
+def test_engine_predicate_refines_only_straddling_frames(container):
+    v, tiers, blob = container
+    eng = AnalyticsEngine(blob)
+    # a threshold above one frame's range but inside another's straddles
+    # only some frames: those decided by segments must pay zero layers
+    c = float(np.percentile(v, 90))
+    ans = eng.count_where(0, "gt", c, eps=0.0)
+    tr = int((v > c).sum())
+    assert ans.lo == tr == ans.hi
+    assert ans.frames_refined + ans.frames_skipped + (
+        eng.stats["segment_frames"]) >= ans.frames_touched
+    # refinement bounded by the straddling frames only
+    assert ans.frames_refined <= ans.frames_touched
+
+
+def test_engine_zero_decode_plan_is_pure_directory_read(container):
+    v, tiers, blob = container
+    eng = AnalyticsEngine(blob)
+    for op in ("min", "max", "sum", "mean", "stddev", "count"):
+        ans = eng.aggregate(0, op, eps=None)
+        assert ans.layers_paid == 0
+    assert eng.stats["layers_paid"] == 0
+    assert eng.batcher.stats["frames_decoded"] == 0  # LRU never touched
+
+
+def test_engine_shares_serving_lru(container):
+    """Range queries then analytics on the same batcher: refinement reuses
+    the layer prefixes the range path already decoded."""
+    from repro.serving import RangeQuery, RangeQueryBatcher
+
+    v, tiers, blob = container
+    bat = RangeQueryBatcher(blob, cache_frames=32)
+    bat.submit(RangeQuery(qid=0, series_id=0, t0=0, t1=len(v), eps=tiers[1]))
+    (done,) = bat.run()
+    assert done.error is None
+    layers_before = bat.stats["layers_decoded"]
+    eng = AnalyticsEngine(bat)
+    ans = eng.aggregate(0, "sum", eps=tiers[1])
+    assert ans.lo <= v.sum() <= ans.hi
+    # every layer the aggregate needed was already cached by the range query
+    assert ans.layers_paid == 0
+    assert bat.stats["layers_decoded"] == layers_before
+
+
+def test_engine_topk_uses_container_coordinates(container):
+    v, tiers, blob = container
+    eng = AnalyticsEngine(blob)
+    segs = eng.segments(0)
+    assert sum(s["length"] for s in segs) == len(v)
+    t0s = [s["t0"] for s in segs]
+    assert t0s == sorted(t0s) and t0s[0] == 0
+    top = eng.topk_segments(0, k=4, by="length")
+    assert [s["length"] for s in top] == sorted(
+        (s["length"] for s in segs), reverse=True)[:4]
+    sim = eng.similar_segments(0, slope=0.0, length=64.0, k=3)
+    assert len(sim) == 3 and sim[0]["distance"] <= sim[-1]["distance"]
+
+
+def test_engine_rejects_unknown_series_and_uncovered_range(container):
+    v, tiers, blob = container
+    eng = AnalyticsEngine(blob)
+    with pytest.raises(ValueError, match="unknown series"):
+        eng.aggregate(99, "min")
+    with pytest.raises(ValueError, match="not covered"):
+        eng.aggregate(0, "min", len(v) - 10, len(v) + 10)

@@ -1,0 +1,221 @@
+"""Oracle-differential property campaign for compressed-domain analytics.
+
+The adversary for the analytics engine: for ANY fixed-decimal series, ANY
+tier ladder, ANY query range/threshold, and ANY ragged mix,
+
+* (a) containment — the exact decode-then-numpy truth lies inside the
+  returned ``[lo, hi]`` at EVERY tier, for every aggregate op and every
+  predicate comparison;
+* (b) monotone refinement — widths never grow as tiers refine
+  (``None`` → coarse → ... → lossless);
+* (c) exact collapse — at the lossless tier the interval degenerates to
+  the numpy oracle exactly (``lo == hi == oracle``);
+* the multi-frame engine answers match the same contract when the series
+  is streamed into a SHRKS container with arbitrary frame cuts.
+
+Skipped without the ``hypothesis`` dev extra; CI runs it derandomized at
+the 200-example profile via tests/conftest.py.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.analytics import AnalyticsEngine, SeriesAnalytics
+from repro.core import ShrinkCodec, ShrinkConfig, ShrinkStreamCodec
+from repro.core.semantics import global_range
+
+_DECIMALS = 4
+_CMP_FNS = {
+    "gt": np.greater,
+    "ge": np.greater_equal,
+    "lt": np.less,
+    "le": np.less_equal,
+}
+
+_series_strategy = st.lists(
+    st.floats(min_value=-1e4, max_value=1e4, allow_nan=False, allow_infinity=False,
+              width=32),
+    min_size=2,
+    max_size=300,
+).map(lambda xs: np.round(np.array(xs, dtype=np.float64), _DECIMALS))
+
+
+@st.composite
+def _query_case(draw):
+    v = draw(_series_strategy)
+    n = len(v)
+    rel = draw(st.lists(st.floats(min_value=1e-4, max_value=0.5),
+                        min_size=1, max_size=3, unique=True))
+    lossless = draw(st.booleans())
+    t0 = draw(st.integers(min_value=0, max_value=n - 1))
+    t1 = draw(st.integers(min_value=t0 + 1, max_value=n))
+    # thresholds both random and pinned to data values (float crossings)
+    c_rel = draw(st.floats(min_value=-0.2, max_value=1.2))
+    pin = draw(st.booleans())
+    cmp_op = draw(st.sampled_from(sorted(_CMP_FNS)))
+    return v, rel, lossless, t0, t1, c_rel, pin, cmp_op
+
+
+def _build(v, rel, lossless):
+    rng = float(v.max() - v.min())
+    tiers = sorted({r * rng for r in rel if r * rng > 0.0}, reverse=True)
+    if lossless:
+        tiers.append(0.0)
+    if not tiers:
+        return None, []
+    codec = ShrinkCodec(
+        config=ShrinkConfig(eps_b=max(0.05 * rng, 1e-6), lam=1e-3), backend="rans"
+    )
+    return codec.compress(v, eps_targets=tiers, decimals=_DECIMALS), tiers
+
+
+@given(_query_case())
+@settings(max_examples=200, deadline=None)
+def test_aggregate_containment_monotone_and_lossless_collapse(case):
+    v, rel, lossless, t0, t1, _, _, _ = case
+    cs, tiers = _build(v, rel, lossless)
+    if cs is None:
+        return
+    sa = SeriesAnalytics(cs)
+    sl = v[t0:t1]
+    truths = {
+        "min": float(sl.min()), "max": float(sl.max()), "sum": float(np.sum(sl)),
+        "mean": float(np.mean(sl)), "count": float(sl.size),
+        "stddev": float(np.std(sl)),
+    }
+    widths: dict[str, float] = {}
+    for eps in [None] + tiers:
+        for op, truth in truths.items():
+            ans = sa.aggregate(op, t0, t1, eps=eps)
+            # (a) containment at every tier
+            assert ans.lo <= truth <= ans.hi, (op, eps, ans.lo, ans.hi, truth)
+            # (b) monotone tightening as tiers refine
+            if op in widths:
+                assert ans.width <= widths[op], (op, eps, ans.width, widths[op])
+            widths[op] = ans.width
+            # (c) exact collapse at the lossless tier
+            if eps == 0.0 and op != "count":
+                assert ans.exact and ans.lo == truth == ans.hi, (op, ans, truth)
+
+
+@given(_query_case())
+@settings(max_examples=200, deadline=None)
+def test_count_where_containment_monotone_and_lossless_collapse(case):
+    v, rel, lossless, t0, t1, c_rel, pin, op = case
+    cs, tiers = _build(v, rel, lossless)
+    if cs is None:
+        return
+    sa = SeriesAnalytics(cs)
+    sl = v[t0:t1]
+    if pin:
+        c = float(sl[int(len(sl) * min(max(c_rel, 0.0), 0.999))])
+    else:
+        rng = float(v.max() - v.min())
+        c = float(v.min()) + c_rel * rng
+    truth = int(_CMP_FNS[op](sl, c).sum())
+    prev = None
+    for eps in [None] + tiers:
+        ans = sa.count_where(op, c, t0, t1, eps=eps)
+        assert ans.lo <= truth <= ans.hi, (op, c, eps, ans.lo, ans.hi, truth)
+        assert float(ans.lo).is_integer() and float(ans.hi).is_integer()
+        if prev is not None:
+            assert ans.width <= prev
+        prev = ans.width
+        if eps == 0.0:
+            assert ans.exact and ans.lo == truth == ans.hi, (op, c, ans, truth)
+
+
+@st.composite
+def _ragged_case(draw):
+    v = draw(_series_strategy)
+    extra = draw(st.lists(st.integers(min_value=0, max_value=len(v)),
+                          min_size=1, max_size=3))
+    rel = draw(st.floats(min_value=1e-3, max_value=0.3))
+    return v, extra, rel
+
+
+@given(_ragged_case())
+@settings(max_examples=100, deadline=None)
+def test_ragged_batch_series_obey_analytics_contract(case):
+    """Every series of a ragged compress_batch (including empty and
+    length-1 companions) answers queries under the same containment /
+    collapse contract as a one-shot archive."""
+    v, extra, rel = case
+    rng = float(v.max() - v.min())
+    if rng <= 0:
+        return
+    tiers = [rel * rng, 0.0]
+    codec = ShrinkCodec(
+        config=ShrinkConfig(eps_b=0.05 * rng, lam=1e-3), backend="rans"
+    )
+    ragged = [v] + [v[:k] for k in extra]
+    css = codec.compress_batch(ragged, eps_targets=tiers, decimals=_DECIMALS,
+                               max_buckets=2)
+    for arr, cs in zip(ragged, css):
+        if arr.size == 0:
+            continue
+        sa = SeriesAnalytics(cs)
+        for op in ("min", "max", "sum", "mean", "stddev"):
+            truth = {
+                "min": float(arr.min()), "max": float(arr.max()),
+                "sum": float(np.sum(arr)), "mean": float(np.mean(arr)),
+                "stddev": float(np.std(arr)),
+            }[op]
+            coarse = sa.aggregate(op, eps=None)
+            assert coarse.lo <= truth <= coarse.hi, (op, coarse, truth)
+            exact = sa.aggregate(op, eps=0.0)
+            assert exact.exact and exact.lo == truth == exact.hi, (op, exact, truth)
+
+
+_long_series_strategy = st.lists(
+    st.floats(min_value=-1e4, max_value=1e4, allow_nan=False, allow_infinity=False,
+              width=32),
+    min_size=8,
+    max_size=300,
+).map(lambda xs: np.round(np.array(xs, dtype=np.float64), _DECIMALS))
+
+
+@st.composite
+def _framed_case(draw):
+    v = draw(_long_series_strategy)
+    frame_len = draw(st.integers(min_value=4, max_value=max(4, len(v) // 2)))
+    rel = draw(st.floats(min_value=1e-3, max_value=0.3))
+    t0 = draw(st.integers(min_value=0, max_value=len(v) - 2))
+    t1 = draw(st.integers(min_value=t0 + 1, max_value=len(v)))
+    c_rel = draw(st.floats(min_value=0.0, max_value=1.0))
+    return v, frame_len, rel, t0, t1, c_rel
+
+
+@given(_framed_case())
+@settings(max_examples=100, deadline=None)
+def test_framed_engine_matches_decode_oracle(case):
+    """The SHRKS planner (sketch/skip/refine over arbitrary frame cuts)
+    obeys the same contract as the single-archive engine."""
+    v, frame_len, rel, t0, t1, c_rel = case
+    rng = float(v.max() - v.min())
+    if rng <= 0:
+        return
+    tiers = [rel * rng, 0.0]
+    cfg = ShrinkConfig(eps_b=0.05 * rng, lam=1e-3)
+    sc = ShrinkStreamCodec(
+        cfg, eps_targets=tiers, decimals=_DECIMALS, backend="rans",
+        value_range=global_range(v), frame_len=frame_len,
+    )
+    sc.ingest(v)
+    eng = AnalyticsEngine(sc.finalize())
+    sl = v[t0:t1]
+    for op, truth in [("min", float(sl.min())), ("max", float(sl.max())),
+                      ("sum", float(np.sum(sl))), ("mean", float(np.mean(sl))),
+                      ("stddev", float(np.std(sl)))]:
+        for eps in (None, tiers[0], 0.0):
+            ans = eng.aggregate(0, op, t0, t1, eps=eps)
+            assert ans.lo <= truth <= ans.hi, (op, eps, ans, truth)
+    c = float(v.min()) + c_rel * rng
+    truth = int((sl > c).sum())
+    for eps in (None, tiers[0]):
+        ans = eng.count_where(0, "gt", c, t0, t1, eps=eps)
+        assert ans.lo <= truth <= ans.hi
+    exact = eng.count_where(0, "gt", c, t0, t1, eps=0.0)
+    assert exact.exact and exact.lo == truth == exact.hi

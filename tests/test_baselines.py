@@ -78,3 +78,66 @@ def test_lfzip_decoder_replays_encoder():
     eps = 1e-3 * float(v.max() - v.min())
     vhat = lfzip.decompress(lfzip.compress(v, eps))
     assert np.max(np.abs(vhat - v)) <= eps * (1 + 1e-9)
+
+
+# --------------------------------------------------------------------- #
+# Adversarial inputs: the degenerate shapes real sensor feeds produce.
+# bench_compression.py's comparisons are only meaningful if every baseline
+# round-trips these — a codec that silently corrupts a constant feed or a
+# length-1 tail frame would skew every CR/latency table built on it.
+# --------------------------------------------------------------------- #
+_ADVERSARIAL = {
+    "empty": np.zeros(0, dtype=np.float64),
+    "len1": np.array([3.25]),
+    "constant": np.full(257, -7.125),
+    "ramp": np.round(np.linspace(-5.0, 5.0, 300), 4),  # NaN-free monotone
+    "altsign": np.round(np.tile([1.5, -1.5], 150), 4),
+}
+
+
+@pytest.mark.parametrize("case", sorted(_ADVERSARIAL))
+def test_gorilla_adversarial_roundtrip(case):
+    from repro.baselines import gorilla
+
+    v = _ADVERSARIAL[case]
+    out = gorilla.decompress(gorilla.compress(v))
+    assert out.shape == v.shape
+    assert np.array_equal(out, v)
+
+
+def test_gorilla_special_float_bit_patterns():
+    """XOR coding is bit-level: signed zeros, infinities, denormals and the
+    largest finite double must survive bit-exactly."""
+    from repro.baselines import gorilla
+
+    v = np.array([0.0, -0.0, np.inf, -np.inf, 1e-310, np.finfo(np.float64).max])
+    out = gorilla.decompress(gorilla.compress(v))
+    assert np.array_equal(out.view(np.uint64), v.view(np.uint64))
+
+
+@pytest.mark.parametrize("name", ["simpiece", "lfzip"])
+@pytest.mark.parametrize("case", sorted(_ADVERSARIAL))
+def test_lossy_adversarial_roundtrip(name, case):
+    import importlib
+
+    mod = importlib.import_module(f"repro.baselines.{name}")
+    v = _ADVERSARIAL[case]
+    rng = float(v.max() - v.min()) if v.size else 0.0
+    eps = 0.01 * rng if rng > 0 else 0.01  # flat/tiny inputs: absolute eps
+    out = mod.decompress(mod.compress(v, eps))
+    assert out.shape == v.shape
+    if v.size:
+        assert np.max(np.abs(out - v)) <= eps * (1 + 1e-3) + 1e-9, case
+
+
+@pytest.mark.parametrize("name", ["simpiece", "lfzip"])
+def test_lossy_baselines_degenerate_eps_still_bounded(name):
+    """A very tight eps on an adversarial alternating signal must not
+    break the error contract (it may cost compression, never correctness)."""
+    import importlib
+
+    mod = importlib.import_module(f"repro.baselines.{name}")
+    v = np.round(np.tile([0.001, -0.001, 0.0015], 100), 4)
+    eps = 1e-5
+    out = mod.decompress(mod.compress(v, eps))
+    assert np.max(np.abs(out - v)) <= eps * (1 + 1e-3) + 1e-12

@@ -99,6 +99,30 @@ def test_ragged_golden_fixture_still_decodes():
         assert np.array_equal(got, v), sid
 
 
+def test_analytics_answers_stable():
+    """Compressed-domain query answers over the checked-in archives must
+    not drift: interval bounds, achieved guarantees, planner frame
+    accounting, and top-k segment records are all pinned.  A wire-format
+    change, a bound-composition change, or a planner change that moves ANY
+    of them fails here loudly (regen via tests/golden/regen.py if the
+    change is intentional)."""
+    import json
+
+    path = golden.GOLDEN_ANALYTICS
+    if not path.exists():
+        pytest.fail(
+            "missing golden fixture golden_analytics.json; run "
+            "`PYTHONPATH=src python tests/golden/regen.py` and commit it"
+        )
+    expected = json.loads(path.read_text())
+    got = json.loads(json.dumps(golden.build_analytics()))  # normalize floats
+    assert got == expected, (
+        "compressed-domain analytics answers changed over the golden "
+        "archives — engine/bound/planner regression (see tests/golden/"
+        "regen.py for the intentional-change procedure)"
+    )
+
+
 def test_golden_fixture_still_decodes():
     """The checked-in container (not the rebuilt one) must decode: guards
     the decoder against changes that re-encode identically but misread

@@ -334,6 +334,58 @@ else:
         np.testing.assert_array_equal(brk_k, brk_r)
 
 
+# ------------------------------------------------------------- segment_agg
+from repro.kernels import segment_agg
+
+
+@pytest.mark.parametrize("m", [1, 8, 129, 1024])
+def test_segment_agg_matches_ref(m):
+    rng = np.random.default_rng(11)
+    theta = jnp.asarray(rng.standard_normal((m, 1)), jnp.float32)
+    slope = jnp.asarray(rng.standard_normal((m, 1)) * 0.01, jnp.float32)
+    a = jnp.asarray(rng.integers(0, 64, (m, 1)).astype(np.float32))
+    b = a + jnp.asarray(rng.integers(-8, 256, (m, 1)).astype(np.float32))
+    outs = segment_agg(theta, slope, a, b)
+    exps = segment_agg(theta, slope, a, b, force_ref=True)
+    for got, exp in zip(outs, exps):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_segment_agg_matches_dense_sums():
+    """The closed forms must agree with per-sample numpy aggregation."""
+    rng = np.random.default_rng(12)
+    m = 24
+    theta = rng.standard_normal(m)
+    slope = rng.standard_normal(m) * 0.05
+    a = rng.integers(0, 32, m).astype(np.float64)
+    b = a + rng.integers(1, 128, m).astype(np.float64)
+    outs = segment_agg(
+        jnp.asarray(theta[:, None], jnp.float32),
+        jnp.asarray(slope[:, None], jnp.float32),
+        jnp.asarray(a[:, None], jnp.float32),
+        jnp.asarray(b[:, None], jnp.float32),
+    )
+    s_k, ss_k, mn_k, mx_k = (np.asarray(o)[:, 0].astype(np.float64) for o in outs)
+    for i in range(m):
+        vals = theta[i] + slope[i] * np.arange(a[i], b[i])
+        np.testing.assert_allclose(s_k[i], vals.sum(), rtol=1e-4)
+        np.testing.assert_allclose(ss_k[i], (vals * vals).sum(), rtol=1e-3)
+        np.testing.assert_allclose(mn_k[i], vals.min(), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(mx_k[i], vals.max(), rtol=1e-5, atol=1e-5)
+
+
+def test_segment_agg_empty_window_is_identity():
+    theta = jnp.ones((4, 1), jnp.float32)
+    slope = jnp.ones((4, 1), jnp.float32)
+    a = jnp.full((4, 1), 10.0, jnp.float32)
+    b = jnp.asarray([[10.0], [9.0], [11.0], [10.0]], jnp.float32)  # rows 0,1,3 empty
+    s, ss, mn, mx = segment_agg(theta, slope, a, b)
+    assert np.asarray(s)[0, 0] == 0.0 and np.asarray(ss)[1, 0] == 0.0
+    assert np.asarray(mn)[0, 0] > 1e38 and np.asarray(mx)[0, 0] < -1e38
+    assert np.asarray(s)[2, 0] == 11.0  # the one live row: value theta+slope*10
+
+
 # ------------------------------------------------------------ flash attention
 from repro.kernels import flash_attention
 

@@ -1,13 +1,26 @@
 """Serving: quantized KV error bound, cache promotion, continuous batching
-end-to-end with a real (reduced) model."""
+end-to-end with a real (reduced) model, and the SHRINK range-query batcher
+(progressive frame LRU: peek sketches, layer-hit accounting, eviction,
+cross-frame stitching)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs import ARCHS, reduced_config
+from repro.core import ShrinkConfig, ShrinkStreamCodec
 from repro.core.jaxshrink import TensorCodecConfig
+from repro.core.semantics import global_range
 from repro.models import build_model
-from repro.serving import ContinuousBatcher, Request, promote_caches, quantize_cache, dequantize_cache
+from repro.serving import (
+    ContinuousBatcher,
+    RangeQuery,
+    RangeQueryBatcher,
+    Request,
+    dequantize_cache,
+    promote_caches,
+    quantize_cache,
+)
 from repro.models.layers import AttnCache
 
 
@@ -43,6 +56,124 @@ def test_promote_caches_shapes():
     assert leaf.kpos.shape[-1] == 32
     # empty slots are masked
     assert int(np.asarray(leaf.kpos)[..., 8:].max()) == -1
+
+
+# --------------------------------------------------------------------- #
+# RangeQueryBatcher: progressive frame LRU over a SHRKS container
+# --------------------------------------------------------------------- #
+_N = 4096
+_FRAME = 1024
+_DEC = 4
+
+
+@pytest.fixture(scope="module")
+def shrks():
+    """Deterministic 2-series container: 4 frames per series, a 3-tier
+    pyramid ({1e-2, 1e-3}·range + lossless) in every frame."""
+    t = np.arange(_N, dtype=np.float64)
+    v = np.stack([
+        np.round(np.sin(t * 0.01) * 3 + 1e-3 * t, _DEC),
+        np.round(np.cos(t * 0.02) * 5 - 2e-3 * t, _DEC),
+    ])
+    vr = global_range(v)
+    rng = vr[1] - vr[0]
+    tiers = [1e-2 * rng, 1e-3 * rng, 0.0]
+    sc = ShrinkStreamCodec(
+        ShrinkConfig(eps_b=0.05 * rng, lam=1e-4), eps_targets=tiers,
+        decimals=_DEC, backend="rans", value_range=vr, frame_len=_FRAME,
+    )
+    for lo in range(0, _N, 512):
+        for sid in range(2):
+            sc.ingest(v[sid, lo : lo + 512], series_id=sid)
+    return v, tiers, sc.finalize()
+
+
+def test_range_batcher_peek_serves_cached_sketch_with_zero_decode(shrks):
+    v, tiers, blob = shrks
+    bat = RangeQueryBatcher(blob, cache_frames=8)
+    q = RangeQuery(qid=0, series_id=0, t0=100, t1=600, eps=tiers[0])
+    # cold container: nothing materialized, peek must refuse
+    assert bat.peek(q) is None
+    bat.submit(q)
+    (done,) = bat.run()
+    assert done.error is None and done.achieved <= tiers[0]
+    layers_before = bat.stats["layers_decoded"]
+    # warm frame: a finer-eps peek answers from the cached coarse prefix
+    q2 = RangeQuery(qid=1, series_id=0, t0=200, t1=400, eps=tiers[1])
+    sketch = bat.peek(q2)
+    assert sketch is not None and q2.achieved == done.achieved
+    assert np.max(np.abs(sketch - v[0, 200:400])) <= q2.achieved * (1 + 1e-9)
+    assert bat.stats["layers_decoded"] == layers_before  # zero entropy work
+    # a peek over a cold frame still refuses (frame 2 never touched)
+    q3 = RangeQuery(qid=2, series_id=0, t0=2 * _FRAME, t1=2 * _FRAME + 10, eps=tiers[0])
+    assert bat.peek(q3) is None
+
+
+def test_range_batcher_layer_hits_on_refine(shrks):
+    v, tiers, blob = shrks
+    bat = RangeQueryBatcher(blob, cache_frames=8)
+    bat.submit(RangeQuery(qid=0, series_id=0, t0=0, t1=_FRAME, eps=tiers[0]))
+    bat.run()
+    coarse_layers = bat.stats["layers_decoded"]
+    assert coarse_layers >= 1 and bat.stats["layer_hits"] == 0
+    # same frame, lossless: pays only the refinement layers below the prefix
+    bat.submit(RangeQuery(qid=1, series_id=0, t0=0, t1=_FRAME, eps=0.0))
+    (fine,) = bat.run()
+    assert fine.error is None
+    assert bat.stats["frame_hits"] == 1
+    assert bat.stats["layer_hits"] == coarse_layers  # cached prefix reused
+    paid_for_refine = bat.stats["layers_decoded"] - coarse_layers
+    assert paid_for_refine >= 1
+    # third pass at lossless: everything is cached, zero new decodes
+    bat.submit(RangeQuery(qid=2, series_id=0, t0=10, t1=900, eps=0.0))
+    bat.run()
+    assert bat.stats["layers_decoded"] == coarse_layers + paid_for_refine
+    np.testing.assert_array_equal(np.round(fine.result, _DEC), v[0, :_FRAME])
+
+
+def test_range_batcher_lru_evicts_under_pressure(shrks):
+    v, tiers, blob = shrks
+    bat = RangeQueryBatcher(blob, cache_frames=1)
+    frames = [(0, _FRAME), (_FRAME, 2 * _FRAME)]
+    # alternate two frames through a 1-slot cache: every touch re-decodes
+    for rep in range(2):
+        for lo, hi in frames:
+            bat.submit(RangeQuery(qid=rep, series_id=0, t0=lo, t1=hi, eps=tiers[0]))
+            bat.run()
+    assert bat.stats["frames_decoded"] == 4 and bat.stats["frame_hits"] == 0
+    # with room for both, the second round is all hits
+    bat2 = RangeQueryBatcher(blob, cache_frames=2)
+    for rep in range(2):
+        for lo, hi in frames:
+            bat2.submit(RangeQuery(qid=rep, series_id=0, t0=lo, t1=hi, eps=tiers[0]))
+            bat2.run()
+    assert bat2.stats["frames_decoded"] == 2 and bat2.stats["frame_hits"] == 2
+
+
+def test_range_batcher_cross_frame_query_stitches_exactly(shrks):
+    v, tiers, blob = shrks
+    bat = RangeQueryBatcher(blob, cache_frames=8)
+    # spans 3 frame boundaries; check both series at both extremes
+    for sid in range(2):
+        for eps, check in ((tiers[1], None), (0.0, "exact")):
+            q = RangeQuery(qid=sid, series_id=sid, t0=_FRAME - 7, t1=3 * _FRAME + 5, eps=eps)
+            bat.submit(q)
+            (done,) = bat.run()
+            assert done.error is None
+            want = v[sid, _FRAME - 7 : 3 * _FRAME + 5]
+            if check == "exact":
+                np.testing.assert_array_equal(np.round(done.result, _DEC), want)
+            else:
+                assert np.max(np.abs(done.result - want)) <= eps * (1 + 1e-9)
+    # uncovered ranges and unknown series surface as query errors, not raises
+    bad = RangeQuery(qid=9, series_id=0, t0=_N - 5, t1=_N + 5, eps=tiers[0])
+    bat.submit(bad)
+    (done,) = bat.run()
+    assert done.error is not None and "not covered" in done.error
+    unknown = RangeQuery(qid=10, series_id=7, t0=0, t1=5, eps=tiers[0])
+    bat.submit(unknown)
+    (done,) = bat.run()
+    assert done.error is not None and "unknown series" in done.error
 
 
 def test_continuous_batching_decodes():
