@@ -1,0 +1,198 @@
+"""Robustness benchmarks: what fault tolerance costs, and proof it works.
+
+``integrity_overhead``: the CRC ladder (SHRKS footer + lazy frame CRCs,
+SHRK header CRC, SHRR directory + per-layer CRCs) is verified on every
+serve — this measures the pure checksum pass over the container against
+the full decode, so the overhead is reported as a fraction of real work.
+Claim ``C_robustness_crc_overhead``: integrity verification costs < 25%
+of decode time (it is a single crc32 sweep vs an entropy decode).
+
+``degraded_path``: serving latency for a healthy frame vs the same frame
+with its finest pyramid layer corrupted (the gateway's tolerant re-parse
++ intact-prefix serve).  The degraded path re-reads the payload and
+re-parses under ``strict=False``, so it costs roughly one extra parse —
+reported as a ratio.  Claim ``C_robustness_degraded_overhead``: a
+degraded answer costs < 5x a healthy one (no retry storms, no decode of
+the corrupt layer).
+
+``chaos_campaign``: a seeded single-fault campaign (flip / truncate /
+CRC smash / frame drop) with every surviving answer differentially
+checked against the pristine oracle.  Claim
+``C_robustness_no_silent_corruption``: zero answers outside their
+reported bound — the headline invariant of docs/robustness.md, here
+measured rather than unit-tested.
+
+``robustness_json`` bundles all three for the BENCH_throughput.json
+trajectory.
+"""
+from __future__ import annotations
+
+import time
+import zlib
+
+import numpy as np
+
+from repro.core import BYTES_PER_ROW, ShrinkConfig, ShrinkStreamCodec, ShrinkError
+from repro.serving import FaultTolerantGateway, RangeQuery
+from repro.testing import ChaosInjector, flip_byte, list_frames
+
+from .datasets import save_result
+
+
+def _container(s: int, n: int, frame_len: int):
+    rng = np.random.default_rng(5)
+    v = np.cumsum(rng.standard_normal((s, n)) * 0.05, axis=1)
+    v += rng.standard_normal((s, n)) * 0.02
+    v = np.round(v, 4)
+    vrange = float(v.max() - v.min())
+    cfg = ShrinkConfig(eps_b=0.05 * vrange, lam=1e-4)
+    eps = 0.01 * vrange
+    sc = ShrinkStreamCodec(
+        cfg, eps_targets=[eps], backend="rans",
+        value_range=(float(v.min()), float(v.max())), frame_len=frame_len,
+    )
+    for sid in range(s):
+        sc.ingest(v[sid], series_id=sid)
+    return v, eps, sc.finalize()
+
+
+def _serve_all(blob: bytes, s: int, n: int, eps: float) -> float:
+    gw = FaultTolerantGateway(blob, cache_frames=0)  # cold: every decode real
+    for sid in range(s):
+        gw.submit(RangeQuery(qid=sid, series_id=sid, t0=0, t1=n, eps=eps))
+    t0 = time.perf_counter()
+    for q in gw.run():
+        assert q.error is None
+    return time.perf_counter() - t0
+
+
+def integrity_overhead(quick: bool = False) -> dict:
+    s, n, frame = (2, 16_384, 2048) if quick else (4, 65_536, 8192)
+    v, eps, blob = _container(s, n, frame)
+    reps = 3 if quick else 5
+    decode_s = min(_serve_all(blob, s, n, eps) for _ in range(reps))
+    # the checksum work the ladder adds, measured as a raw crc32 sweep of
+    # every byte the decode path verifies (footer + frames + layers)
+    crc_s = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        zlib.crc32(blob)
+        crc_s = min(crc_s, time.perf_counter() - t0)
+    mb = s * n * BYTES_PER_ROW / 1e6
+    return {
+        "series": s, "points_per_series": n, "container_bytes": len(blob),
+        "full_decode_s": decode_s,
+        "decode_mb_s": mb / decode_s,
+        "crc_sweep_s": crc_s,
+        "crc_overhead_frac": crc_s / decode_s,
+    }
+
+
+def degraded_path(quick: bool = False) -> dict:
+    s, n, frame = (2, 16_384, 2048) if quick else (2, 32_768, 4096)
+    v, eps, blob = _container(s, n, frame)
+    m = list_frames(blob)[0]
+    corrupt, _ = flip_byte(blob, m.offset + m.length - 3)  # finest layer dies
+    inner = 4 if quick else 16
+
+    def serve(b: bytes) -> tuple[float, bool]:
+        t_best, degraded = float("inf"), False
+        for _ in range(inner):
+            gw = FaultTolerantGateway(b, cache_frames=0)
+            gw.submit(RangeQuery(qid=0, series_id=m.series_id,
+                                 t0=m.t_lo, t1=m.t_hi, eps=eps))
+            t0 = time.perf_counter()
+            (q,) = gw.run()
+            t_best = min(t_best, time.perf_counter() - t0)
+            assert q.error is None
+            degraded = q.degraded
+            err = float(np.max(np.abs(
+                q.result - v[m.series_id, m.t_lo:m.t_hi])))
+            assert err <= max(q.achieved, eps) * (1 + 1e-9)
+        return t_best, degraded
+
+    healthy_s, d0 = serve(blob)
+    degraded_s, d1 = serve(corrupt)
+    assert not d0 and d1
+    return {
+        "frame_samples": m.t_hi - m.t_lo,
+        "healthy_ms": healthy_s * 1e3,
+        "degraded_ms": degraded_s * 1e3,
+        "degraded_vs_healthy": degraded_s / healthy_s,
+    }
+
+
+def chaos_campaign(quick: bool = False) -> dict:
+    s, n, frame = (2, 8192, 1024) if quick else (2, 16_384, 2048)
+    v, eps, blob = _container(s, n, frame)
+    chaos = ChaosInjector(seed=0)
+    qrng = np.random.default_rng(3)
+    rounds = 24 if quick else 96
+    per = 4
+    tally = {"ok": 0, "degraded": 0, "typed_error": 0, "silent": 0,
+             "rejected_at_parse": 0}
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        mutant, _fault = chaos.corrupt(blob)
+        try:
+            gw = FaultTolerantGateway(mutant)
+        except ShrinkError:
+            tally["rejected_at_parse"] += 1
+            continue
+        for qid in range(per):
+            sid = int(qrng.integers(0, s))
+            lo = int(qrng.integers(0, n - 16))
+            hi = int(min(n, lo + qrng.integers(16, 2 * frame)))
+            gw.submit(RangeQuery(qid=qid, series_id=sid, t0=lo, t1=hi, eps=eps))
+        for q in gw.run(deadline_s=30.0):
+            if q.error is not None:
+                tally["typed_error"] += 1
+                continue
+            err = float(np.max(np.abs(q.result - v[q.series_id, q.t0:q.t1])))
+            if err > max(q.achieved, eps) * (1 + 1e-9):
+                tally["silent"] += 1
+            elif q.degraded:
+                tally["degraded"] += 1
+            else:
+                tally["ok"] += 1
+    dt = time.perf_counter() - t0
+    checked = sum(tally.values()) - tally["rejected_at_parse"]
+    return {
+        "rounds": rounds, "queries_checked": checked,
+        "campaign_s": dt,
+        "queries_per_s": checked / dt if dt > 0 else 0.0,
+        **tally,
+    }
+
+
+def robustness_json(quick: bool = False) -> dict:
+    out = {
+        "integrity_overhead": integrity_overhead(quick=quick),
+        "degraded_path": degraded_path(quick=quick),
+        "chaos_campaign": chaos_campaign(quick=quick),
+    }
+    save_result("robustness", out)
+    return out
+
+
+def validate_claims(rob: dict) -> dict:
+    checks = {
+        "C_robustness_no_silent_corruption": {
+            "queries_checked": rob["chaos_campaign"]["queries_checked"],
+            "silent": rob["chaos_campaign"]["silent"],
+            "pass": rob["chaos_campaign"]["silent"] == 0
+            and rob["chaos_campaign"]["queries_checked"] > 0,
+        },
+        "C_robustness_crc_overhead": {
+            "crc_overhead_frac": round(
+                rob["integrity_overhead"]["crc_overhead_frac"], 4),
+            "pass": rob["integrity_overhead"]["crc_overhead_frac"] < 0.25,
+        },
+        "C_robustness_degraded_overhead": {
+            "degraded_vs_healthy": round(
+                rob["degraded_path"]["degraded_vs_healthy"], 2),
+            "pass": rob["degraded_path"]["degraded_vs_healthy"] < 5.0,
+        },
+    }
+    save_result("claims_robustness", checks)
+    return checks

@@ -18,6 +18,7 @@ from . import (
     bench_compression,
     bench_progressive,
     bench_ragged,
+    bench_robustness,
     bench_roofline,
     bench_scaling,
     bench_sensitivity,
@@ -198,6 +199,31 @@ def main(argv=None) -> int:
         f"({pred['mb_covered_per_s']:.0f} MB/s covered)"
     )
     checks.update(bench_analytics.validate_claims(analytics))
+
+    print("\n== Robustness (CRC overhead, degraded path, chaos campaign) ==")
+    rob = bench_robustness.robustness_json(quick=args.quick)
+    engine["robustness"] = rob
+    io_ = rob["integrity_overhead"]
+    print(
+        f"  integrity[{io_['series']}x{io_['points_per_series']}] "
+        f"decode={io_['decode_mb_s']:.1f}MB/s "
+        f"crc sweep={io_['crc_sweep_s']*1e3:.2f}ms "
+        f"({io_['crc_overhead_frac']*100:.1f}% of decode)"
+    )
+    dp = rob["degraded_path"]
+    print(
+        f"  degraded path: healthy={dp['healthy_ms']:.2f}ms "
+        f"corrupt-layer={dp['degraded_ms']:.2f}ms "
+        f"({dp['degraded_vs_healthy']:.2f}x)"
+    )
+    cc = rob["chaos_campaign"]
+    print(
+        f"  chaos[{cc['rounds']} faults] {cc['queries_checked']} answers checked "
+        f"({cc['queries_per_s']:.0f} q/s): {cc['ok']} ok, {cc['degraded']} degraded, "
+        f"{cc['typed_error']} typed errors, {cc['rejected_at_parse']} parse rejects, "
+        f"{cc['silent']} SILENT"
+    )
+    checks.update(bench_robustness.validate_claims(rob))
     # machine-readable perf trajectory for future PRs to diff against; only
     # full-size runs update the repo-root trajectory (quick numbers live in
     # artifacts/bench via save_result and must not clobber the baseline)

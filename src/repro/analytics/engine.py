@@ -111,6 +111,16 @@ class AggregateAnswer:
     frames_touched: int = 1
     frames_skipped: int = 0
     frames_refined: int = 0
+    # True when corruption capped refinement short of the requested eps:
+    # the interval is then wider than asked for but STILL contains the
+    # truth (``eps`` reports the guarantee actually achieved).
+    degraded: bool = False
+
+    @property
+    def achieved_eps(self) -> float:
+        """The per-point guarantee actually served (alias of ``eps``; the
+        name the degradation contract in docs/robustness.md uses)."""
+        return self.eps
 
     @property
     def width(self) -> float:
@@ -218,6 +228,18 @@ class SeriesAnalytics:
     def _resolve(self, eps: float) -> int:
         return resolve_or_finest(self.cs, eps)
 
+    def _resolve_capped(self, eps: float) -> tuple[int, bool]:
+        """Like ``_resolve`` but never descends into a quarantined layer:
+        returns (prefix index, degraded?) where degraded means corruption
+        forced a coarser prefix than ``eps`` asked for.  The interval math
+        widens by the achieved guarantee, so a capped answer stays valid —
+        just wider, and flagged."""
+        k = resolve_or_finest(self.cs, eps)
+        intact = self.dec.intact_depth()
+        if k > intact:
+            return intact, True
+        return k, False
+
     def _use_segments(self, eps: float | None) -> bool:
         return eps is None or (eps > 0.0 and eps >= self.cs.eps_b_practical)
 
@@ -254,7 +276,7 @@ class SeriesAnalytics:
                 op=op, lo=lo, hi=hi, m=m, eps=g, exact=False, source="segments",
             )
 
-        k = self._resolve(eps)
+        k, capped = self._resolve_capped(eps)
         paid0 = self.dec.layers_decoded
         sl = self.dec.prefix(k)[t0:t1]
         paid = self.dec.layers_decoded - paid0
@@ -288,6 +310,7 @@ class SeriesAnalytics:
             return AggregateAnswer(
                 op=op, lo=max(lo, 0.0), hi=hi, m=m, eps=g, exact=False,
                 source="dense", layers_paid=paid, frames_refined=1 if paid else 0,
+                degraded=capped,
             )
         est = {
             "min": float(sl.min()),
@@ -305,7 +328,7 @@ class SeriesAnalytics:
                               m * (e_pt + _fp_slack(self.scale)))
         return AggregateAnswer(
             op=op, lo=lo, hi=hi, m=m, eps=g, exact=exact, source="dense",
-            layers_paid=paid, frames_refined=1 if paid else 0,
+            layers_paid=paid, frames_refined=1 if paid else 0, degraded=capped,
         )
 
     # ------------------------------------------------------------------ #
@@ -339,7 +362,7 @@ class SeriesAnalytics:
                 op=op, lo=float(definite), hi=float(possible), m=m, eps=g,
                 exact=definite == possible, source="segments",
             )
-        k = self._resolve(eps)
+        k, capped = self._resolve_capped(eps)
         n_in, straddle, g, paid = refine_count(
             self.dec, t0, t1, op, value, self.scale, k
         )
@@ -350,6 +373,7 @@ class SeriesAnalytics:
         return AggregateAnswer(
             op=op, lo=float(lo), hi=float(hi), m=m, eps=g, exact=lo == hi,
             source="dense", layers_paid=paid, frames_refined=1 if paid else 0,
+            degraded=capped,
         )
 
     # ------------------------------------------------------------------ #

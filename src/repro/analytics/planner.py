@@ -35,6 +35,7 @@ from ..core.segment_algebra import (
     count_cmp,
     segment_table,
 )
+from ..core.errors import CorruptFrameError
 from ..core.serialize import frame_payload
 from ..core.shrink import cs_from_bytes
 from ..serving.batching import RangeQueryBatcher
@@ -78,6 +79,7 @@ class _Part:
     e_pt: float = 0.0  # per-point containment margin of this contribution
     dense: np.ndarray | None = None  # decoded slice when refined
     exact: bool = False
+    degraded: bool = False  # corruption capped this frame short of eps
 
 
 class AnalyticsEngine:
@@ -89,11 +91,18 @@ class AnalyticsEngine:
     pays each pyramid layer at most once.
     """
 
-    def __init__(self, source: bytes | RangeQueryBatcher, cache_frames: int = 32):
+    def __init__(
+        self,
+        source: bytes | RangeQueryBatcher,
+        cache_frames: int = 32,
+        degraded_ok: bool = False,
+    ):
         if isinstance(source, RangeQueryBatcher):
-            self.batcher = source
+            self.batcher = source  # inherits the batcher's degraded_ok
         else:
-            self.batcher = RangeQueryBatcher(source, cache_frames=cache_frames)
+            self.batcher = RangeQueryBatcher(
+                source, cache_frames=cache_frames, degraded_ok=degraded_ok
+            )
         self._sketches: dict[int, _FrameSketch] = {}
         self.stats = {
             "queries": 0,
@@ -102,6 +111,7 @@ class AnalyticsEngine:
             "frames_refined": 0,
             "segment_frames": 0,
             "layers_paid": 0,
+            "degraded": 0,
         }
 
     # ------------------------------------------------------------------ #
@@ -115,7 +125,20 @@ class AnalyticsEngine:
     def _sketch(self, meta) -> _FrameSketch:
         sk = self._sketches.get(meta.offset)
         if sk is None:
-            cs = cs_from_bytes(frame_payload(self.batcher.blob, meta))
+            try:
+                cs = cs_from_bytes(frame_payload(self.batcher.blob, meta))
+            except CorruptFrameError:
+                if not self.batcher.degraded_ok:
+                    raise
+                # a sketch only needs the base + eps_hat, which the SHRK
+                # header CRC protects independently of the frame CRC: a
+                # frame whose residual section is damaged still yields a
+                # valid (coarse) synopsis.  cs_from_bytes re-raises if the
+                # header/base CRC itself fails — no unprovable sketches.
+                cs = cs_from_bytes(
+                    frame_payload(self.batcher.blob, meta, verify_crc=False),
+                    strict=False,
+                )
             sk = _FrameSketch(
                 meta=meta,
                 table=segment_table(cs.base),
@@ -149,6 +172,13 @@ class AnalyticsEngine:
         dense slice; returns the entropy decodes actually paid."""
         dec = self.batcher.decoder(part.sk.meta)
         k = resolve_or_finest(dec.cs, eps)
+        intact = dec.intact_depth()
+        if k > intact:
+            # strict-mode decoders never carry corrupt layers (parse would
+            # have raised), so reaching here means degraded_ok: serve the
+            # finest intact prefix, flagged
+            k = intact
+            part.degraded = True
         paid0 = dec.layers_decoded
         part.dense = dec.prefix(k)[part.a : part.b]
         paid = dec.layers_decoded - paid0
@@ -217,6 +247,9 @@ class AnalyticsEngine:
             lo, hi = -hi, -lo
         g = max(p.e_pt for p in live)
         exact = all(p.exact for p in live) and lo == hi
+        degraded = any(p.degraded for p in live)
+        if degraded:
+            self.stats["degraded"] += 1
         return AggregateAnswer(
             op=op, lo=lo, hi=hi, m=sum(p.m for p in parts),
             eps=0.0 if exact else g, exact=exact,
@@ -225,6 +258,7 @@ class AnalyticsEngine:
             layers_paid=paid, frames_touched=len(parts),
             frames_skipped=skipped,
             frames_refined=sum(1 for p in live if p.dense is not None),
+            degraded=degraded,
         )
 
     def _moments(self, op: str, parts, eps: float | None, m: int) -> AggregateAnswer:
@@ -251,9 +285,13 @@ class AnalyticsEngine:
         refined = sum(1 for p in parts if p.dense is not None)
         src = "dense" if refined == len(parts) else (
             "segments" if refined == 0 else "mixed")
+        degraded = any(p.degraded for p in parts)
+        if degraded:
+            self.stats["degraded"] += 1
         common = dict(
             m=m, source=src, layers_paid=paid,
             frames_touched=len(parts), frames_refined=refined,
+            degraded=degraded,
         )
         g = max(p.e_pt for p in parts)
         if op == "sum":
@@ -322,6 +360,10 @@ class AnalyticsEngine:
                 continue
             dec = self.batcher.decoder(p.sk.meta)
             k = resolve_or_finest(dec.cs, eps)
+            intact = dec.intact_depth()
+            if k > intact:
+                k = intact
+                p.degraded = True
             n_in, straddle, g, paid = refine_count(
                 dec, p.a, p.b, op, value, p.sk.scale, k
             )
@@ -334,6 +376,9 @@ class AnalyticsEngine:
             hi_total += min(possible, n_in + straddle)
         self.stats["frames_skipped"] += skipped
         self.stats["frames_refined"] += refined
+        degraded = any(p.degraded for p in parts)
+        if degraded:
+            self.stats["degraded"] += 1
         return AggregateAnswer(
             op=op, lo=float(lo_total), hi=float(hi_total), m=sum(p.m for p in parts),
             eps=g_worst, exact=lo_total == hi_total,
@@ -341,6 +386,7 @@ class AnalyticsEngine:
                 "segments" if refined == 0 else "mixed"),
             layers_paid=paid_q, frames_touched=len(parts),
             frames_skipped=skipped, frames_refined=refined,
+            degraded=degraded,
         )
 
     # ------------------------------------------------------------------ #

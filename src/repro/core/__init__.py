@@ -2,6 +2,21 @@
 
 Public API re-exports.
 """
+from .errors import (  # noqa: F401
+    BackpressureError,
+    BatcherFinalizedError,
+    CircuitOpenError,
+    ConfigError,
+    CorruptFrameError,
+    DeadlineExceededError,
+    FormatError,
+    LayerCorruptError,
+    RangeCoverageError,
+    ShrinkError,
+    TransientError,
+    TruncatedArchiveError,
+    UnknownSeriesError,
+)
 from .types import (  # noqa: F401
     Base,
     CompressedSeries,

@@ -1,0 +1,154 @@
+"""Typed error taxonomy for the SHRINK storage and serving stack.
+
+Every failure the codec, the containers, or the serving layer can raise
+derives from :class:`ShrinkError`, which carries *machine-readable
+context* — series id, frame index, byte offset, pyramid layer — so a
+caller (or a fault-tolerant gateway) can scope its reaction to exactly
+the corrupt unit instead of failing the whole query.  The taxonomy:
+
+``ShrinkError`` (subclasses ``ValueError``)
+├── ``FormatError``            foreign blob / bad magic / unsupported version
+├── ``TruncatedArchiveError``  input cut short at any boundary
+├── ``CorruptFrameError``      CRC mismatch or structural corruption
+│   └── ``LayerCorruptError``  scoped to one pyramid layer (``layer=``)
+├── ``UnknownSeriesError``     series id not present in a container
+├── ``RangeCoverageError``     query range empty / not covered / gapped
+├── ``ConfigError``            invalid construction parameters
+├── ``BatcherFinalizedError``  use-after-finalize on an ingest batcher
+└── serving/operational
+    ├── ``TransientError``     retryable (injected flake, timeout, I/O)
+    ├── ``DeadlineExceededError``  per-request deadline blew
+    ├── ``BackpressureError``  bounded queue full, request shed
+    └── ``CircuitOpenError``   per-frame breaker open, decode skipped
+
+Deliberately ``ValueError`` at the root: the pre-taxonomy API contract
+was "corrupt/foreign/truncated input raises ``ValueError``", and every
+existing caller and test that catches ``ValueError`` keeps working;
+callers that care about *which* failure catch the subclass.
+
+Degradation semantics built on this taxonomy (what bound survives which
+fault) are specified in ``docs/robustness.md``.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "ShrinkError",
+    "FormatError",
+    "TruncatedArchiveError",
+    "CorruptFrameError",
+    "LayerCorruptError",
+    "UnknownSeriesError",
+    "RangeCoverageError",
+    "ConfigError",
+    "BatcherFinalizedError",
+    "TransientError",
+    "DeadlineExceededError",
+    "BackpressureError",
+    "CircuitOpenError",
+]
+
+
+class ShrinkError(ValueError):
+    """Base of the taxonomy.  ``message`` is the human diagnosis; the
+    keyword context names the corrupt/offending unit so handlers can
+    quarantine precisely (all fields optional, ``None`` = not known at
+    the raise site)."""
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        series_id: int | None = None,
+        frame_index: int | None = None,
+        offset: int | None = None,
+        layer: int | None = None,
+    ):
+        self.series_id = series_id
+        self.frame_index = frame_index
+        self.offset = offset
+        self.layer = layer
+        ctx = []
+        if series_id is not None:
+            ctx.append(f"series={series_id}")
+        if frame_index is not None:
+            ctx.append(f"frame={frame_index}")
+        if layer is not None:
+            ctx.append(f"layer={layer}")
+        if offset is not None:
+            ctx.append(f"offset={offset}")
+        super().__init__(message + (f" [{', '.join(ctx)}]" if ctx else ""))
+        self.message = message
+
+    def context(self) -> dict:
+        """The machine-readable context as a plain dict (telemetry)."""
+        return {
+            "type": type(self).__name__,
+            "series_id": self.series_id,
+            "frame_index": self.frame_index,
+            "offset": self.offset,
+            "layer": self.layer,
+        }
+
+
+class FormatError(ShrinkError):
+    """Not one of ours: bad magic, unsupported version, or a field that
+    no writer could have produced (foreign or misidentified input)."""
+
+
+class TruncatedArchiveError(ShrinkError):
+    """Input ends before a declared length/boundary — the archive (or a
+    section of it) was cut short."""
+
+
+class CorruptFrameError(ShrinkError):
+    """Stored CRC does not match the bytes, or the structure contradicts
+    itself: the unit (frame, container section, blob) cannot be trusted."""
+
+
+class LayerCorruptError(CorruptFrameError):
+    """Corruption scoped to ONE residual-pyramid layer (``layer=`` index).
+    Layers above it remain decodable — degradation serves the finest
+    intact prefix instead of failing the frame."""
+
+
+class UnknownSeriesError(ShrinkError):
+    """The container has no frames for the requested series id."""
+
+
+class RangeCoverageError(ShrinkError):
+    """The requested sample range is empty, outside the frames, or spans
+    a gap between frames."""
+
+
+class ConfigError(ShrinkError):
+    """Invalid construction-time parameters (bad eps ladder, nonpositive
+    sizes, missing ``decimals`` for a lossless tier, ...)."""
+
+
+class BatcherFinalizedError(ShrinkError):
+    """An ingest batcher was used after ``finalize()``."""
+
+
+# --------------------------------------------------------------------- #
+# serving / operational
+# --------------------------------------------------------------------- #
+class TransientError(ShrinkError):
+    """A retryable failure (flaky I/O, injected fault, timeout on a
+    backend call).  The gateway's retry policy targets exactly this
+    class — corruption errors are permanent and are never retried."""
+
+
+class DeadlineExceededError(ShrinkError):
+    """The request's deadline elapsed before a full-resolution answer
+    could be produced."""
+
+
+class BackpressureError(ShrinkError):
+    """The bounded admission queue is full and the request could not be
+    shed to degraded (coarse-tier) service."""
+
+
+class CircuitOpenError(ShrinkError):
+    """The per-frame circuit breaker is open: this frame failed
+    repeatedly and decode attempts are suppressed until the recovery
+    window elapses."""

@@ -18,6 +18,15 @@ import zlib
 import numpy as np
 
 from .base import origin_index
+from .errors import (
+    BatcherFinalizedError,
+    ConfigError,
+    CorruptFrameError,
+    FormatError,
+    LayerCorruptError,
+    ShrinkError,
+    TruncatedArchiveError,
+)
 from .phases import eps_hat_for_level
 from .types import (
     Base,
@@ -45,7 +54,7 @@ __all__ = [
 _BASE_MAGIC = b"SHRB"
 _RES_MAGIC = b"SHRR"
 _VERSION = 1
-_RES_VERSION = 2
+_RES_VERSION = 3
 _MODE_CODE = {"midpoint": 0, "exact": 1, "identity": 2}
 _MODE_NAME = {v: k for k, v in _MODE_CODE.items()}
 _RAW_SLOPE = 255
@@ -58,7 +67,7 @@ _TAIL_LEN = 8 + 4 + 4  # u64 footer offset + u32 footer crc + end magic
 
 def write_varint(buf: bytearray, x: int) -> None:
     if x < 0:
-        raise ValueError("varint must be non-negative")
+        raise FormatError("varint must be non-negative")
     while True:
         b = x & 0x7F
         x >>= 7
@@ -121,11 +130,11 @@ def encode_base(base: Base) -> bytes:
 
 def decode_base(data: bytes) -> Base:
     if data[:4] != _BASE_MAGIC:
-        raise ValueError("bad base magic")
+        raise FormatError("bad base magic")
     try:
         return _decode_base_body(data)
     except (IndexError, struct.error) as e:
-        raise ValueError(f"truncated or corrupt base blob: {e}") from e
+        raise TruncatedArchiveError(f"truncated or corrupt base blob: {e}") from e
 
 
 def _decode_base_body(data: bytes) -> Base:
@@ -186,8 +195,9 @@ def _decode_base_body(data: bytes) -> Base:
 
 
 # --------------------------------------------------------------------- #
-# SHRR v2: the residual pyramid blob (per-layer directory + payload CRC;
-# normative byte layout in docs/wire-format.md)
+# SHRR v3: the residual pyramid blob (per-layer directory, per-layer
+# payload CRCs + one directory CRC; normative byte layout in
+# docs/wire-format.md, corruption-scoping semantics in docs/robustness.md)
 # --------------------------------------------------------------------- #
 def pyramid_layers(
     tiers: list[float],
@@ -215,98 +225,140 @@ def pyramid_layers(
 
 
 def encode_pyramid(pyramid: ResidualPyramid) -> bytes:
-    """``SHRR`` v2 blob: version, per-layer directory (eps, mode, quantizer
-    params, payload length), CRC32 of directory + payload sections, then
-    the concatenated tagged entropy payloads in layer order."""
+    """``SHRR`` v3 blob: version, per-layer directory (eps, mode, quantizer
+    params, payload length, **payload CRC32**), a CRC32 of the directory
+    section, then the concatenated tagged entropy payloads in layer order.
+
+    The v3 CRC granularity is what makes corruption-scoped degradation
+    possible: a flipped byte in layer k's payload fails ONLY layer k's
+    CRC, so a reader can quarantine that layer and still serve the intact
+    prefix 0..k-1 (the v2 single whole-blob CRC could only say
+    "something, somewhere, is wrong")."""
     directory = bytearray()
     body = bytearray()
     for layer in pyramid.layers:
         payload = layer.payload if layer.payload is not None else b""
         if layer.mode == "identity" and payload:
-            raise ValueError("identity layer cannot carry a payload")
+            raise FormatError("identity layer cannot carry a payload")
         directory += struct.pack("<d", layer.eps)
         directory.append(_MODE_CODE[layer.mode])
         directory += struct.pack("<dd", layer.step, layer.r_lo)
         write_varint(directory, len(payload))
+        directory += struct.pack("<I", zlib.crc32(payload) & 0xFFFFFFFF)
         body += payload
     buf = bytearray()
     buf += _RES_MAGIC
     buf.append(_RES_VERSION)
     write_varint(buf, len(pyramid.layers))
     buf += directory
-    # one CRC over directory + payloads: a one-shot SHRK blob has no outer
-    # CRC, and a flipped f64 in the directory corrupts decode as surely as
-    # a flipped payload byte
-    buf += struct.pack(
-        "<I", zlib.crc32(bytes(directory) + bytes(body)) & 0xFFFFFFFF
-    )
+    # the directory gets its own CRC (a flipped eps/step f64 corrupts
+    # decode as surely as a payload byte, and the per-layer CRCs live in
+    # the directory so they must themselves be trustworthy)
+    buf += struct.pack("<I", zlib.crc32(bytes(directory)) & 0xFFFFFFFF)
     buf += body
     return bytes(buf)
 
 
-def decode_pyramid(data: bytes) -> ResidualPyramid:
-    """Parse a ``SHRR`` v2 blob.  Raises ``ValueError`` (never a raw
-    ``struct.error``/``IndexError``) on foreign, truncated, or corrupt
-    input, including a payload-section CRC mismatch."""
+def decode_pyramid(data: bytes, strict: bool = True) -> ResidualPyramid:
+    """Parse a ``SHRR`` v3 blob.  Raises a :class:`ShrinkError` subclass
+    (never a raw ``struct.error``/``IndexError``) on foreign, truncated,
+    or corrupt input.
+
+    CRC semantics (normative, docs/wire-format.md): the directory CRC is
+    always verified — a blob whose directory cannot be trusted is
+    rejected outright (:class:`CorruptFrameError`).  Per-layer payload
+    CRCs are then verified eagerly; with ``strict=True`` (the default)
+    the first mismatch raises :class:`LayerCorruptError` carrying the
+    layer index.  With ``strict=False`` corrupt layers are returned
+    **quarantined** (``layer.corrupt = True``, payload withheld) so a
+    degraded reader can still decode the finest intact prefix."""
     data = bytes(data)
     if len(data) < 4 or data[:4] != _RES_MAGIC:
-        raise ValueError("bad residual pyramid magic: not a SHRR blob")
+        raise FormatError("bad residual pyramid magic: not a SHRR blob")
     if len(data) < 5:
-        raise ValueError("truncated SHRR blob: missing version")
+        raise TruncatedArchiveError("truncated SHRR blob: missing version")
     if data[4] != _RES_VERSION:
-        raise ValueError(
+        raise FormatError(
             f"unsupported SHRR version {data[4]} (this build reads v{_RES_VERSION} "
-            "refinement pyramids; v1 independent-stream archives must be re-encoded)"
+            "refinement pyramids; older archives must be re-encoded)"
         )
     try:
         pos = 5
         n_layers, pos = read_varint(data, pos)
         dir_start = pos
-        dirent: list[tuple[float, int, float, float, int]] = []
+        dirent: list[tuple[float, int, float, float, int, int]] = []
         for _ in range(n_layers):
             if pos + 25 > len(data):
-                raise ValueError("truncated SHRR blob: layer directory cut short")
+                raise TruncatedArchiveError(
+                    "truncated SHRR blob: layer directory cut short"
+                )
             (eps,) = struct.unpack_from("<d", data, pos)
             mode_code = data[pos + 8]
             step, r_lo = struct.unpack_from("<dd", data, pos + 9)
             pos += 25
             ln, pos = read_varint(data, pos)
-            dirent.append((eps, mode_code, step, r_lo, ln))
+            if pos + 4 > len(data):
+                raise TruncatedArchiveError(
+                    "truncated SHRR blob: layer payload CRC cut short"
+                )
+            (pcrc,) = struct.unpack_from("<I", data, pos)
+            pos += 4
+            dirent.append((eps, mode_code, step, r_lo, ln, pcrc))
+    except ShrinkError:
+        raise
     except (IndexError, struct.error) as e:
-        raise ValueError(f"truncated or corrupt SHRR blob: {e}") from e
+        raise TruncatedArchiveError(f"truncated or corrupt SHRR blob: {e}") from e
     directory = data[dir_start:pos]
     if pos + 4 > len(data):
-        raise ValueError("truncated SHRR blob: missing CRC")
+        raise TruncatedArchiveError("truncated SHRR blob: missing directory CRC")
     (crc,) = struct.unpack_from("<I", data, pos)
     pos += 4
+    if zlib.crc32(directory) & 0xFFFFFFFF != crc:
+        raise CorruptFrameError("corrupt SHRR blob: directory CRC mismatch")
     body = data[pos:]
-    if len(body) != sum(ln for *_, ln in dirent):
-        raise ValueError("corrupt SHRR blob: payload section length mismatch")
-    if zlib.crc32(directory + body) & 0xFFFFFFFF != crc:
-        raise ValueError("corrupt SHRR blob: CRC mismatch")
+    want = sum(ln for *_, ln, _pcrc in dirent)
+    if len(body) < want:
+        raise TruncatedArchiveError("truncated SHRR blob: payload section cut short")
+    if len(body) != want:
+        raise CorruptFrameError("corrupt SHRR blob: payload section length mismatch")
     # the tier-ladder invariant resolve() depends on is normative: eps
     # strictly decreasing coarse -> fine (0.0, the lossless tier, last)
     eps_seq = [e for e, *_ in dirent]
     if any(e < 0.0 for e in eps_seq):
-        raise ValueError("corrupt SHRR blob: negative tier eps")
+        raise CorruptFrameError("corrupt SHRR blob: negative tier eps")
     if any(b >= a for a, b in zip(eps_seq, eps_seq[1:])):
-        raise ValueError(
+        raise CorruptFrameError(
             "corrupt SHRR blob: tiers not strictly decreasing coarse -> fine"
         )
     layers: list[PyramidLayer] = []
     off = 0
-    for eps, mode_code, step, r_lo, ln in dirent:
+    for k, (eps, mode_code, step, r_lo, ln, pcrc) in enumerate(dirent):
         if mode_code not in _MODE_NAME:
-            raise ValueError(f"corrupt SHRR blob: unknown layer mode {mode_code}")
+            raise CorruptFrameError(
+                f"corrupt SHRR blob: unknown layer mode {mode_code}", layer=k
+            )
         mode = _MODE_NAME[mode_code]
         if mode == "identity" and ln:
-            raise ValueError("corrupt SHRR blob: identity layer with payload")
+            raise CorruptFrameError(
+                "corrupt SHRR blob: identity layer with payload", layer=k
+            )
         if mode != "identity" and not ln:
-            raise ValueError(f"corrupt SHRR blob: {mode} layer without payload")
+            raise CorruptFrameError(
+                f"corrupt SHRR blob: {mode} layer without payload", layer=k
+            )
         payload = body[off : off + ln] if ln else None
         off += ln
+        corrupt = ln > 0 and zlib.crc32(payload) & 0xFFFFFFFF != pcrc
+        if corrupt and strict:
+            raise LayerCorruptError(
+                f"corrupt SHRR blob: layer payload CRC mismatch (tier eps={eps:g})",
+                layer=k,
+            )
         layers.append(
-            PyramidLayer(eps=eps, mode=mode, step=step, r_lo=r_lo, payload=payload)
+            PyramidLayer(
+                eps=eps, mode=mode, step=step, r_lo=r_lo,
+                payload=None if corrupt else payload, corrupt=corrupt,
+            )
         )
     return ResidualPyramid(layers=layers)
 
@@ -332,9 +384,11 @@ class FramedWriter:
         self, series_id: int, t_lo: int, t_hi: int, kb_epoch: int, payload: bytes
     ) -> FrameMeta:
         if self._finished:
-            raise ValueError("container already finished")
+            raise BatcherFinalizedError("container already finished")
         if t_hi <= t_lo:
-            raise ValueError(f"empty frame range [{t_lo}, {t_hi})")
+            raise ConfigError(
+                f"empty frame range [{t_lo}, {t_hi})", series_id=int(series_id)
+            )
         meta = FrameMeta(
             series_id=int(series_id),
             t_lo=int(t_lo),
@@ -350,7 +404,7 @@ class FramedWriter:
 
     def finish(self, kb_bytes: bytes = b"") -> bytes:
         if self._finished:
-            raise ValueError("container already finished")
+            raise BatcherFinalizedError("container already finished")
         self._finished = True
         footer = bytearray()
         write_varint(footer, len(self._frames))
@@ -373,29 +427,37 @@ class FramedWriter:
 
 def parse_framed_container(blob: bytes) -> tuple[list[FrameMeta], bytes]:
     """Validate head/tail/footer of a ``SHRKS`` container and return
-    (frame directory, kb_bytes).  Raises ``ValueError`` on foreign,
-    truncated, or corrupt input (including a footer CRC mismatch).
-    Frame *payload* CRCs are NOT checked here — see ``frame_payload``."""
+    (frame directory, kb_bytes).  Raises a :class:`ShrinkError` subclass
+    on foreign, truncated, or corrupt input (including a footer CRC
+    mismatch).  Frame *payload* CRCs are NOT checked here — see
+    ``frame_payload``."""
     blob = bytes(blob)
     if len(blob) < 6 or blob[:5] != _STREAM_MAGIC:
-        raise ValueError("bad container magic: not a SHRKS blob")
+        raise FormatError("bad container magic: not a SHRKS blob")
     if blob[5] != _STREAM_VERSION:
-        raise ValueError(f"unsupported SHRKS version {blob[5]}")
+        raise FormatError(f"unsupported SHRKS version {blob[5]}")
     if len(blob) < 6 + _TAIL_LEN:
-        raise ValueError("truncated SHRKS container: missing tail")
+        raise TruncatedArchiveError("truncated SHRKS container: missing tail")
     if blob[-4:] != _STREAM_END_MAGIC:
-        raise ValueError("truncated SHRKS container: bad end magic")
+        raise TruncatedArchiveError(
+            "truncated SHRKS container: bad end magic", offset=len(blob) - 4
+        )
     footer_offset, footer_crc = struct.unpack_from("<QI", blob, len(blob) - _TAIL_LEN)
     if footer_offset < 6 or footer_offset > len(blob) - _TAIL_LEN:
-        raise ValueError("corrupt SHRKS container: footer offset out of range")
+        raise CorruptFrameError(
+            "corrupt SHRKS container: footer offset out of range",
+            offset=footer_offset,
+        )
     footer = blob[footer_offset : len(blob) - _TAIL_LEN]
     if zlib.crc32(footer) & 0xFFFFFFFF != footer_crc:
-        raise ValueError("corrupt SHRKS container: footer CRC mismatch")
+        raise CorruptFrameError(
+            "corrupt SHRKS container: footer CRC mismatch", offset=footer_offset
+        )
     try:
         pos = 0
         n_frames, pos = read_varint(footer, pos)
         metas: list[FrameMeta] = []
-        for _ in range(n_frames):
+        for i in range(n_frames):
             sid, pos = read_varint(footer, pos)
             t_lo, pos = read_varint(footer, pos)
             n, pos = read_varint(footer, pos)
@@ -405,7 +467,10 @@ def parse_framed_container(blob: bytes) -> tuple[list[FrameMeta], bytes]:
             (crc,) = struct.unpack_from("<I", footer, pos)
             pos += 4
             if off + ln > footer_offset:
-                raise ValueError("corrupt SHRKS container: frame extends into footer")
+                raise CorruptFrameError(
+                    "corrupt SHRKS container: frame extends into footer",
+                    series_id=sid, frame_index=i, offset=off,
+                )
             metas.append(
                 FrameMeta(
                     series_id=sid, t_lo=t_lo, t_hi=t_lo + n, kb_epoch=epoch,
@@ -414,10 +479,16 @@ def parse_framed_container(blob: bytes) -> tuple[list[FrameMeta], bytes]:
             )
         kb_len, pos = read_varint(footer, pos)
         if pos + kb_len != len(footer):
-            raise ValueError("corrupt SHRKS container: knowledge-base section length mismatch")
+            raise CorruptFrameError(
+                "corrupt SHRKS container: knowledge-base section length mismatch"
+            )
         kb_bytes = bytes(footer[pos : pos + kb_len])
+    except ShrinkError:
+        raise
     except (IndexError, struct.error) as e:
-        raise ValueError(f"corrupt SHRKS container: footer parse failed: {e}") from e
+        raise CorruptFrameError(
+            f"corrupt SHRKS container: footer parse failed: {e}"
+        ) from e
     return metas, kb_bytes
 
 
@@ -426,10 +497,14 @@ def frame_payload(blob: bytes, meta: FrameMeta, verify_crc: bool = True) -> byte
     directory CRC unless ``verify_crc=False``."""
     payload = bytes(blob[meta.offset : meta.offset + meta.length])
     if len(payload) != meta.length:
-        raise ValueError("truncated SHRKS container: frame payload cut short")
+        raise TruncatedArchiveError(
+            "truncated SHRKS container: frame payload cut short",
+            series_id=meta.series_id, offset=meta.offset,
+        )
     if verify_crc and zlib.crc32(payload) & 0xFFFFFFFF != meta.crc32:
-        raise ValueError(
+        raise CorruptFrameError(
             f"frame payload CRC mismatch (series {meta.series_id}, "
-            f"samples [{meta.t_lo}, {meta.t_hi}))"
+            f"samples [{meta.t_lo}, {meta.t_hi}))",
+            series_id=meta.series_id, offset=meta.offset,
         )
     return payload

@@ -34,11 +34,19 @@ from __future__ import annotations
 import math
 import struct
 import sys
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
 
 from . import entropy
+from .errors import (
+    CorruptFrameError,
+    FormatError,
+    LayerCorruptError,
+    ShrinkError,
+    TruncatedArchiveError,
+)
 from .base import (
     base_predictions,
     base_predictions_batch,
@@ -77,6 +85,7 @@ __all__ = [
 ]
 
 _CONTAINER_MAGIC = b"SHRK"
+_CONTAINER_VERSION = 2
 
 # The paper's Table II datasets store (timestamp, value) pairs; we account the
 # original size as 16 bytes/row (two float64) — same accounting for every
@@ -409,6 +418,16 @@ class ProgressiveDecoder:
         """Deepest decoded layer index (-1 = base predictions only)."""
         return self._depth
 
+    def intact_depth(self) -> int:
+        """Deepest layer index reachable without crossing a quarantined
+        (``corrupt``) layer (-1 = base only; every layer below the first
+        corrupt one is unreachable because layer k refines the
+        reconstruction error OF the prefix through k-1)."""
+        for k, layer in enumerate(self._layers):
+            if layer.corrupt:
+                return k - 1
+        return len(self._layers) - 1
+
     def guarantee(self, k: int | None = None) -> float:
         """Error bound of the prefix through layer ``k`` (default: the
         deepest decoded prefix)."""
@@ -441,16 +460,21 @@ class ProgressiveDecoder:
             recon = self._recons[self._depth + 1]
             for d in range(self._depth + 1, k + 1):
                 layer = self._layers[d]
+                if layer.corrupt:
+                    raise LayerCorruptError(
+                        "cannot decode past quarantined pyramid layer "
+                        f"(tier eps={layer.eps:g}); finest intact prefix is "
+                        f"layer {d - 1}",
+                        layer=d,
+                    )
                 if layer.mode == "identity":
                     out = recon  # tier exists, carries no bytes
                 elif layer.mode == "midpoint":
-                    q = entropy.decode_ints(layer.payload)
-                    self.layers_decoded += 1
+                    q = self._decode_payload(layer, d, len(recon))
                     out = recon + (layer.r_lo + (q.astype(np.float64) + 0.5) * layer.step)
                     recon = out
                 elif layer.mode == "exact":
-                    q = entropy.decode_ints(layer.payload)
-                    self.layers_decoded += 1
+                    q = self._decode_payload(layer, d, len(recon))
                     decimals = int(round(-math.log10(layer.step)))
                     scale = 10.0**decimals
                     rec_int = np.round(recon * scale).astype(np.int64)
@@ -460,6 +484,28 @@ class ProgressiveDecoder:
                 self._recons[d + 1] = out
             self._depth = k
         return self._recons[k + 1]
+
+    def _decode_payload(self, layer, d: int, n: int) -> np.ndarray:
+        """Entropy-decode one layer's payload defensively: a payload that
+        slipped past the CRC (or was handed in without one) must surface
+        as a typed :class:`LayerCorruptError`, never a raw
+        ``KeyError``/``IndexError`` from the entropy coder or a
+        wrong-length array that would silently mis-add."""
+        try:
+            q = entropy.decode_ints(layer.payload)
+        except ShrinkError:
+            raise
+        except Exception as e:
+            raise LayerCorruptError(
+                f"pyramid layer payload failed entropy decode: {e}", layer=d
+            ) from e
+        if len(q) != n:
+            raise LayerCorruptError(
+                f"pyramid layer decoded to {len(q)} residuals for {n} samples",
+                layer=d,
+            )
+        self.layers_decoded += 1
+        return q
 
     def at(self, eps: float) -> np.ndarray:
         """Reconstruction with guarantee <= ``eps`` via the cheapest
@@ -509,43 +555,74 @@ def encode_with_base(
 
 
 def cs_to_bytes(cs: CompressedSeries) -> bytes:
-    """``SHRK`` container: base + the ``SHRR`` v2 residual pyramid blob
-    (normative byte layout in docs/wire-format.md)."""
+    """``SHRK`` v2 container: version byte, header (eps_hat, base length),
+    a CRC32 over header-fields + base blob, the ``SHRB`` base, then the
+    ``SHRR`` v3 residual pyramid blob (normative byte layout in
+    docs/wire-format.md).
+
+    The header CRC covers ``eps_hat || base_len || base_bytes`` — without
+    it a flipped bit in the eps_hat f64 would silently change the
+    *reported guarantee* of every answer served from this blob, which is
+    exactly the "silent wrong data" failure degradation must rule out.
+    A trusted header + base is also what makes base-only fallback sound
+    when the pyramid section is damaged."""
     pyr = encode_pyramid(cs.pyramid)
+    header = struct.pack("<dI", cs.eps_b_practical, len(cs.base_bytes))
     buf = bytearray()
     buf += _CONTAINER_MAGIC
-    buf += struct.pack("<dI", cs.eps_b_practical, len(cs.base_bytes))
+    buf.append(_CONTAINER_VERSION)
+    buf += header
+    buf += struct.pack("<I", zlib.crc32(header + cs.base_bytes) & 0xFFFFFFFF)
     buf += cs.base_bytes
     buf += struct.pack("<I", len(pyr))
     buf += pyr
     return bytes(buf)
 
 
-def cs_from_bytes(data: bytes) -> CompressedSeries:
-    """Parse a ``SHRK`` container.  Raises ``ValueError`` (never a raw
-    ``struct.error``/``IndexError``) on foreign, truncated, or trailing-
-    garbage input — every length is validated before it is read."""
+def cs_from_bytes(data: bytes, strict: bool = True) -> CompressedSeries:
+    """Parse a ``SHRK`` v2 container.  Raises a :class:`ShrinkError`
+    subclass (never a raw ``struct.error``/``IndexError``) on foreign,
+    truncated, or trailing-garbage input — every length is validated
+    before it is read, and the header/base CRC is always verified.
+
+    ``strict`` is forwarded to :func:`decode_pyramid`: with
+    ``strict=False`` a corrupt pyramid *layer* comes back quarantined
+    (``layer.corrupt``) instead of raising, so a degraded reader can still
+    serve the intact layer prefix under the (CRC-trusted) base and
+    eps_hat."""
     data = bytes(data)
     if len(data) < 4 or data[:4] != _CONTAINER_MAGIC:
-        raise ValueError("bad container magic: not a SHRK blob")
-    if len(data) < 16:
-        raise ValueError("truncated SHRK container: incomplete header")
-    eps_hat, base_len = struct.unpack_from("<dI", data, 4)
-    pos = 16
+        raise FormatError("bad container magic: not a SHRK blob")
+    if len(data) < 5:
+        raise TruncatedArchiveError("truncated SHRK container: missing version")
+    if data[4] != _CONTAINER_VERSION:
+        raise FormatError(
+            f"unsupported SHRK version {data[4]} (this build reads "
+            f"v{_CONTAINER_VERSION} containers)"
+        )
+    if len(data) < 21:
+        raise TruncatedArchiveError("truncated SHRK container: incomplete header")
+    eps_hat, base_len = struct.unpack_from("<dI", data, 5)
+    (hdr_crc,) = struct.unpack_from("<I", data, 17)
+    pos = 21
     if pos + base_len > len(data):
-        raise ValueError("truncated SHRK container: base blob cut short")
+        raise TruncatedArchiveError("truncated SHRK container: base blob cut short")
     base_bytes = data[pos : pos + base_len]
     pos += base_len
+    if zlib.crc32(data[5:17] + base_bytes) & 0xFFFFFFFF != hdr_crc:
+        raise CorruptFrameError("corrupt SHRK container: header/base CRC mismatch")
     if pos + 4 > len(data):
-        raise ValueError("truncated SHRK container: missing pyramid length")
+        raise TruncatedArchiveError("truncated SHRK container: missing pyramid length")
     (pyr_len,) = struct.unpack_from("<I", data, pos)
     pos += 4
     if pos + pyr_len > len(data):
-        raise ValueError("truncated SHRK container: residual pyramid cut short")
-    pyramid = decode_pyramid(data[pos : pos + pyr_len])
+        raise TruncatedArchiveError(
+            "truncated SHRK container: residual pyramid cut short"
+        )
+    pyramid = decode_pyramid(data[pos : pos + pyr_len], strict=strict)
     pos += pyr_len
     if pos != len(data):
-        raise ValueError("corrupt SHRK container: trailing bytes after pyramid")
+        raise CorruptFrameError("corrupt SHRK container: trailing bytes after pyramid")
     return CompressedSeries(
         base=decode_base(base_bytes),
         base_bytes=bytes(base_bytes),

@@ -56,6 +56,13 @@ import struct
 import numpy as np
 
 from .base import construct_base, origin_index
+from .errors import (
+    ConfigError,
+    FormatError,
+    RangeCoverageError,
+    TruncatedArchiveError,
+    UnknownSeriesError,
+)
 from .phases import default_interval_length, divide, eps_hat_for_level
 from .semantics import extract_semantics, global_range
 from .serialize import (
@@ -159,7 +166,7 @@ class KnowledgeBase:
         ``remap`` with ``remap[other_id] == self_id``; refcounts sum."""
         for attr in ("eps_b", "lam", "beta_levels"):
             if getattr(self.config, attr) != getattr(other.config, attr):
-                raise ValueError(
+                raise ConfigError(
                     f"cannot merge knowledge bases with different configs ({attr})"
                 )
         remap = []
@@ -213,9 +220,9 @@ class KnowledgeBase:
     def from_bytes(cls, data: bytes) -> "KnowledgeBase":
         data = bytes(data)
         if len(data) < 5 or data[:4] != _KB_MAGIC:
-            raise ValueError("bad knowledge-base magic")
+            raise FormatError("bad knowledge-base magic")
         if data[4] != _KB_VERSION:
-            raise ValueError(f"unsupported knowledge-base version {data[4]}")
+            raise FormatError(f"unsupported knowledge-base version {data[4]}")
         try:
             eps_b, lam, beta_levels = struct.unpack_from("<ddB", data, 5)
             pos = 5 + 17
@@ -240,7 +247,9 @@ class KnowledgeBase:
                 eid = kb._find_or_add(level, oidx, slope, int(digits))
                 kb.entries[eid].refs += refs
         except (IndexError, struct.error) as e:
-            raise ValueError(f"truncated or corrupt knowledge-base blob: {e}") from e
+            raise TruncatedArchiveError(
+                f"truncated or corrupt knowledge-base blob: {e}"
+            ) from e
         return kb
 
 
@@ -331,9 +340,9 @@ class ShrinkStreamCodec:
         kb: KnowledgeBase | None = None,
     ):
         if 0.0 in eps_targets and decimals is None:
-            raise ValueError("lossless eps target 0.0 requires `decimals`")
+            raise ConfigError("lossless eps target 0.0 requires `decimals`")
         if frame_len is not None and frame_len < 1:
-            raise ValueError(f"frame_len must be >= 1, got {frame_len}")
+            raise ConfigError(f"frame_len must be >= 1, got {frame_len}")
         self.config = config
         self.eps_targets = list(eps_targets)
         self.decimals = decimals
@@ -518,7 +527,9 @@ def _series_frames(blob: bytes, series_id: int) -> list[FrameMeta]:
         (m for m in metas if m.series_id == series_id), key=lambda m: m.t_lo
     )
     if not frames:
-        raise ValueError(f"no frames for series {series_id} in container")
+        raise UnknownSeriesError(
+            f"no frames for series {series_id} in container", series_id=series_id
+        )
     return frames
 
 
@@ -535,18 +546,23 @@ def _decode_range_frames(
     blob: bytes, frames: list[FrameMeta], series_id: int, t0: int, t1: int, eps: float
 ) -> np.ndarray:
     if t1 <= t0:
-        raise ValueError(f"empty range [{t0}, {t1})")
+        raise RangeCoverageError(f"empty range [{t0}, {t1})", series_id=series_id)
     touched = [m for m in frames if m.t_lo < t1 and m.t_hi > t0]
     if not touched or touched[0].t_lo > t0 or touched[-1].t_hi < t1:
-        raise ValueError(
+        raise RangeCoverageError(
             f"range [{t0}, {t1}) not covered by series {series_id} frames "
-            f"[{frames[0].t_lo}, {frames[-1].t_hi})"
+            f"[{frames[0].t_lo}, {frames[-1].t_hi})",
+            series_id=series_id,
         )
     out = np.empty(t1 - t0, dtype=np.float64)
     expected = t0
-    for m in touched:
+    for i, m in enumerate(touched):
         if m.t_lo > expected:
-            raise ValueError(f"gap in series {series_id} frames at sample {expected}")
+            raise RangeCoverageError(
+                f"gap in series {series_id} frames at sample {expected} "
+                f"(frame covering [{m.t_lo}, {m.t_hi}) follows)",
+                series_id=series_id, frame_index=i,
+            )
         cs = cs_from_bytes(frame_payload(blob, m))
         vals = decompress_at(cs, eps)
         lo, hi = max(t0, m.t_lo), min(t1, m.t_hi)

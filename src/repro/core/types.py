@@ -19,6 +19,8 @@ from typing import Optional
 
 import numpy as np
 
+from .errors import ConfigError
+
 # Multiplier grid for the adaptive threshold (Eq. 4).  beta is quantized to
 # ``beta_levels`` discrete levels so that cone origins land on a small family
 # of grids and can collide/merge (Section III-C of the paper relies on shared
@@ -176,6 +178,11 @@ class PyramidLayer:
                      scale 1/step = 10^decimals (eps == 0.0).
     mode 'identity': the previous prefix already meets this tier's eps —
                      the tier exists in the directory but carries no bytes.
+
+    ``corrupt`` marks a layer whose stored payload failed its CRC during a
+    tolerant (``strict=False``) decode: the payload is withheld and every
+    finer tier below it is unreachable, but the intact prefix above is
+    still fully served (see ``docs/robustness.md``).
     """
 
     eps: float
@@ -183,6 +190,7 @@ class PyramidLayer:
     step: float  # 0.0 for identity layers
     r_lo: float  # midpoint bin origin; 0.0 for exact/identity layers
     payload: Optional[bytes]  # tagged entropy blob; None iff mode == 'identity'
+    corrupt: bool = False  # payload failed its CRC in a tolerant decode
 
     def nbytes(self) -> int:
         return len(self.payload) if self.payload is not None else 0
@@ -204,16 +212,16 @@ class ResidualPyramid:
     def resolve(self, eps: float, eps_b_practical: float) -> int:
         """Index of the cheapest layer prefix whose guarantee is <= ``eps``
         (-1 = the bare base suffices).  Any requested eps between tiers
-        resolves to the nearest finer tier; raises ``ValueError`` only when
-        no tier (nor the base) qualifies."""
+        resolves to the nearest finer tier; raises :class:`ConfigError`
+        only when no tier (nor the base) qualifies."""
         if eps < 0.0:
-            raise ValueError(f"eps must be >= 0, got {eps}")
+            raise ConfigError(f"eps must be >= 0, got {eps}")
         if eps >= eps_b_practical:
             return -1
         for k, layer in enumerate(self.layers):
             if layer.eps <= eps:
                 return k
-        raise ValueError(
+        raise ConfigError(
             f"no tier with guarantee <= {eps!r}: archive tiers are "
             f"{self.tiers()} (base-only above {eps_b_practical!r})"
         )

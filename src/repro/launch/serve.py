@@ -19,6 +19,13 @@ ragged multi-sensor gateway ingest through the admission scheduler.
     # straight off the container, differentially checked against decode
     PYTHONPATH=src python -m repro.launch.serve --mode analytics \
         --series 8 --points 65536 --frame-len 8192 --queries 256
+
+    # chaos campaign: seeded fault injection (byte flips, truncation, CRC
+    # smash, frame drops, transient decode failures) against the
+    # fault-tolerant gateway; every answer differentially checked, exits
+    # non-zero on ANY silent corruption
+    PYTHONPATH=src python -m repro.launch.serve --mode chaos \
+        --series 4 --points 16384 --frame-len 2048 --fault-rate 0.01
 """
 from __future__ import annotations
 
@@ -251,10 +258,135 @@ def _serve_ingest(args) -> int:
     return 0 if worst <= eps * (1 + 1e-9) else 1
 
 
+def _serve_chaos(args) -> int:
+    """Seeded chaos campaign against the fault-tolerant gateway.
+
+    Phase 1 (corruption): each round injects ONE random fault (byte flip,
+    truncation, frame-CRC smash, or frame drop) into a fresh copy of a
+    pristine SHRKS container and fires range queries at a gateway over the
+    mutant.  Every completed answer is differentially checked against the
+    raw data: it must either carry a typed error, or be within its own
+    reported ``achieved`` bound.  An answer outside its bound with no
+    error flag is a SILENT CORRUPTION and fails the run.
+
+    Phase 2 (transient faults + overload): the pristine container is
+    served through a flaky decode path (seeded ``TransientError`` at
+    ``--fault-rate``) with a deliberately tiny admission queue, exercising
+    retry-with-backoff, the per-frame circuit breaker, deadline
+    enforcement, and shed-to-coarse backpressure — again with every
+    answer differentially checked.
+    """
+    from ..core import BYTES_PER_ROW, ShrinkConfig, ShrinkStreamCodec
+    from ..core.errors import ShrinkError
+    from ..serving import FaultTolerantGateway, RangeQuery, RetryPolicy
+    from ..testing import ChaosInjector
+
+    rng = np.random.default_rng(0)
+    s, n = args.series, args.points
+    v = np.cumsum(rng.standard_normal((s, n)) * 0.05, axis=1)
+    v += rng.standard_normal((s, n)) * 0.02
+    v = np.round(v, 4)
+    vmin, vmax = float(v.min()), float(v.max())
+    cfg = ShrinkConfig(eps_b=0.05 * max(vmax - vmin, 1e-12), lam=1e-4)
+    eps = args.eps * (vmax - vmin)
+    codec = ShrinkStreamCodec(
+        cfg, eps_targets=[eps], backend="rans",
+        value_range=(vmin, vmax), frame_len=args.frame_len,
+    )
+    for sid in range(s):
+        codec.ingest(v[sid], series_id=sid)
+    blob = codec.finalize()
+    print(
+        f"pristine container: {s} series x {n} samples, "
+        f"{codec.stats()['frames']} frames, {len(blob)} bytes, "
+        f"CR={s*n*BYTES_PER_ROW/len(blob):.1f}"
+    )
+
+    def check(q) -> str:
+        """Classify one completed query: 'error' (typed, fine), 'ok'
+        (within requested eps), 'degraded' (flagged, within its own
+        achieved bound), or 'SILENT' (out of bound, unflagged)."""
+        if q.error is not None:
+            return "error"
+        err = float(np.abs(q.result - v[q.series_id, q.t0 : q.t1]).max())
+        bound = max(q.achieved, q.eps)
+        if err > bound * (1 + 1e-9):
+            return "SILENT"
+        return "degraded" if q.degraded else "ok"
+
+    chaos = ChaosInjector(seed=args.chaos_seed)
+    qrng = np.random.default_rng(2)
+    tally = {"ok": 0, "degraded": 0, "error": 0, "SILENT": 0}
+    by_kind: dict[str, int] = {}
+    unreadable = 0
+    t0 = time.perf_counter()
+    for _ in range(args.corruptions):
+        mutant, fault = chaos.corrupt(blob)
+        by_kind[fault.kind] = by_kind.get(fault.kind, 0) + 1
+        try:
+            gw = FaultTolerantGateway(mutant, seed=args.chaos_seed)
+        except ShrinkError:
+            unreadable += 1  # detected at parse: typed, never silent
+            continue
+        for qid in range(args.queries_per_fault):
+            sid = int(qrng.integers(0, s))
+            lo = int(qrng.integers(0, n - 16))
+            hi = int(min(n, lo + qrng.integers(16, 2 * args.frame_len)))
+            gw.submit(RangeQuery(qid=qid, series_id=sid, t0=lo, t1=hi, eps=eps))
+        for q in gw.run(deadline_s=10.0):
+            tally[check(q)] += 1
+    dt = time.perf_counter() - t0
+    kinds = ", ".join(f"{k}={c}" for k, c in sorted(by_kind.items()))
+    print(
+        f"phase 1: {args.corruptions} corrupt containers ({kinds}) in {dt:.2f}s — "
+        f"{unreadable} rejected at parse; per-query: {tally['ok']} ok, "
+        f"{tally['degraded']} degraded, {tally['error']} typed errors, "
+        f"{tally['SILENT']} SILENT"
+    )
+
+    gw = FaultTolerantGateway(
+        blob,
+        retry=RetryPolicy(max_attempts=4, base_delay_s=1e-4, max_delay_s=1e-3),
+        max_queue=args.queries // 4 or 1,
+        seed=args.chaos_seed,
+    )
+    gw.frame_decode = chaos.flaky(gw.frame_decode, fail_rate=args.fault_rate)
+    tally2 = {"ok": 0, "degraded": 0, "error": 0, "SILENT": 0}
+    t0 = time.perf_counter()
+    for qid in range(args.queries):
+        sid = int(qrng.integers(0, s))
+        lo = int(qrng.integers(0, n - 16))
+        hi = int(min(n, lo + qrng.integers(16, 2 * args.frame_len)))
+        gw.submit(RangeQuery(qid=qid, series_id=sid, t0=lo, t1=hi, eps=eps))
+        # drain in bursts only once the bounded queue has overflowed, so
+        # the tail of each burst is shed to the coarse tier
+        if len(gw.queue) >= gw.max_queue + 4:
+            for q in gw.run(deadline_s=5.0):
+                tally2[check(q)] += 1
+    for q in gw.run(deadline_s=5.0):
+        tally2[check(q)] += 1
+    dt = time.perf_counter() - t0
+    st = gw.stats
+    print(
+        f"phase 2: {st['queries']} queries through flaky decode "
+        f"(fault rate {args.fault_rate:g}) in {dt:.2f}s — "
+        f"{st['retries']} retries, {st['transient_failures']} transient faults, "
+        f"{st['breaker_opens']} breaker opens, {st['shed']} shed to coarse, "
+        f"{st['deadline_exceeded']} deadline misses; per-query: "
+        f"{tally2['ok']} ok, {tally2['degraded']} degraded, "
+        f"{tally2['error']} typed errors, {tally2['SILENT']} SILENT"
+    )
+    silent = tally["SILENT"] + tally2["SILENT"]
+    print(f"silent corruptions: {silent}" + ("" if silent == 0 else "  <-- FAIL"))
+    return 0 if silent == 0 else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument(
-        "--mode", choices=["model", "range", "ingest", "analytics"], default="model"
+        "--mode",
+        choices=["model", "range", "ingest", "analytics", "chaos"],
+        default="model",
     )
     # model mode
     ap.add_argument("--arch")
@@ -277,8 +409,17 @@ def main(argv=None) -> int:
     ap.add_argument("--flush-deadline", type=float, default=None)
     ap.add_argument("--buckets", type=int, default=4)
     ap.add_argument("--verify-queries", type=int, default=2)
+    # chaos mode
+    ap.add_argument("--fault-rate", type=float, default=0.01,
+                    help="transient decode failure probability (phase 2)")
+    ap.add_argument("--corruptions", type=int, default=48,
+                    help="corrupt containers to generate (phase 1)")
+    ap.add_argument("--queries-per-fault", type=int, default=8)
+    ap.add_argument("--chaos-seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.mode == "chaos":
+        return _serve_chaos(args)
     if args.mode == "ingest":
         return _serve_ingest(args)
     if args.mode == "analytics":

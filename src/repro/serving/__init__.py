@@ -4,3 +4,4 @@ multi-sensor ingest scheduler."""
 from .kvcache import QuantizedKV, dequantize_cache, promote_caches, quantize_cache  # noqa: F401
 from .batching import ContinuousBatcher, RangeQuery, RangeQueryBatcher, Request  # noqa: F401
 from .ragged import RaggedBatcher  # noqa: F401
+from .gateway import CircuitBreaker, FaultTolerantGateway, RetryPolicy  # noqa: F401

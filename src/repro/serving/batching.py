@@ -28,6 +28,12 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.errors import (
+    CorruptFrameError,
+    LayerCorruptError,
+    RangeCoverageError,
+    UnknownSeriesError,
+)
 from ..core.serialize import frame_payload, parse_framed_container
 from ..core.shrink import ProgressiveDecoder, cs_from_bytes
 
@@ -139,6 +145,10 @@ class RangeQuery:
     result: Optional[np.ndarray] = None
     achieved: Optional[float] = None
     error: Optional[str] = None
+    # True when corruption forced a coarser answer than requested:
+    # ``achieved`` is then the (still valid) guarantee actually served,
+    # possibly > eps.  Never set on a full-resolution answer.
+    degraded: bool = False
 
 
 class RangeQueryBatcher:
@@ -160,9 +170,19 @@ class RangeQueryBatcher:
 
     Frame payload CRCs are verified on first touch (lazily, per the SHRKS
     contract).
+
+    ``degraded_ok=True`` turns corruption from an error into *scoped
+    degradation* (docs/robustness.md): a corrupt pyramid layer quarantines
+    only that layer and the query is served from the finest intact prefix
+    (``q.degraded=True``, ``q.achieved`` = the bound actually delivered);
+    a frame whose residual section is unusable but whose header/base CRC
+    holds falls back to base-only (segment) reconstruction.  Answers are
+    never silently wrong — a frame that cannot even prove its base is
+    intact still errors.
     """
 
-    def __init__(self, blob: bytes, cache_frames: int = 32):
+    def __init__(self, blob: bytes, cache_frames: int = 32, degraded_ok: bool = False):
+        self.degraded_ok = bool(degraded_ok)
         self._blob = bytes(blob)
         metas, _ = parse_framed_container(self._blob)
         self._frames: dict[int, list] = {}
@@ -181,6 +201,7 @@ class RangeQueryBatcher:
             "layers_decoded": 0,
             "layer_hits": 0,
             "errors": 0,
+            "degraded": 0,
         }
 
     @property
@@ -196,7 +217,7 @@ class RangeQueryBatcher:
         """[t_lo, t_hi) covered by a series' frames."""
         frames = self._frames.get(series_id)
         if not frames:
-            raise ValueError(f"unknown series {series_id}")
+            raise UnknownSeriesError(f"unknown series {series_id}", series_id=series_id)
         return frames[0].t_lo, frames[-1].t_hi
 
     def submit(self, q: RangeQuery) -> None:
@@ -217,16 +238,41 @@ class RangeQueryBatcher:
             self._cache.move_to_end(meta.offset)
             self.stats["frame_hits"] += 1
             return dec
-        dec = ProgressiveDecoder(cs_from_bytes(frame_payload(self._blob, meta)))
+        try:
+            dec = ProgressiveDecoder(cs_from_bytes(frame_payload(self._blob, meta)))
+        except CorruptFrameError:
+            if not self.degraded_ok:
+                raise
+            # Tolerant path: skip the frame-level CRC and parse the SHRK
+            # blob quarantining corrupt pyramid layers.  The SHRK header
+            # CRC (eps_hat + base) is STILL verified inside cs_from_bytes
+            # — if the base itself cannot be trusted, this re-raises and
+            # the query errors rather than serving unprovable data.
+            dec = ProgressiveDecoder(
+                cs_from_bytes(
+                    frame_payload(self._blob, meta, verify_crc=False), strict=False
+                )
+            )
         self.stats["frames_decoded"] += 1
         self._cache[meta.offset] = dec
         while len(self._cache) > self._cache_frames:
             self._cache.popitem(last=False)
         return dec
 
-    def _decoded_frame(self, meta, eps: float) -> tuple[np.ndarray, float]:
+    def _decoded_frame(self, meta, eps: float) -> tuple[np.ndarray, float, bool]:
         dec = self._decoder(meta)
         k = dec.cs.pyramid.resolve(eps, dec.cs.eps_b_practical)
+        degraded = False
+        intact = dec.intact_depth()
+        if k > intact:
+            if not self.degraded_ok:
+                raise LayerCorruptError(
+                    f"frame needs layer prefix {k} but finest intact prefix is "
+                    f"{intact}",
+                    series_id=meta.series_id, layer=intact + 1,
+                )
+            k = intact  # serve the finest intact prefix, flagged
+            degraded = True
         before = dec.layers_decoded
         vals = dec.prefix(k)
         paid = dec.layers_decoded - before
@@ -237,18 +283,23 @@ class RangeQueryBatcher:
             1 for layer in dec.cs.pyramid.layers[: k + 1] if layer.mode != "identity"
         )
         self.stats["layer_hits"] += needed - paid
-        return vals, dec.guarantee(k)
+        return vals, dec.guarantee(k), degraded
 
     def frames_overlapping(self, series_id: int, t0: int, t1: int) -> list:
         """Directory entries of the frames covering samples [t0, t1) of a
-        series, in time order; raises ``ValueError`` for an unknown series
-        or a range the frames do not fully cover."""
+        series, in time order; raises :class:`UnknownSeriesError` /
+        :class:`RangeCoverageError` for an unknown series or a range the
+        frames do not fully cover."""
         frames = self._frames.get(series_id)
         if not frames:
-            raise ValueError(f"unknown series {series_id}")
+            raise UnknownSeriesError(f"unknown series {series_id}", series_id=series_id)
         touched = [m for m in frames if m.t_lo < t1 and m.t_hi > t0]
         if t1 <= t0 or not touched or touched[0].t_lo > t0 or touched[-1].t_hi < t1:
-            raise ValueError(f"range [{t0}, {t1}) not covered")
+            raise RangeCoverageError(
+                f"range [{t0}, {t1}) not covered by series {series_id} frames "
+                f"[{frames[0].t_lo}, {frames[-1].t_hi})",
+                series_id=series_id,
+            )
         return touched
 
     def _frames_for(self, q: RangeQuery) -> list:
@@ -258,17 +309,26 @@ class RangeQueryBatcher:
         touched = self._frames_for(q)
         out = np.empty(q.t1 - q.t0, dtype=np.float64)
         achieved = 0.0
+        degraded = False
         expected = q.t0
-        for m in touched:
+        for i, m in enumerate(touched):
             if m.t_lo > expected:
-                raise ValueError(f"gap in series {q.series_id} frames at sample {expected}")
-            vals, guarantee = self._decoded_frame(m, q.eps)
+                raise RangeCoverageError(
+                    f"gap in series {q.series_id} frames at sample {expected} "
+                    f"(next frame covers [{m.t_lo}, {m.t_hi}))",
+                    series_id=q.series_id, frame_index=i,
+                )
+            vals, guarantee, frame_degraded = self._decoded_frame(m, q.eps)
             achieved = max(achieved, guarantee)
+            degraded = degraded or frame_degraded
             lo, hi = max(q.t0, m.t_lo), min(q.t1, m.t_hi)
             out[lo - q.t0 : hi - q.t0] = vals[lo - m.t_lo : hi - m.t_lo]
             expected = hi
         q.result = out
         q.achieved = achieved
+        q.degraded = degraded
+        if degraded:
+            self.stats["degraded"] += 1
 
     def peek(self, q: RangeQuery) -> Optional[np.ndarray]:
         """Serve ``q`` from already-cached layer prefixes with NO entropy

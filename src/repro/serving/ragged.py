@@ -39,6 +39,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from ..core.errors import BatcherFinalizedError, ConfigError
 from ..core.serialize import FramedWriter
 from ..core.shrink import ShrinkCodec, cs_to_bytes
 from ..core.streaming import KnowledgeBase
@@ -99,9 +100,13 @@ class RaggedBatcher:
         clock: Callable[[], float] = time.monotonic,
     ):
         if 0.0 in eps_targets and decimals is None:
-            raise ValueError("lossless eps target 0.0 requires `decimals`")
+            raise ConfigError("lossless eps target 0.0 requires `decimals`")
         if flush_samples is not None and flush_samples < 1:
-            raise ValueError(f"flush_samples must be >= 1, got {flush_samples}")
+            raise ConfigError(f"flush_samples must be >= 1, got {flush_samples}")
+        if flush_deadline_s is not None and flush_deadline_s < 0:
+            raise ConfigError(
+                f"flush_deadline_s must be >= 0, got {flush_deadline_s}"
+            )
         self.codec = ShrinkCodec(config=config, backend=backend)
         self.eps_targets = list(eps_targets)
         self.decimals = decimals
@@ -121,13 +126,16 @@ class RaggedBatcher:
         self._samples_in = 0
         self._payload_bytes = 0
         self._finalized = False
+        self._container: Optional[bytes] = None
 
     # -- admission ------------------------------------------------------ #
     def submit(self, series_id: int, values_chunk) -> list[tuple[int, int, int]]:
         """Append one series' next chunk; returns the frames sealed by this
         call ([] unless a flush trigger fired)."""
         if self._finalized:
-            raise ValueError("batcher already finalized")
+            raise BatcherFinalizedError(
+                "batcher already finalized", series_id=int(series_id)
+            )
         sid = int(series_id)
         vals = np.asarray(values_chunk, dtype=np.float64).ravel()
         if vals.size:
@@ -193,10 +201,15 @@ class RaggedBatcher:
 
     def finalize(self) -> bytes:
         """Flush the remainder and emit the SHRKS container (knowledge base
-        in the footer)."""
+        in the footer).  Idempotent: a retried ``finalize`` (e.g. after a
+        delivery timeout upstream) returns the SAME bytes instead of
+        corrupting writer state."""
+        if self._finalized:
+            return self._container
         self.flush()
         self._finalized = True
-        return self._writer.finish(self.kb.to_bytes())
+        self._container = self._writer.finish(self.kb.to_bytes())
+        return self._container
 
     # -- introspection -------------------------------------------------- #
     @property

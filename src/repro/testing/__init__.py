@@ -1,0 +1,16 @@
+"""Deterministic fault-injection tooling for the SHRINK stack.
+
+``repro.testing.chaos`` wraps any SHRK/SHRKS blob or decoder callable in
+seeded, reproducible faults — the harness behind ``tests/test_chaos*.py``
+and ``launch/serve.py --mode chaos``.
+"""
+from .chaos import (  # noqa: F401
+    ChaosInjector,
+    Fault,
+    FlakyCallable,
+    drop_frame,
+    flip_byte,
+    list_frames,
+    smash_frame_crc,
+    truncate,
+)

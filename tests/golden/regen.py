@@ -1,12 +1,13 @@
 """Golden wire-format fixture builders + regeneration script.
 
-The checked-in ``golden_v2.shrk`` / ``golden_v2.shrks`` fixtures pin the
-``SHRK`` and ``SHRKS`` byte layouts (v2 = the SHRR v2 residual *pyramid*
-payload): tests/test_golden_format.py rebuilds them from source and
-asserts byte equality, so any accidental change to the serializers
-(varint layout, header fields, rANS framing, pyramid directory, footer
+The checked-in ``golden_v3.shrk`` / ``golden_v3.shrks`` fixtures pin the
+``SHRK`` and ``SHRKS`` byte layouts (v3 = SHRK v2 CRC-sealed container
+header carrying the SHRR v3 per-layer-CRC residual *pyramid* payload):
+tests/test_golden_format.py rebuilds them from source and asserts byte
+equality, so any accidental change to the serializers (varint layout,
+header fields, CRC seals, rANS framing, pyramid directory, footer
 order...) fails CI instead of silently orphaning previously written data.
-``golden_v2_pyramid.shrk`` additionally pins a full 4-tier ladder
+``golden_v3_pyramid.shrk`` additionally pins a full 4-tier ladder
 ({1e-1, 1e-2, 1e-3, lossless} of range) including an identity layer.
 
 Escape hatch for an INTENTIONAL format change: bump the format version in
@@ -27,10 +28,10 @@ import sys
 import numpy as np
 
 HERE = pathlib.Path(__file__).resolve().parent
-GOLDEN_SHRK = HERE / "golden_v2.shrk"
-GOLDEN_SHRKS = HERE / "golden_v2.shrks"
-GOLDEN_RAGGED = HERE / "golden_v2_ragged.shrks"
-GOLDEN_PYRAMID = HERE / "golden_v2_pyramid.shrk"
+GOLDEN_SHRK = HERE / "golden_v3.shrk"
+GOLDEN_SHRKS = HERE / "golden_v3.shrks"
+GOLDEN_RAGGED = HERE / "golden_v3_ragged.shrks"
+GOLDEN_PYRAMID = HERE / "golden_v3_pyramid.shrk"
 GOLDEN_ANALYTICS = HERE / "golden_analytics.json"
 
 N = 1536

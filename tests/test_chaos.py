@@ -1,0 +1,462 @@
+"""Deterministic chaos suite: each fault injector against each reader.
+
+Every test injects ONE precisely-described fault (seeded or hand-placed)
+into a pristine blob and pins the reader's reaction:
+
+* strict readers raise the right :class:`ShrinkError` subclass with
+  series/frame/layer/offset context;
+* tolerant readers (gateway, ``degraded_ok=True`` batcher/analytics)
+  serve a *flagged* coarser answer whose reported bound still contains
+  the truth — or a typed error, never silent wrong data;
+* the gateway's operational armor (retry, breaker, deadline,
+  backpressure) behaves deterministically on injected clocks.
+
+The single-fault *universality* of "typed error or in-bound answer" is
+the property suite's job (tests/test_chaos_property.py); here each case
+is exact.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatcherFinalizedError,
+    CorruptFrameError,
+    LayerCorruptError,
+    RangeCoverageError,
+    ShrinkCodec,
+    ShrinkConfig,
+    ShrinkError,
+    ShrinkStreamCodec,
+    TransientError,
+    TruncatedArchiveError,
+    UnknownSeriesError,
+    cs_from_bytes,
+    cs_to_bytes,
+)
+from repro.core.errors import (
+    BackpressureError,
+    CircuitOpenError,
+    DeadlineExceededError,
+)
+from repro.core.serialize import frame_payload
+from repro.core.shrink import ProgressiveDecoder, decompress_at
+from repro.serving import (
+    CircuitBreaker,
+    FaultTolerantGateway,
+    RangeQuery,
+    RangeQueryBatcher,
+    RetryPolicy,
+)
+from repro.serving.ragged import RaggedBatcher
+from repro.testing import (
+    ChaosInjector,
+    FlakyCallable,
+    drop_frame,
+    flip_byte,
+    list_frames,
+    smash_frame_crc,
+    truncate,
+)
+
+S, N, FRAME = 2, 4096, 1024
+
+
+def _values():
+    rng = np.random.default_rng(7)
+    v = np.cumsum(rng.standard_normal((S, N)) * 0.05, axis=1)
+    v += rng.standard_normal((S, N)) * 0.02
+    return np.round(v, 4)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return _values()
+
+
+@pytest.fixture(scope="module")
+def blob(data):
+    v = data
+    vmin, vmax = float(v.min()), float(v.max())
+    cfg = ShrinkConfig(eps_b=0.05 * (vmax - vmin), lam=1e-4)
+    sc = ShrinkStreamCodec(
+        cfg, eps_targets=[0.01 * (vmax - vmin)], backend="rans",
+        value_range=(vmin, vmax), frame_len=FRAME,
+    )
+    for sid in range(S):
+        sc.ingest(v[sid], series_id=sid)
+    return sc.finalize()
+
+
+@pytest.fixture(scope="module")
+def fine_eps(data):
+    return 0.01 * float(data.max() - data.min())
+
+
+@pytest.fixture(scope="module")
+def shrk(data):
+    """A 3-tier pyramid SHRK over series 0 (coarse, fine, lossless)."""
+    v = data[0]
+    rng = float(v.max() - v.min())
+    cfg = ShrinkConfig(eps_b=0.05 * rng, lam=1e-4)
+    codec = ShrinkCodec(config=cfg, backend="rans")
+    return cs_to_bytes(codec.compress(v, [0.1 * rng, 0.01 * rng, 0.0], decimals=4))
+
+
+# --------------------------------------------------------------------- #
+# injector mechanics
+# --------------------------------------------------------------------- #
+def test_injector_is_deterministic(blob):
+    a = ChaosInjector(seed=42)
+    b = ChaosInjector(seed=42)
+    for _ in range(12):
+        ma, fa = a.corrupt(blob)
+        mb, fb = b.corrupt(blob)
+        assert ma == mb and fa == fb
+
+
+def test_flip_byte_changes_exactly_one_bit(blob):
+    mutant, fault = flip_byte(blob, 100, bit=3)
+    assert fault.kind == "flip" and fault.offset == 100 and fault.bit == 3
+    diff = [i for i in range(len(blob)) if blob[i] != mutant[i]]
+    assert diff == [100]
+    assert blob[100] ^ mutant[100] == 1 << 3
+
+
+def test_drop_frame_yields_valid_container_with_hole(blob):
+    metas = list_frames(blob)
+    mutant, fault = drop_frame(blob, 1)
+    left = list_frames(mutant)  # must parse cleanly — fault is the gap
+    assert len(left) == len(metas) - 1
+    assert fault.kind == "frame_drop" and str(metas[1].t_lo) in fault.detail
+
+
+def test_smash_frame_crc_parses_but_payload_read_fails(blob):
+    mutant, fault = smash_frame_crc(blob, 2)
+    metas = list_frames(mutant)  # directory + footer CRC still seal
+    with pytest.raises(CorruptFrameError, match="CRC"):
+        frame_payload(mutant, metas[2])
+    # the corruption is scoped: every other frame still reads
+    for i, m in enumerate(metas):
+        if i != 2:
+            frame_payload(mutant, m)
+
+
+# --------------------------------------------------------------------- #
+# injector x strict reader: typed errors with context
+# --------------------------------------------------------------------- #
+def test_truncation_is_typed_at_every_reader(blob, shrk):
+    for keep in (0, 3, len(blob) // 2, len(blob) - 1):
+        mutant, _ = truncate(blob, keep)
+        with pytest.raises(ShrinkError):
+            list_frames(mutant)
+    mutant, _ = truncate(shrk, len(shrk) - 2)
+    with pytest.raises(TruncatedArchiveError):
+        cs_from_bytes(mutant)
+
+
+def test_flip_in_shrk_payload_raises_layer_error_with_index(shrk):
+    mutant, _ = flip_byte(shrk, len(shrk) - 3)  # inside the last layer's bytes
+    with pytest.raises(LayerCorruptError, match="CRC") as ei:
+        cs_from_bytes(mutant)  # strict: parse refuses corrupt layers
+    assert ei.value.layer is not None
+    assert isinstance(ei.value, ValueError)  # taxonomy stays a ValueError
+
+
+def test_flip_in_shrk_header_raises_corrupt_frame(shrk):
+    mutant, _ = flip_byte(shrk, 7)  # inside the eps_hat field
+    with pytest.raises(CorruptFrameError, match="CRC"):
+        cs_from_bytes(mutant)
+
+
+def test_dropped_frame_surfaces_as_gap_with_frame_context(blob, fine_eps):
+    mutant, fault = drop_frame(blob, 1)  # second frame of series 0
+    b = RangeQueryBatcher(mutant)
+    q = RangeQuery(qid=0, series_id=0, t0=0, t1=3 * FRAME, eps=fine_eps)
+    b.submit(q)
+    (done,) = b.run()
+    assert done.error is not None and "gap" in done.error
+    assert str(FRAME) in done.error  # names the first missing sample
+
+
+def test_smashed_crc_strict_batcher_records_crc_error(blob, fine_eps):
+    metas = list_frames(blob)
+    mutant, _ = smash_frame_crc(blob, 0)
+    b = RangeQueryBatcher(mutant)  # degraded_ok defaults to False
+    q = RangeQuery(
+        qid=0, series_id=metas[0].series_id,
+        t0=metas[0].t_lo, t1=metas[0].t_hi, eps=fine_eps,
+    )
+    b.submit(q)
+    (done,) = b.run()
+    assert done.error is not None and "CRC" in done.error
+
+
+def test_unknown_series_and_coverage_errors_carry_context(blob, fine_eps):
+    b = RangeQueryBatcher(blob)
+    with pytest.raises(UnknownSeriesError, match="unknown series") as ei:
+        b.span(99)
+    assert ei.value.series_id == 99
+    with pytest.raises(RangeCoverageError, match="not covered") as ei:
+        b.frames_overlapping(0, N + 100, N + 200)
+    assert ei.value.series_id == 0
+
+
+# --------------------------------------------------------------------- #
+# tolerant readers: scoped degradation, flagged and in-bound
+# --------------------------------------------------------------------- #
+def test_corrupt_layer_quarantined_prefix_still_serves(shrk, data):
+    v = data[0]
+    mutant, _ = flip_byte(shrk, len(shrk) - 3)  # kills the finest layer
+    cs = cs_from_bytes(mutant, strict=False)
+    assert cs.pyramid.layers[-1].corrupt
+    dec = ProgressiveDecoder(cs)
+    depth = dec.intact_depth()
+    assert 0 <= depth < len(cs.pyramid.layers) - 1
+    vals = dec.prefix(depth)
+    assert np.max(np.abs(vals - v)) <= dec.guarantee(depth) * (1 + 1e-9)
+    with pytest.raises(LayerCorruptError):
+        dec.prefix(depth + 1)  # cannot decode past the quarantine
+
+
+def test_gateway_serves_payload_flip_degraded_within_bound(blob, data, fine_eps):
+    metas = list_frames(blob)
+    m = metas[0]
+    mutant, _ = flip_byte(blob, m.offset + m.length - 3)
+    gw = FaultTolerantGateway(mutant)
+    gw.submit(RangeQuery(qid=0, series_id=m.series_id, t0=m.t_lo, t1=m.t_hi,
+                         eps=fine_eps))
+    (q,) = gw.run()
+    assert q.error is None and q.degraded
+    assert q.achieved > fine_eps  # honest: the fine tier was lost
+    err = np.max(np.abs(q.result - data[m.series_id, m.t_lo:m.t_hi]))
+    assert err <= q.achieved * (1 + 1e-9)
+    assert gw.stats["degraded"] == 1
+
+
+def test_gateway_smashed_directory_crc_serves_full_quality(blob, data, fine_eps):
+    """Smashing only the *stored* directory CRC leaves the payload's inner
+    CRCs (SHRK header + per-layer) intact, which PROVE the bytes good —
+    the gateway may serve full resolution.  The invariant is 'detected or
+    correct', not 'must degrade'."""
+    metas = list_frames(blob)
+    mutant, _ = smash_frame_crc(blob, 0)
+    m = metas[0]
+    gw = FaultTolerantGateway(mutant)
+    gw.submit(RangeQuery(qid=0, series_id=m.series_id, t0=m.t_lo, t1=m.t_hi,
+                         eps=fine_eps))
+    (q,) = gw.run()
+    assert q.error is None
+    err = np.max(np.abs(q.result - data[m.series_id, m.t_lo:m.t_hi]))
+    assert err <= max(q.achieved, fine_eps) * (1 + 1e-9)
+
+
+def test_strict_clients_never_see_degraded_data(blob, fine_eps):
+    metas = list_frames(blob)
+    m = metas[0]
+    mutant, _ = flip_byte(blob, m.offset + m.length - 3)
+    b = RangeQueryBatcher(mutant)  # strict
+    q = RangeQuery(qid=0, series_id=m.series_id, t0=m.t_lo, t1=m.t_hi,
+                   eps=fine_eps)
+    b.submit(q)
+    (done,) = b.run()
+    assert done.error is not None and done.result is None
+
+
+# --------------------------------------------------------------------- #
+# gateway armor: retry / breaker / deadline / backpressure
+# --------------------------------------------------------------------- #
+def _fake_time():
+    clk = {"t": 0.0}
+    return clk, (lambda: clk["t"]), (lambda s: clk.__setitem__("t", clk["t"] + s))
+
+
+def test_flaky_callable_is_seeded_and_typed():
+    a = FlakyCallable(lambda: "ok", fail_rate=0.5, seed=3)
+    b = FlakyCallable(lambda: "ok", fail_rate=0.5, seed=3)
+    outcomes = []
+    for f in (a, b):
+        got = []
+        for _ in range(32):
+            try:
+                got.append(f())
+            except TransientError as e:
+                got.append(f"E:{e.message}")
+        outcomes.append(got)
+    assert outcomes[0] == outcomes[1]
+    assert a.failures > 0 and a.failures < a.calls
+
+
+def test_gateway_retries_transient_faults_to_success(blob, data, fine_eps):
+    clk, clock, sleep = _fake_time()
+    gw = FaultTolerantGateway(
+        blob, clock=clock, sleep=sleep,
+        retry=RetryPolicy(max_attempts=3),
+        # keep the breaker out of the way: this test is about retries
+        breaker=CircuitBreaker(failure_threshold=10**6, clock=clock),
+    )
+    # fail_rate 0.5 with per-frame retries: every query still lands
+    gw.frame_decode = FlakyCallable(gw.frame_decode, fail_rate=0.5, seed=1)
+    for qid in range(8):
+        gw.submit(RangeQuery(qid=qid, series_id=0, t0=qid * 300,
+                             t1=qid * 300 + 400, eps=fine_eps))
+    done = gw.run(deadline_s=1e9)
+    served = [q for q in done if q.error is None]
+    assert len(served) >= 6  # p(3 consecutive fails) = 1/8 per frame
+    for q in served:
+        err = np.max(np.abs(q.result - data[0, q.t0:q.t1]))
+        assert err <= max(q.achieved, fine_eps) * (1 + 1e-9)
+    assert gw.stats["retries"] > 0
+    assert clk["t"] > 0  # backoff actually slept on the injected clock
+    for q in done:
+        if q.error is not None:
+            assert q.error.startswith("TransientError")
+
+
+def test_gateway_exhausted_retries_surface_transient_error(blob, fine_eps):
+    clk, clock, sleep = _fake_time()
+    gw = FaultTolerantGateway(blob, clock=clock, sleep=sleep,
+                              retry=RetryPolicy(max_attempts=3))
+    gw.frame_decode = FlakyCallable(gw.frame_decode, fail_rate=1.0, seed=0)
+    gw.submit(RangeQuery(qid=0, series_id=0, t0=0, t1=100, eps=fine_eps))
+    (q,) = gw.run(deadline_s=1e9)
+    assert q.error is not None and q.error.startswith("TransientError")
+    assert gw.stats["retries"] == 2  # attempts 2 and 3
+    assert gw.stats["transient_failures"] == 3
+
+
+def test_breaker_opens_then_recovers_half_open():
+    clk, clock, _ = _fake_time()
+    br = CircuitBreaker(failure_threshold=2, recovery_s=10.0, clock=clock)
+    assert br.allow("f")
+    br.record_failure("f")
+    assert br.allow("f") and not br.is_open("f")
+    br.record_failure("f")
+    assert br.is_open("f") and not br.allow("f")
+    clk["t"] = 11.0  # recovery window passed: one trial call
+    assert br.allow("f")
+    br.record_failure("f")  # trial fails -> re-opens immediately
+    assert br.is_open("f") and not br.allow("f")
+    clk["t"] = 22.0
+    assert br.allow("f")
+    br.record_success("f")  # trial succeeds -> closed for good
+    assert br.allow("f") and not br.is_open("f")
+
+
+def test_gateway_breaker_skips_known_bad_frame(blob, fine_eps):
+    clk, clock, sleep = _fake_time()
+    gw = FaultTolerantGateway(
+        blob, clock=clock, sleep=sleep,
+        retry=RetryPolicy(max_attempts=3),
+        breaker=CircuitBreaker(failure_threshold=3, recovery_s=1e6, clock=clock),
+    )
+    gw.frame_decode = FlakyCallable(gw.frame_decode, fail_rate=1.0, seed=0)
+    gw.submit(RangeQuery(qid=0, series_id=0, t0=0, t1=100, eps=fine_eps))
+    gw.submit(RangeQuery(qid=1, series_id=0, t0=0, t1=100, eps=fine_eps))
+    q0, q1 = gw.run(deadline_s=1e9)
+    assert q0.error.startswith("TransientError")  # 3 attempts tripped it
+    assert q1.error.startswith("CircuitOpenError")  # second query skipped
+    assert gw.stats["breaker_opens"] == 1 and gw.stats["breaker_skips"] == 1
+
+
+def test_gateway_deadline_is_typed(blob, fine_eps):
+    clk, clock, sleep = _fake_time()
+    gw = FaultTolerantGateway(blob, clock=clock, sleep=sleep)
+    slow = FlakyCallable(gw.frame_decode, slow_s=10.0, sleep=sleep)
+    gw.frame_decode = slow
+    gw.submit(RangeQuery(qid=0, series_id=0, t0=0, t1=3 * FRAME, eps=fine_eps))
+    (q,) = gw.run(deadline_s=5.0)  # first frame's 10s decode blows the budget
+    assert q.error is not None and q.error.startswith("DeadlineExceededError")
+    assert "5s" in q.error
+    assert gw.stats["deadline_exceeded"] == 1
+
+
+def test_backpressure_sheds_to_coarse_flagged_and_in_bound(blob, data, fine_eps):
+    gw = FaultTolerantGateway(blob, max_queue=2)  # coarse_eps defaults to inf
+    for qid in range(4):
+        gw.submit(RangeQuery(qid=qid, series_id=0, t0=0, t1=256, eps=fine_eps))
+    assert gw.stats["shed"] == 2
+    done = gw.run()
+    shed = [q for q in done if q.degraded]
+    assert len(shed) == 2
+    for q in shed:
+        assert q.error is None
+        err = np.max(np.abs(q.result - data[0, q.t0:q.t1]))
+        assert err <= q.achieved * (1 + 1e-9)  # segment tier, honest bound
+
+
+def test_backpressure_rejects_without_coarse_tier(blob, fine_eps):
+    gw = FaultTolerantGateway(blob, max_queue=1, coarse_eps=None)
+    gw.submit(RangeQuery(qid=0, series_id=0, t0=0, t1=64, eps=fine_eps))
+    with pytest.raises(BackpressureError, match="queue full") as ei:
+        gw.submit(RangeQuery(qid=1, series_id=0, t0=0, t1=64, eps=fine_eps))
+    assert ei.value.series_id == 0
+    assert isinstance(ei.value, ValueError)
+    assert gw.stats["rejected"] == 1
+
+
+def test_circuit_open_error_names_frame(blob, fine_eps):
+    clk, clock, _ = _fake_time()
+    gw = FaultTolerantGateway(
+        blob, clock=clock, sleep=lambda s: None,
+        breaker=CircuitBreaker(failure_threshold=1, recovery_s=1e6, clock=clock),
+    )
+    gw.frame_decode = FlakyCallable(gw.frame_decode, fail_rate=1.0, seed=0)
+    gw.submit(RangeQuery(qid=0, series_id=0, t0=0, t1=64, eps=fine_eps))
+    gw.submit(RangeQuery(qid=1, series_id=0, t0=0, t1=64, eps=fine_eps))
+    _, q1 = gw.run(deadline_s=1e9)
+    assert q1.error.startswith("CircuitOpenError")
+    assert "offset" in q1.error  # names which frame is quarantined
+
+
+# --------------------------------------------------------------------- #
+# ragged gateway hardening
+# --------------------------------------------------------------------- #
+def test_ragged_finalize_is_idempotent():
+    cfg = ShrinkConfig(eps_b=0.1, lam=1e-4)
+    b = RaggedBatcher(cfg, eps_targets=[0.05], backend="rans")
+    rng = np.random.default_rng(0)
+    for sid in range(3):
+        b.submit(sid, np.round(np.cumsum(rng.standard_normal(200)) * 0.1, 3))
+    first = b.finalize()
+    assert b.finalize() is first  # same container object, no double-flush
+    assert list_frames(first)  # and it parses
+
+
+def test_ragged_submit_after_finalize_is_typed():
+    cfg = ShrinkConfig(eps_b=0.1, lam=1e-4)
+    b = RaggedBatcher(cfg, eps_targets=[0.05], backend="rans")
+    b.submit(0, np.array([1.0, 2.0, 3.0]))
+    b.finalize()
+    with pytest.raises(BatcherFinalizedError, match="finalized") as ei:
+        b.submit(7, np.array([4.0]))
+    assert ei.value.series_id == 7
+    assert isinstance(ei.value, ValueError)
+
+
+# --------------------------------------------------------------------- #
+# analytics degradation
+# --------------------------------------------------------------------- #
+def test_analytics_degraded_aggregate_contains_truth(blob, data, fine_eps):
+    from repro.analytics import AnalyticsEngine
+
+    metas = list_frames(blob)
+    m = metas[0]
+    mutant, _ = flip_byte(blob, m.offset + m.length - 3)
+    eng = AnalyticsEngine(mutant, degraded_ok=True)
+    sl = data[m.series_id, m.t_lo:m.t_hi]
+    ans = eng.aggregate(m.series_id, "mean", m.t_lo, m.t_hi, eps=fine_eps)
+    assert ans.degraded
+    assert ans.lo - 1e-9 <= float(sl.mean()) <= ans.hi + 1e-9
+    assert ans.achieved_eps >= fine_eps
+    assert eng.stats["degraded"] >= 1
+
+
+def test_analytics_strict_raises_on_corrupt_frame(blob, fine_eps):
+    from repro.analytics import AnalyticsEngine
+
+    metas = list_frames(blob)
+    m = metas[0]
+    mutant, _ = flip_byte(blob, m.offset + m.length - 3)
+    eng = AnalyticsEngine(mutant)  # degraded_ok defaults to False
+    with pytest.raises(CorruptFrameError):
+        eng.aggregate(m.series_id, "mean", m.t_lo, m.t_hi, eps=fine_eps)

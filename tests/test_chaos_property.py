@@ -1,0 +1,201 @@
+"""Single-fault universality, property-tested against a pristine oracle.
+
+The robustness contract (docs/robustness.md) in one sentence: **no single
+injected fault may ever yield a silently out-of-bound answer.**  For ANY
+single fault — a bit flip at any offset, a truncation at any length, a
+smashed frame CRC, or a dropped frame —
+
+* (a) strict SHRK parse — ``cs_from_bytes(strict=True)`` on a bit-flipped
+  or truncated archive ALWAYS raises a typed :class:`ShrinkError`
+  (every byte of SHRK v2 is covered by the header CRC, a per-layer CRC,
+  the directory CRC, a length field, or the magic/version/trailing
+  checks, and CRC-32 detects all single-bit errors);
+* (b) gateway serve — a fault-tolerant gateway over the mutant container
+  either refuses at parse (typed), errors the query (typed, in
+  ``q.error``), or returns an answer whose reported bound
+  ``max(achieved, eps)`` still contains the pristine truth;
+* (c) tolerant SHRK decode — ``strict=False`` on a flipped archive
+  either raises (base untrusted) or serves an intact prefix within its
+  *reported* guarantee.
+
+Skipped without the ``hypothesis`` dev extra; CI runs it derandomized
+via tests/conftest.py (the ``chaos`` job).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ShrinkCodec,
+    ShrinkConfig,
+    ShrinkError,
+    ShrinkStreamCodec,
+    cs_from_bytes,
+    cs_to_bytes,
+)
+from repro.core.shrink import ProgressiveDecoder
+from repro.serving import FaultTolerantGateway, RangeQuery
+from repro.testing import drop_frame, flip_byte, list_frames, smash_frame_crc, truncate
+
+# One pristine fixture pair, built once: property examples mutate copies.
+_S, _N, _FRAME = 2, 2048, 512
+
+
+def _fixtures():
+    rng = np.random.default_rng(11)
+    v = np.cumsum(rng.standard_normal((_S, _N)) * 0.05, axis=1)
+    v += rng.standard_normal((_S, _N)) * 0.02
+    v = np.round(v, 4)
+    vrange = float(v.max() - v.min())
+    cfg = ShrinkConfig(eps_b=0.05 * vrange, lam=1e-4)
+    eps = 0.01 * vrange
+    sc = ShrinkStreamCodec(
+        cfg, eps_targets=[eps], backend="rans",
+        value_range=(float(v.min()), float(v.max())), frame_len=_FRAME,
+    )
+    for sid in range(_S):
+        sc.ingest(v[sid], series_id=sid)
+    shrks = sc.finalize()
+    codec = ShrinkCodec(config=cfg, backend="rans")
+    shrk = cs_to_bytes(
+        codec.compress(v[0], [0.1 * vrange, eps, 0.0], decimals=4)
+    )
+    return v, eps, shrks, shrk
+
+
+_V, _EPS, _SHRKS, _SHRK = _fixtures()
+_N_FRAMES = len(list_frames(_SHRKS))
+
+
+@given(
+    offset=st.integers(min_value=0, max_value=len(_SHRK) - 1),
+    bit=st.integers(min_value=0, max_value=7),
+)
+@settings(max_examples=150)
+def test_any_bit_flip_in_shrk_is_detected_by_strict_parse(offset, bit):
+    mutant, _ = flip_byte(_SHRK, offset, bit)
+    with pytest.raises(ShrinkError):
+        cs_from_bytes(mutant)  # strict
+
+
+@given(keep=st.integers(min_value=0, max_value=len(_SHRK) - 1))
+@settings(max_examples=80)
+def test_any_truncation_of_shrk_is_detected(keep):
+    mutant, _ = truncate(_SHRK, keep)
+    with pytest.raises(ShrinkError):
+        cs_from_bytes(mutant)
+
+
+@given(
+    offset=st.integers(min_value=0, max_value=len(_SHRK) - 1),
+    bit=st.integers(min_value=0, max_value=7),
+)
+@settings(max_examples=100)
+def test_tolerant_decode_of_flipped_shrk_is_typed_or_in_bound(offset, bit):
+    mutant, _ = flip_byte(_SHRK, offset, bit)
+    try:
+        cs = cs_from_bytes(mutant, strict=False)
+        dec = ProgressiveDecoder(cs)
+        depth = dec.intact_depth()
+        vals = dec.prefix(depth)
+        guarantee = dec.guarantee(depth)
+    except ShrinkError:
+        return  # typed refusal is always acceptable
+    err = float(np.max(np.abs(vals - _V[0])))
+    assert err <= guarantee * (1 + 1e-9), (
+        f"silent corruption: |err|={err:g} > reported guarantee {guarantee:g} "
+        f"after flipping bit {bit} of byte {offset}"
+    )
+
+
+_fault_strategy = st.one_of(
+    st.tuples(
+        st.just("flip"),
+        st.integers(min_value=0, max_value=len(_SHRKS) - 1),
+        st.integers(min_value=0, max_value=7),
+    ),
+    st.tuples(
+        st.just("truncate"),
+        st.integers(min_value=0, max_value=len(_SHRKS) - 1),
+        st.just(0),
+    ),
+    st.tuples(
+        st.just("crc_smash"),
+        st.integers(min_value=0, max_value=_N_FRAMES - 1),
+        st.just(0),
+    ),
+    st.tuples(
+        st.just("frame_drop"),
+        st.integers(min_value=0, max_value=_N_FRAMES - 1),
+        st.just(0),
+    ),
+)
+
+
+def _apply(fault):
+    kind, a, b = fault
+    if kind == "flip":
+        return flip_byte(_SHRKS, a, b)[0]
+    if kind == "truncate":
+        return truncate(_SHRKS, a)[0]
+    if kind == "crc_smash":
+        return smash_frame_crc(_SHRKS, a)[0]
+    return drop_frame(_SHRKS, a)[0]
+
+
+@given(
+    fault=_fault_strategy,
+    sid=st.integers(min_value=0, max_value=_S - 1),
+    t0=st.integers(min_value=0, max_value=_N - 32),
+    span=st.integers(min_value=16, max_value=2 * _FRAME),
+)
+@settings(max_examples=150)
+def test_any_single_fault_yields_typed_error_or_in_bound_answer(
+    fault, sid, t0, span
+):
+    """The headline invariant: serve ANY range query off ANY single-fault
+    mutant through the gateway — the answer is typed-error or provably
+    in-bound against the pristine oracle.  Never silently wrong."""
+    mutant = _apply(fault)
+    t1 = min(_N, t0 + span)
+    try:
+        gw = FaultTolerantGateway(mutant)
+    except ShrinkError:
+        return  # refused at parse: typed, never silent
+    gw.submit(RangeQuery(qid=0, series_id=sid, t0=t0, t1=t1, eps=_EPS))
+    (q,) = gw.run(deadline_s=30.0)
+    if q.error is not None:
+        return  # typed error surfaced on the query
+    err = float(np.max(np.abs(q.result - _V[sid, t0:t1])))
+    bound = max(q.achieved, _EPS)
+    assert err <= bound * (1 + 1e-9), (
+        f"SILENT CORRUPTION: fault={fault} query=({sid},{t0},{t1}) "
+        f"|err|={err:g} > bound {bound:g} (degraded={q.degraded})"
+    )
+    if q.achieved > _EPS:  # served coarser than asked -> must be flagged
+        assert q.degraded
+
+
+@given(
+    fault=_fault_strategy,
+    sid=st.integers(min_value=0, max_value=_S - 1),
+)
+@settings(max_examples=60)
+def test_any_single_fault_analytics_is_typed_or_contains_truth(fault, sid):
+    """Same invariant through the compressed-domain analytics path: the
+    aggregate interval either fails typed or contains the numpy truth."""
+    from repro.analytics import AnalyticsEngine
+
+    mutant = _apply(fault)
+    truth = float(_V[sid].mean())
+    try:
+        eng = AnalyticsEngine(mutant, degraded_ok=True)
+        ans = eng.aggregate(sid, "mean", 0, _N, eps=_EPS)
+    except ShrinkError:
+        return
+    assert ans.lo - 1e-9 <= truth <= ans.hi + 1e-9, (
+        f"SILENT CORRUPTION: fault={fault} mean interval "
+        f"[{ans.lo}, {ans.hi}] excludes truth {truth} (degraded={ans.degraded})"
+    )
