@@ -21,6 +21,7 @@ assembly and knowledge-base ingest.
 """
 from __future__ import annotations
 
+import math
 import time
 
 import numpy as np
@@ -69,14 +70,29 @@ def ragged_throughput(
     eps_ts = [1e-2 * rngv, 1e-3 * rngv, 0.0]
     mb = int(lengths.sum()) * BYTES_PER_ROW / 1e6
 
-    codec.compress_batch(series[:2], eps_targets=eps_ts, decimals=4)  # warm caches
-    t_batch = _best_of(
-        lambda: codec.compress_batch(series, eps_targets=eps_ts, decimals=4), reps
-    )
-    t_loop = _best_of(
-        lambda: [codec.compress(v, eps_targets=eps_ts, decimals=4) for v in series],
-        reps,
-    )
+    # full-size warm pass per path (jit shape buckets, lazy imports), then
+    # drift-cancelling interleaved reps: batch and loop alternate so a
+    # machine-load swing hits both paths, not just whichever ran second
+    codec.compress_batch(series, eps_targets=eps_ts, decimals=4)
+    [codec.compress(v, eps_targets=eps_ts, decimals=4) for v in series[:2]]
+    t_batch = math.inf
+    t_loop = math.inf
+    for _ in range(reps):
+        t_batch = min(
+            t_batch,
+            _best_of(
+                lambda: codec.compress_batch(series, eps_targets=eps_ts, decimals=4), 1
+            ),
+        )
+        t_loop = min(
+            t_loop,
+            _best_of(
+                lambda: [
+                    codec.compress(v, eps_targets=eps_ts, decimals=4) for v in series
+                ],
+                1,
+            ),
+        )
     out = {
         "series": s,
         "len_min": int(lengths.min()),

@@ -117,12 +117,20 @@ def main(argv=None) -> int:
                 f"  entropy[{backend:4s}] enc={row['encode_mb_s']:8.2f}MB/s "
                 f"dec={row['decode_mb_s']:8.2f}MB/s size={row['bytes']}B"
             )
+    ek = engine["entropy_kernel"]
+    print(
+        f"  kernel[n={ek['symbols']}] "
+        f"device={ek['device']['roundtrip_mb_s']:.2f}MB/s "
+        f"numpy={ek['numpy']['roundtrip_mb_s']:.2f}MB/s "
+        f"({ek['vs_numpy']:.2f}x, bytes_identical={ek['bytes_identical']})"
+    )
     bp = engine["batched_pipeline"]
     print(
         f"  batch[{bp['series']}x{bp['points_per_series']}] "
         f"batch={bp['batch_mb_s']:.2f}MB/s loop={bp['loop_mb_s']:.2f}MB/s "
         f"speedup={bp['batch_speedup']:.2f}x"
     )
+    checks.update(bench_throughput.validate_engine_claims(engine))
 
     print("\n== Streaming ingest (chunked scan + framed container) ==")
     stream = bench_streaming.streaming_json(quick=args.quick)

@@ -23,7 +23,10 @@ All backends are lossless on int64 inputs and round-trip tested.
 """
 from __future__ import annotations
 
+import os
 import struct
+import sys
+import warnings
 
 import numpy as np
 
@@ -301,6 +304,77 @@ _RANS_K = 64  # interleaved states
 # the encoder splits rows into step-count groups to bound memory
 _RANS_DENSE_CELLS = 16 << 20
 
+# ------------------------------------------------------------------ #
+# device engine gating.  kernels/rans.py runs the same step machines as
+# one fused XLA/Pallas scan (lane axis = the K states) instead of ~n/K
+# interpreted numpy dispatches; its wire bytes are identical, so routing
+# is purely a perf decision:
+#   SHRINK_RANS_DEVICE=0     never (numpy machine only)
+#   SHRINK_RANS_DEVICE=1     always when importable (parity tests)
+#   unset / auto             engage above a work threshold; only import
+#                            jax (~1s) for jobs big enough to repay it
+_RANS_DEVICE_MIN = 1 << 14        # symbols, when jax is already loaded
+_RANS_DEVICE_MIN_COLD = 1 << 20   # symbols, when engaging means importing jax
+# ragged mixes split into several padded group dispatches; on the CPU (xla)
+# route those only beat the zero-waste dense-prefix numpy machine for jobs
+# big enough to amortize the per-dispatch fixed cost (measured: ~780k plane
+# symbols over 5 groups lose ~15% to the numpy machine on one core)
+_RANS_DEVICE_RAGGED_MIN_XLA = 4 << 20
+_rans_device_state: dict = {"mod": None, "broken": False}
+
+
+def _rans_device(total_symbols: int):
+    """The device rANS engine (``repro.kernels.rans``) for a job of
+    ``total_symbols`` plane symbols, or ``None`` to run the numpy
+    machine.  Any engine import failure (no jax in this environment)
+    permanently falls back — the numpy coder is always available."""
+    st = _rans_device_state
+    if st["broken"]:
+        return None
+    mode = os.environ.get("SHRINK_RANS_DEVICE", "auto")
+    if mode == "0":
+        return None
+    if mode != "1":
+        thresh = (
+            _RANS_DEVICE_MIN if "jax" in sys.modules else _RANS_DEVICE_MIN_COLD
+        )
+        if total_symbols < thresh:
+            return None
+    if st["mod"] is None:
+        try:
+            from repro.kernels import rans as kernel_rans
+            st["mod"] = kernel_rans
+        except Exception:
+            st["broken"] = True
+            return None
+    return st["mod"]
+
+
+def _rans_device_encode(eng, sym_mat: np.ndarray, freqs: np.ndarray):
+    """``eng.encode_rows`` with the automatic-numpy-fallback contract:
+    encode inputs are trusted, so an exception here is engine
+    infrastructure trouble — warn once, quarantine the engine for the
+    process, and let the caller run the numpy machine."""
+    try:
+        return eng.encode_rows(sym_mat, freqs)
+    except Exception as e:
+        _rans_device_state["broken"] = True
+        warnings.warn(
+            f"device rANS engine failed ({e!r}); falling back to the numpy "
+            "coder for the rest of this process",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        return None
+
+
+def _rans_plane_table(freqs: np.ndarray) -> bytes:
+    """Wire bytes of one plane's frequency table: 32B presence bitmap +
+    u16 freq per present symbol."""
+    present = freqs > 0
+    bitmap = np.packbits(present.astype(np.uint8), bitorder="little")
+    return bitmap.tobytes() + freqs.astype("<u2")[present].tobytes()
+
 
 def _rans_normalize_freqs(counts: np.ndarray) -> np.ndarray:
     """Scale histogram ``counts`` to sum exactly _RANS_M, keeping every
@@ -313,22 +387,74 @@ def _rans_normalize_freqs(counts: np.ndarray) -> np.ndarray:
         return freqs
     freqs[nz] = np.maximum(1, np.rint(counts[nz] * (_RANS_M / total)).astype(np.int64))
     diff = _RANS_M - int(freqs.sum())
-    if diff != 0:
-        # steal from / add to the most frequent symbols, round-robin
-        order = np.argsort(-counts, kind="stable")
-        order = order[counts[order] > 0]
-        i = 0
-        while diff != 0:
-            s = order[i % len(order)]
-            if diff > 0:
-                freqs[s] += 1
-                diff -= 1
-            elif freqs[s] > 1:
-                take = min(freqs[s] - 1, -diff)
-                freqs[s] -= take
-                diff += take
-            i += 1
+    if diff == 0:
+        return freqs
+    # distribute the rounding drift over the most frequent symbols (closed
+    # form of the former round-robin loop, same output bytes):
+    order = np.argsort(-counts, kind="stable")
+    order = order[counts[order] > 0]
+    if diff > 0:
+        # +1 round-robin over `order`: everyone gets diff // len, the first
+        # diff % len symbols one more
+        add, rem = divmod(diff, order.size)
+        freqs[order] += add
+        freqs[order[:rem]] += 1
+    else:
+        # greedy steal in `order`: each donor gives at most freq - 1, so no
+        # present symbol ever drops to 0.  A deficit means sum > M, which
+        # guarantees total donor capacity covers it — assert the invariant
+        # rather than silently under-stealing.
+        caps = freqs[order] - 1
+        cum = np.cumsum(caps)
+        if int(cum[-1]) < -diff:
+            raise AssertionError(
+                "rANS freq normalization stalled: deficit exceeds donor "
+                "capacity (histogram invariant violated)"
+            )
+        freqs[order] -= np.clip(-diff - (cum - caps), 0, caps)
     return freqs
+
+
+def _rans_normalize_freqs_rows(counts: np.ndarray) -> np.ndarray:
+    """Row-vectorized ``_rans_normalize_freqs``: normalize an [R, 256]
+    histogram matrix in one pass, byte-identical per row to the scalar
+    function.  The batched encoders call this once per row group instead
+    of paying R python round-trips."""
+    counts = counts.astype(np.int64)
+    totals = counts.sum(axis=1)
+    nz = counts > 0
+    scale = _RANS_M / np.maximum(totals, 1).astype(np.float64)
+    scaled = np.rint(counts * scale[:, None]).astype(np.int64)
+    freqs = np.where(nz, np.maximum(1, scaled), 0)
+    diff = _RANS_M - freqs.sum(axis=1)
+    if not diff.any():
+        return np.where(totals[:, None] > 0, freqs, 0)
+    # ordered space: most-frequent first (stable), absent symbols last
+    order = np.argsort(-counts, axis=1, kind="stable")
+    freqs_ord = np.take_along_axis(freqs, order, axis=1)
+    npres = nz.sum(axis=1)
+    pos = np.arange(256)[None, :]
+    present_pref = pos < npres[:, None]
+    surplus = diff > 0
+    deficit = diff < 0
+    # surplus rows: +1 round-robin over the present prefix
+    np1 = np.maximum(npres, 1)
+    addv = np.where(surplus, diff // np1, 0)
+    remv = np.where(surplus, diff % np1, 0)
+    inc = present_pref * addv[:, None] + (pos < remv[:, None])
+    # deficit rows: greedy steal, each donor gives at most freq - 1
+    caps = np.where(present_pref, freqs_ord - 1, 0)
+    cum = np.cumsum(caps, axis=1)
+    need = np.where(deficit, -diff, 0)
+    if (need > cum[:, -1]).any():
+        raise AssertionError(
+            "rANS freq normalization stalled: deficit exceeds donor "
+            "capacity (histogram invariant violated)"
+        )
+    steal = np.clip(need[:, None] - (cum - caps), 0, caps)
+    delta = np.where(surplus[:, None], inc, -steal)
+    np.put_along_axis(freqs, order, freqs_ord + delta, axis=1)
+    return np.where(totals[:, None] > 0, freqs, 0)
 
 
 def _rans_encode_plane(sym: np.ndarray, freqs: np.ndarray, cums: np.ndarray, k: int) -> bytes:
@@ -414,15 +540,35 @@ def _rans_encode(q: np.ndarray) -> bytes:
     nplanes = max(1, (zmax.bit_length() + 7) // 8)
     k = max(1, min(_RANS_K, q.size))  # fewer states -> less header on tiny streams
     parts = [struct.pack("<qQBB", med, q.size, nplanes, k)]
+    eng = _rans_device(q.size * nplanes) if k == _RANS_K else None
+    if eng is not None:
+        # one fused device call over all planes (planes = machine rows)
+        sym_mat = np.empty((nplanes, q.size), dtype=np.int32)
+        freqs_mat = np.empty((nplanes, 256), dtype=np.int64)
+        for p in range(nplanes):
+            np.copyto(
+                sym_mat[p], (zz >> np.uint64(8 * p)) & np.uint64(0xFF),
+                casting="unsafe",
+            )
+            freqs_mat[p] = _rans_normalize_freqs(
+                np.bincount(sym_mat[p], minlength=256)
+            )
+        res = _rans_device_encode(eng, sym_mat, freqs_mat)
+        if res is not None:
+            states, words_list = res
+            for p in range(nplanes):
+                words = words_list[p]
+                parts.append(_rans_plane_table(freqs_mat[p]))
+                parts.append(states[p].astype("<u4").tobytes())
+                parts.append(struct.pack("<I", words.size))
+                parts.append(words.astype("<u2").tobytes())
+            return b"".join(parts)
     for p in range(nplanes):
         sym = ((zz >> np.uint64(8 * p)) & np.uint64(0xFF)).astype(np.int64)
         counts = np.bincount(sym, minlength=256)
         freqs = _rans_normalize_freqs(counts)
         cums = np.concatenate(([0], np.cumsum(freqs)[:-1]))
-        present = freqs > 0
-        bitmap = np.packbits(present.astype(np.uint8), bitorder="little")
-        parts.append(bitmap.tobytes())
-        parts.append(freqs[present].astype("<u2").tobytes())
+        parts.append(_rans_plane_table(freqs))
         parts.append(_rans_encode_plane(sym, freqs, cums, k))
     return b"".join(parts)
 
@@ -460,65 +606,81 @@ def _rans_encode_batch(qs: np.ndarray) -> list[bytes]:
     for p in range(max_planes):
         sel = np.flatnonzero(nplanes > p)
         rows.extend((int(s), p) for s in sel)
-        sym_blocks.append(((zz[sel] >> np.uint64(8 * p)) & np.uint64(0xFF)).astype(np.int64))
+        zsel = zz if sel.size == s_count else zz[sel]
+        plane = zsel if p == 0 else zsel >> np.uint64(8 * p)
+        # int32 symbols: half the memory traffic of int64 through the
+        # histogram and the device cube
+        sym_blocks.append((plane & np.uint64(0xFF)).astype(np.int32))
     r_count = len(rows)
     if r_count == 0:
         return [b"".join(p) for p in parts]
     sym = np.concatenate(sym_blocks, axis=0) if max_planes > 1 else sym_blocks[0]
-    offsets = np.arange(r_count, dtype=np.int64)[:, None] * 256
+    offsets = np.arange(r_count, dtype=np.int32)[:, None] * 256
     flat_idx = sym + offsets
     counts = np.bincount(flat_idx.ravel(), minlength=256 * r_count).reshape(
         r_count, 256
     )
-    freqs = np.empty((r_count, 256), dtype=np.int64)
-    for i in range(r_count):
-        freqs[i] = _rans_normalize_freqs(counts[i])
-    cums = np.zeros_like(freqs)
-    np.cumsum(freqs[:, :-1], axis=1, out=cums[:, 1:])
-    # All loop state fits in uint32 (x < 2^32, freq <= 2^12): half the memory
-    # traffic of a uint64 machine.  Lay the lookups out [steps, R, k] so each
-    # step reads a contiguous block.
-    def _per_step(table: np.ndarray) -> np.ndarray:
-        flat = np.take(table.astype(np.uint32).ravel(), flat_idx)
-        if n < steps * k:
-            flat = np.pad(flat, ((0, 0), (0, steps * k - n)), constant_values=1)
-        return np.ascontiguousarray(
-            flat.reshape(r_count, steps, k).transpose(1, 0, 2)
-        )
+    freqs = _rans_normalize_freqs_rows(counts)
+    words_list: list[np.ndarray] | None = None
+    states32: np.ndarray | None = None
+    eng = _rans_device(sym.size) if k == _RANS_K else None
+    if eng is not None:
+        res = _rans_device_encode(eng, sym, freqs)
+        if res is not None:
+            states_dev, words_list = res
+            states32 = states_dev.astype("<u4")
+    if words_list is None:
+        cums = np.zeros_like(freqs)
+        np.cumsum(freqs[:, :-1], axis=1, out=cums[:, 1:])
+        # All loop state fits in uint32 (x < 2^32, freq <= 2^12): half the
+        # memory traffic of a uint64 machine.  Lay the lookups out
+        # [steps, R, k] so each step reads a contiguous block.
+        def _per_step(table: np.ndarray) -> np.ndarray:
+            flat = np.take(table.astype(np.uint32).ravel(), flat_idx)
+            if n < steps * k:
+                flat = np.pad(flat, ((0, 0), (0, steps * k - n)), constant_values=1)
+            return np.ascontiguousarray(
+                flat.reshape(r_count, steps, k).transpose(1, 0, 2)
+            )
 
-    f3 = _per_step(freqs)
-    c3 = _per_step(cums)
-    # renorm threshold minus one: x >= f << 20  <=>  x > (f << 20) - 1.  For
-    # f == 2^12 the shift wraps to 0 and the -1 to 0xFFFFFFFF, which a uint32
-    # state can never exceed — exactly the "never renormalize" semantics the
-    # uint64 single-stream coder gets for a whole-table symbol.
-    f3_renorm_m1 = (f3 << np.uint32(32 - _RANS_PROB_BITS)) - np.uint32(1)
-    sh16 = np.uint32(16)
-    sh_prob = np.uint32(_RANS_PROB_BITS)
-    x = np.full((r_count, k), _RANS_L, dtype=np.uint32)
-    masks = np.zeros((steps, r_count, k), dtype=bool)
-    vals = np.zeros((steps, r_count, k), dtype=np.uint16)
-    for t in range(steps - 1, -1, -1):
-        a = tail if t == steps - 1 else k
-        f = f3[t, :, :a]
-        xa = x[:, :a]
-        need = xa > f3_renorm_m1[t, :, :a]
-        masks[t, :, :a] = need
-        np.copyto(vals[t, :, :a], xa, casting="unsafe")  # truncating low-16 store
-        xa = np.where(need, xa >> sh16, xa)
-        div, rem = np.divmod(xa, f)
-        x[:, :a] = (div << sh_prob) + rem + c3[t, :, :a]
-    freqs16 = freqs.astype("<u2")
-    states32 = x.astype("<u4")
-    native_le = vals.dtype.byteorder in ("=", "<") and np.little_endian
-    for i, (s, _p) in enumerate(rows):
-        present = freqs[i] > 0
-        bitmap = np.packbits(present, bitorder="little")
+        f3 = _per_step(freqs)
+        c3 = _per_step(cums)
+        # renorm threshold minus one: x >= f << 20  <=>  x > (f << 20) - 1.
+        # For f == 2^12 the shift wraps to 0 and the -1 to 0xFFFFFFFF, which
+        # a uint32 state can never exceed — exactly the "never renormalize"
+        # semantics the uint64 single-stream coder gets for a whole-table
+        # symbol.
+        f3_renorm_m1 = (f3 << np.uint32(32 - _RANS_PROB_BITS)) - np.uint32(1)
+        sh16 = np.uint32(16)
+        sh_prob = np.uint32(_RANS_PROB_BITS)
+        x = np.full((r_count, k), _RANS_L, dtype=np.uint32)
+        masks = np.zeros((steps, r_count, k), dtype=bool)
+        vals = np.zeros((steps, r_count, k), dtype=np.uint16)
+        for t in range(steps - 1, -1, -1):
+            a = tail if t == steps - 1 else k
+            f = f3[t, :, :a]
+            xa = x[:, :a]
+            need = xa > f3_renorm_m1[t, :, :a]
+            masks[t, :, :a] = need
+            np.copyto(vals[t, :, :a], xa, casting="unsafe")  # truncating low-16 store
+            xa = np.where(need, xa >> sh16, xa)
+            div, rem = np.divmod(xa, f)
+            x[:, :a] = (div << sh_prob) + rem + c3[t, :, :a]
         # masks/vals are indexed by decode step already, so flat boolean
-        # extraction yields decoder order: steps ascending, lanes ascending
-        words = vals[:, i, :][masks[:, i, :]]
-        parts[s].append(bitmap.tobytes())
-        parts[s].append(freqs16[i][present].tobytes())
+        # extraction yields decoder order per row: steps asc, lanes asc
+        need_t = np.ascontiguousarray(masks.transpose(1, 0, 2))
+        flat_w = np.ascontiguousarray(vals.transpose(1, 0, 2))[need_t]
+        wcounts = need_t.reshape(r_count, -1).sum(axis=1)
+        words_list = np.split(flat_w, np.cumsum(wcounts)[:-1])
+        states32 = x.astype("<u4")
+    freqs16 = freqs.astype("<u2")
+    presents = freqs > 0
+    bitmaps = np.packbits(presents, axis=1, bitorder="little")
+    native_le = np.little_endian
+    for i, (s, _p) in enumerate(rows):
+        words = words_list[i]
+        parts[s].append(bitmaps[i].tobytes())
+        parts[s].append(freqs16[i][presents[i]].tobytes())
         parts[s].append(states32[i].tobytes())
         parts[s].append(struct.pack("<I", words.size))
         parts[s].append(words.tobytes() if native_le else words.astype("<u2").tobytes())
@@ -563,15 +725,35 @@ def _rans_encode_batch_ragged(qs: list[np.ndarray]) -> list[bytes]:
     k = _RANS_K
     meds = {}
     zzs = {}
+    npls = {}
+    # equal-length streams (e.g. the pyramid layers of one series, or
+    # same-length series in a batch) share one vectorized median/zigzag
+    # pass — one partition per length group instead of one python
+    # round-trip per stream
+    by_len: dict[int, list[int]] = {}
+    for i in big:
+        by_len.setdefault(qs[i].size, []).append(i)
+    for idxs in by_len.values():
+        if len(idxs) == 1:
+            i = idxs[0]
+            med = int(np.median(qs[i]))
+            zz = _zigzag(qs[i] - med)
+            meds[i], zzs[i] = med, zz
+            npls[i] = max(1, (int(zz.max()).bit_length() + 7) // 8)
+        else:
+            qstack = np.stack([qs[i] for i in idxs])
+            gm = np.median(qstack, axis=1).astype(np.int64)
+            zzm = _zigzag(qstack - gm[:, None])
+            zmaxs = zzm.max(axis=1)
+            for row, i in enumerate(idxs):
+                meds[i] = int(gm[row])
+                zzs[i] = zzm[row]
+                npls[i] = max(1, (int(zmaxs[row]).bit_length() + 7) // 8)
     rows: list[tuple[int, int]] = []  # (stream index, plane), plane-ascending
     syms: list[np.ndarray] = []
     for i in big:
-        q = qs[i]
-        med = int(np.median(q))
-        zz = _zigzag(q - med)
-        meds[i], zzs[i] = med, zz
-        nplanes = max(1, (int(zz.max()).bit_length() + 7) // 8)
-        for p in range(nplanes):
+        zz = zzs[i]
+        for p in range(npls[i]):
             rows.append((i, p))
             syms.append(((zz >> np.uint64(8 * p)) & np.uint64(0xFF)).astype(np.int64))
     r_count = len(rows)
@@ -581,7 +763,25 @@ def _rans_encode_batch_ragged(qs: list[np.ndarray]) -> list[bytes]:
     row_freqs: list[np.ndarray] = [None] * r_count  # type: ignore[list-item]
     row_states: list[bytes] = [b""] * r_count
     row_words: list[np.ndarray] = [None] * r_count  # type: ignore[list-item]
-    if int(steps_r.max()) * r_count * k <= _RANS_DENSE_CELLS:
+    # The device engine pads every row of a group to the group's longest row
+    # (identity-symbol no-ops), so when it is in play, rows are ALWAYS split
+    # into power-of-two step-count groups — padding waste stays < 2x even
+    # for skewed length mixes.  The numpy machine's dense-prefix loop does
+    # no padded work, so it only splits when the scratch cube would blow
+    # past _RANS_DENSE_CELLS.
+    eng = _rans_device(int(ns.sum()))
+    if (
+        eng is not None
+        and not eng.compiled_route()
+        and os.environ.get("SHRINK_RANS_DEVICE") != "1"
+        and int(ns.sum()) < _RANS_DEVICE_RAGGED_MIN_XLA
+    ):
+        # CPU fallback route: a ragged mix means SEVERAL padded group
+        # dispatches, and the dense-prefix numpy machine (zero padded work,
+        # one pass) beats them below this size.  The compiled TPU kernels
+        # win at any size; forced mode ("1") keeps parity tests on-engine.
+        eng = None
+    if eng is None and int(steps_r.max()) * r_count * k <= _RANS_DENSE_CELLS:
         groups = [np.arange(r_count)]  # one dense machine: zero work waste
     else:
         # geometric step-count groups: within a group max <= 2 * min steps
@@ -590,7 +790,7 @@ def _rans_encode_batch_ragged(qs: list[np.ndarray]) -> list[bytes]:
     for ids in groups:
         _rans_encode_row_group(
             [syms[r] for r in ids], ids, steps_r, k,
-            row_freqs, row_states, row_words,
+            row_freqs, row_states, row_words, eng=eng,
         )
     native_le = np.little_endian
     parts: dict[int, list[bytes]] = {
@@ -598,14 +798,15 @@ def _rans_encode_batch_ragged(qs: list[np.ndarray]) -> list[bytes]:
                         max(1, (int(zzs[i].max()).bit_length() + 7) // 8), k)]
         for i in big
     }
+    freqs_all = np.stack(row_freqs)
+    present_all = freqs_all > 0
+    bitmaps = np.packbits(present_all, axis=1, bitorder="little")
+    freqs16 = freqs_all.astype("<u2")
     for r in range(r_count):  # original order: planes ascending per stream
         i, _p = rows[r]
-        freqs = row_freqs[r]
-        present = freqs > 0
-        bitmap = np.packbits(present, bitorder="little")
         words = row_words[r]
-        parts[i].append(bitmap.tobytes())
-        parts[i].append(freqs.astype("<u2")[present].tobytes())
+        parts[i].append(bitmaps[r].tobytes())
+        parts[i].append(freqs16[r][present_all[r]].tobytes())
         parts[i].append(row_states[r])
         parts[i].append(struct.pack("<I", words.size))
         parts[i].append(words.tobytes() if native_le else words.astype("<u2").tobytes())
@@ -622,11 +823,14 @@ def _rans_encode_row_group(
     row_freqs: list,
     row_states: list,
     row_words: list,
+    eng=None,
 ) -> None:
     """Run the interleaved state machine for one step-count group of
     (stream, plane) rows; results land in the per-row output lists (see
     ``_rans_encode_batch_ragged`` for the grouping/identity-symbol
-    scheme)."""
+    scheme).  When ``eng`` (the device engine) is given, the whole group
+    runs as one fused device call, falling back to the numpy machine on
+    engine failure."""
     r_count = len(group_ids)
     order = np.argsort(-steps_r[group_ids], kind="stable")  # longest first
     steps_sorted = steps_r[group_ids][order]
@@ -635,12 +839,24 @@ def _rans_encode_row_group(
     # per-row tables with a reserved 257th entry: the identity symbol
     # (freq = M, cum = 0) that padded lane positions carry
     _ID = 256
-    freqs = np.empty((r_count, 256), dtype=np.int64)
+    counts = np.empty((r_count, 256), dtype=np.int64)
     sym_mat = np.full((r_count, max_steps * k), _ID, dtype=np.uint16)
     for pos, j in enumerate(order):
         sy = group_syms[j]
-        freqs[pos] = _rans_normalize_freqs(np.bincount(sy, minlength=256))
+        counts[pos] = np.bincount(sy, minlength=256)
         sym_mat[pos, : sy.size] = sy
+    freqs = _rans_normalize_freqs_rows(counts)
+    if eng is not None:
+        res = _rans_device_encode(eng, sym_mat, freqs)
+        if res is not None:
+            states_dev, words_list = res
+            states32 = states_dev.astype("<u4")
+            for pos, j in enumerate(order):
+                r = int(group_ids[j])
+                row_freqs[r] = freqs[pos]
+                row_states[r] = states32[pos].tobytes()
+                row_words[r] = words_list[pos]
+            return
     cums = np.zeros_like(freqs)
     np.cumsum(freqs[:, :-1], axis=1, out=cums[:, 1:])
     f_ext = np.full((r_count, 257), _RANS_M, dtype=np.uint32)
@@ -719,19 +935,61 @@ def encode_ints_batch(
 
 def _rans_decode(data: bytes) -> np.ndarray:
     med, count, nplanes, k = struct.unpack_from("<qQBB", data, 0)
+    eng = _rans_device(count * nplanes) if k == _RANS_K else None
+    if eng is not None:
+        try:
+            # engine exceptions may be data-dependent (corrupt freq tables),
+            # so do not quarantine the engine — rerun on the numpy path,
+            # which raises the decoder's usual error for bad streams
+            return _rans_decode_device(data, med, count, nplanes, k, eng)
+        except Exception:
+            pass
     off = 18
     zz = np.zeros(count, dtype=np.uint64)
     for p in range(nplanes):
-        bitmap = np.frombuffer(data, dtype=np.uint8, count=32, offset=off)
-        off += 32
-        present = np.unpackbits(bitmap, bitorder="little").astype(bool)
-        npresent = int(present.sum())
-        freqs = np.zeros(256, dtype=np.int64)
-        freqs[present] = np.frombuffer(data, dtype="<u2", count=npresent, offset=off)
-        off += 2 * npresent
+        freqs, off = _rans_read_plane_table(data, off)
         cums = np.concatenate(([0], np.cumsum(freqs)[:-1]))
         sym, off = _rans_decode_plane(data, off, count, freqs, cums, k)
         zz |= sym.astype(np.uint64) << np.uint64(8 * p)
+    return _unzigzag(zz) + med
+
+
+def _rans_read_plane_table(data: bytes, off: int) -> tuple[np.ndarray, int]:
+    """Read one plane's frequency table (32B presence bitmap + u16 per
+    present symbol); returns (freqs int64 [256], new off)."""
+    bitmap = np.frombuffer(data, dtype=np.uint8, count=32, offset=off)
+    off += 32
+    present = np.unpackbits(bitmap, bitorder="little").astype(bool)
+    npresent = int(present.sum())
+    freqs = np.zeros(256, dtype=np.int64)
+    freqs[present] = np.frombuffer(data, dtype="<u2", count=npresent, offset=off)
+    off += 2 * npresent
+    return freqs, off
+
+
+def _rans_decode_device(
+    data: bytes, med: int, count: int, nplanes: int, k: int, eng
+) -> np.ndarray:
+    """Device decode: walk every plane's header on the host, then run all
+    planes through one fused device scan (planes = machine rows)."""
+    freqs_mat = np.empty((nplanes, 256), dtype=np.int64)
+    states = np.empty((nplanes, k), dtype=np.uint32)
+    words_list: list[np.ndarray] = []
+    off = 18
+    for p in range(nplanes):
+        freqs_mat[p], off = _rans_read_plane_table(data, off)
+        states[p] = np.frombuffer(data, dtype="<u4", count=k, offset=off)
+        off += 4 * k
+        (nwords,) = struct.unpack_from("<I", data, off)
+        off += 4
+        words_list.append(
+            np.frombuffer(data, dtype="<u2", count=nwords, offset=off)
+        )
+        off += 2 * nwords
+    syms = eng.decode_rows(states, freqs_mat, words_list, count)
+    zz = np.zeros(count, dtype=np.uint64)
+    for p in range(nplanes):
+        zz |= syms[p].astype(np.uint64) << np.uint64(8 * p)
     return _unzigzag(zz) + med
 
 

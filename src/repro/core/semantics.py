@@ -46,6 +46,10 @@ __all__ = [
 ]
 
 _INF = math.inf
+# row-block size (in elements) for the batched cone scan: big enough to
+# amortize per-block python overhead, small enough that the [rows, T]
+# temporaries stay cache-resident (measured sweet spot on the bench box)
+_BATCH_BLOCK_ELEMS = 64 * 1024
 
 
 def global_range(values: np.ndarray) -> tuple[float, float]:
@@ -185,6 +189,26 @@ def extract_semantics_batch(
     if values.ndim != 2:
         raise ValueError(f"expected [S, T], got shape {values.shape}")
     s, n = values.shape
+    # Cache blocking: the scan's whole-matrix passes (fluctuation table,
+    # re-scan gathers) stream [S, T]-sized temporaries, which for large
+    # batches fall out of cache and run ~1.5x slower than row blocks that
+    # fit.  Rows are independent (each is bit-identical to the scalar
+    # scan), so block outputs concatenate unchanged.
+    rows_blk = max(1, _BATCH_BLOCK_ELEMS // max(1, n))
+    if s > rows_blk:
+        blocks: list[list[Segment]] = []
+        for lo in range(0, s, rows_blk):
+            blocks.extend(
+                extract_semantics_batch(
+                    values[lo : lo + rows_blk],
+                    config,
+                    chunk=chunk,
+                    lengths=None
+                    if lengths is None
+                    else np.asarray(lengths, dtype=np.int64)[lo : lo + rows_blk],
+                )
+            )
+        return blocks
     out: list[list[Segment]] = [[] for _ in range(s)]
     if n == 0 or s == 0:
         return out

@@ -80,6 +80,7 @@ __all__ = [
     "cs_to_bytes",
     "cs_from_bytes",
     "decompress_at",
+    "encode_frames_with_bases",
     "encode_with_base",
     "original_size_bytes",
 ]
@@ -163,7 +164,7 @@ class ShrinkCodec:
         decimals: int | None = None,
         semantics: str = "auto",
         lengths: np.ndarray | None = None,
-        max_buckets: int = 4,
+        max_buckets: int | None = None,
     ) -> list[CompressedSeries]:
         """Batched Alg. 1 over S independent series — rectangular or ragged.
 
@@ -177,7 +178,10 @@ class ShrinkCodec:
 
         Ragged inputs are length-bucketed into ≤ ``max_buckets`` padded
         lanes (percentile buckets over the sorted lengths, so each bucket
-        holds similarly sized series and padding waste stays bounded) and
+        holds similarly sized series and padding waste stays bounded;
+        ``None`` scales the bucket count with the series count — about one
+        bucket per 4 series, between 4 and 16, so wide length spreads
+        don't drown the masked scans in padding) and
         every stage runs the valid-length mask path: the multi-series cone
         scan carries per-lane segment IDs/lengths so padding never leaks
         into cones, residual quantization cuts each stream at its series'
@@ -250,7 +254,10 @@ class ShrinkCodec:
         if semantics == "pallas" and n:
             seg_lists = extract_semantics_batch_pallas(values, self.config)
         else:
-            seg_lists = extract_semantics_batch(values, self.config)
+            # scalar early-exit scan per row: faster than the masked
+            # multi-series scan on CPU (see _compress_batch_ragged), and
+            # segment-identical to it
+            seg_lists = [extract_semantics(values[i], self.config) for i in range(s)]
 
         vmins = values.min(axis=1) if n else np.zeros(s)
         vmaxs = values.max(axis=1) if n else np.zeros(s)
@@ -258,35 +265,9 @@ class ShrinkCodec:
             construct_base(seg_lists[i], n, float(vmins[i]), float(vmaxs[i]), self.config)
             for i in range(s)
         ]
-        base_bytes = [encode_base(b) for b in bases]
-        preds = base_predictions_batch(bases) if s else np.zeros((0, n))
-        eps_hats = np.array(
-            [practical_eps_b(values[i], bases[i], pred=preds[i]) for i in range(s)]
+        return encode_frames_with_bases(
+            values, bases, eps_targets, decimals, backend=self.backend
         )
-
-        tiers = normalize_tiers(eps_targets, decimals)
-        layer_streams = quantize_pyramid_batch(values, preds, tiers, decimals)
-        # ONE entropy pass for every layer of every series: the rANS batch
-        # interleaves all of them into a single vectorized state machine
-        todo = [
-            (i, k, st)
-            for i in range(s)
-            for k, st in enumerate(layer_streams[i])
-            if st is not None
-        ]
-        blobs = entropy.encode_ints_batch([st.q for _, _, st in todo], backend=self.backend)
-        payloads: list[list[bytes | None]] = [[None] * len(tiers) for _ in range(s)]
-        for (i, k, _), blob in zip(todo, blobs):
-            payloads[i][k] = blob
-        return [
-            CompressedSeries(
-                base=bases[i],
-                base_bytes=base_bytes[i],
-                pyramid=pyramid_layers(tiers, layer_streams[i], payloads[i]),
-                eps_b_practical=float(eps_hats[i]),
-            )
-            for i in range(s)
-        ]
 
     def _compress_batch_ragged(
         self,
@@ -295,15 +276,17 @@ class ShrinkCodec:
         eps_targets: list[float],
         decimals: int | None,
         semantics: str,
-        max_buckets: int,
+        max_buckets: int | None,
     ) -> list[CompressedSeries]:
         """Mixed-length lanes: percentile length-buckets, masked scans, one
         shared entropy pass.  Byte-identical (numpy semantics) to a
         per-series ``compress`` loop."""
         tiers = normalize_tiers(eps_targets, decimals)
+        s = len(arrs)
+        if max_buckets is None:
+            max_buckets = int(np.clip(s // 4, 4, 16))
         if max_buckets < 1:
             raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
-        s = len(arrs)
         bases: list[Base | None] = [None] * s
         base_bytes: list[bytes | None] = [None] * s
         eps_hats = np.zeros(s)
@@ -340,7 +323,11 @@ class ShrinkCodec:
             if semantics == "pallas":
                 seg_lists = extract_semantics_batch_pallas(vals, self.config, lengths=nb)
             else:
-                seg_lists = extract_semantics_batch(vals, self.config, lengths=nb)
+                # On CPU the adaptive early-exit scalar scan beats the
+                # masked multi-series scan (which pre-computes division
+                # tables for every position to feed the TPU lanes); the
+                # segments are identical either way (property-tested)
+                seg_lists = [extract_semantics(arrs[i], self.config) for i in bucket]
             valid = np.arange(t_pad)[None, :] < nb[:, None]
             vmins = np.where(valid, vals, np.inf).min(axis=1)
             vmaxs = np.where(valid, vals, -np.inf).max(axis=1)
@@ -552,6 +539,51 @@ def encode_with_base(
         pyramid=pyramid_layers(tiers, streams, payloads),
         eps_b_practical=eps_hat,
     )
+
+
+def encode_frames_with_bases(
+    values: np.ndarray,
+    bases: list[Base],
+    eps_targets: list[float],
+    decimals: int | None = None,
+    backend: str = "best",
+) -> list[CompressedSeries]:
+    """Batched ``encode_with_base`` over F equal-length frames whose bases
+    are already constructed: one prediction pass, one pyramid
+    quantization, and ONE entropy pass across every layer of every frame
+    — each output byte-identical to
+    ``encode_with_base(values[f], bases[f], ...)``.  Shared by the
+    rectangular batch compressor and the streaming sealer (which batches
+    every frame completed by a single ingest call)."""
+    f_count, n = values.shape
+    base_bytes = [encode_base(b) for b in bases]
+    preds = base_predictions_batch(bases) if f_count else np.zeros((0, n))
+    eps_hats = [
+        practical_eps_b(values[i], bases[i], pred=preds[i]) for i in range(f_count)
+    ]
+    tiers = normalize_tiers(eps_targets, decimals)
+    layer_streams = quantize_pyramid_batch(values, preds, tiers, decimals)
+    # ONE entropy pass for every layer of every frame: the rANS batch
+    # interleaves all of them into a single vectorized state machine
+    todo = [
+        (i, k, st)
+        for i in range(f_count)
+        for k, st in enumerate(layer_streams[i])
+        if st is not None
+    ]
+    blobs = entropy.encode_ints_batch([st.q for _, _, st in todo], backend=backend)
+    payloads: list[list[bytes | None]] = [[None] * len(tiers) for _ in range(f_count)]
+    for (i, k, _), blob in zip(todo, blobs):
+        payloads[i][k] = blob
+    return [
+        CompressedSeries(
+            base=bases[i],
+            base_bytes=base_bytes[i],
+            pyramid=pyramid_layers(tiers, layer_streams[i], payloads[i]),
+            eps_b_practical=float(eps_hats[i]),
+        )
+        for i in range(f_count)
+    ]
 
 
 def cs_to_bytes(cs: CompressedSeries) -> bytes:

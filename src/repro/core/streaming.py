@@ -74,8 +74,14 @@ from .serialize import (
     read_varint,
     write_varint,
 )
-from .shrink import cs_from_bytes, cs_to_bytes, decompress_at, encode_with_base
-from .types import FrameMeta, Segment, ShrinkConfig
+from .shrink import (
+    cs_from_bytes,
+    cs_to_bytes,
+    decompress_at,
+    encode_frames_with_bases,
+    encode_with_base,
+)
+from .types import Base, FrameMeta, Segment, ShrinkConfig
 
 __all__ = [
     "KnowledgeBase",
@@ -86,6 +92,11 @@ __all__ = [
 ]
 
 _INF = math.inf
+# Deferred-encode watermark: collected frames accumulate until this many
+# samples are pending, then drain through one fused residual+entropy batch.
+# Keeps per-ingest fixed dispatch costs (jit launch, device transfer)
+# amortized even when callers feed small chunks.
+_PENDING_ENCODE_SAMPLES = 128 * 1024
 _KB_MAGIC = b"SHKB"
 _KB_VERSION = 1
 _RAW_SLOPE = 255
@@ -360,6 +371,13 @@ class ShrinkStreamCodec:
             self._delta = self.value_range[1] - self.value_range[0]
         self._series: dict[int, _SeriesState] = {}
         self._sealed: list[tuple[int, int, int, int, bytes]] = []
+        # frames collected but not yet residual-encoded: encoding is
+        # deferred until _PENDING_ENCODE_SAMPLES accumulate (or a flush),
+        # so frames completed by *different* ingest calls still share one
+        # fused residual+entropy batch instead of paying a device/pipeline
+        # round-trip per call
+        self._pending: list[tuple[int, int, np.ndarray, Base, int, int]] = []
+        self._pending_n = 0
 
     # -- ingest -------------------------------------------------------- #
     def ingest(self, values_chunk, series_id: int = 0) -> list[tuple[int, int, int]]:
@@ -373,13 +391,20 @@ class ShrinkStreamCodec:
             while st.n_buf >= self.frame_len:
                 if self.incremental:
                     self._advance(st, avail=self.frame_len, final=True)
-                sealed.append(self._seal(int(series_id), st, self.frame_len))
+                p = self._collect(int(series_id), st, self.frame_len)
+                self._pending.append(p)
+                self._pending_n += p[2].size
+                sealed.append((p[1], p[4], p[5]))
+            if self._pending_n >= _PENDING_ENCODE_SAMPLES:
+                self._drain_pending()  # amortize dispatch across ingest calls
         if self.incremental and st.n_buf:
             self._advance(st, avail=st.n_buf, final=False)
         return sealed
 
     def flush(self, series_id: int | None = None) -> list[tuple[int, int, int]]:
-        """Seal the open (partial) frame of one series, or of all series."""
+        """Seal the open (partial) frame of one series, or of all series.
+        Flushing also drains every deferred frame payload, so ``_sealed``
+        is fully materialized afterwards."""
         sids = [series_id] if series_id is not None else sorted(self._series)
         sealed = []
         for sid in sids:
@@ -388,7 +413,11 @@ class ShrinkStreamCodec:
                 continue
             if self.incremental:
                 self._advance(st, avail=st.n_buf, final=True)
-            sealed.append(self._seal(sid, st, st.n_buf))
+            p = self._collect(sid, st, st.n_buf)
+            self._pending.append(p)
+            self._pending_n += p[2].size
+            sealed.append((p[1], p[4], p[5]))
+        self._drain_pending()
         return sealed
 
     def finalize(self) -> bytes:
@@ -406,6 +435,7 @@ class ShrinkStreamCodec:
         return [(sid, lo, hi, ep) for sid, lo, hi, ep, _ in self._sealed]
 
     def stats(self) -> dict:
+        self._drain_pending()  # payload_bytes counts encoded frames only
         payload_bytes = sum(len(p) for *_, p in self._sealed)
         ingested = sum(st.total_ingested for st in self._series.values())
         return {
@@ -493,7 +523,12 @@ class ShrinkStreamCodec:
             break
 
     # -- frame sealing ------------------------------------------------- #
-    def _seal(self, series_id: int, st: _SeriesState, frame_n: int) -> tuple[int, int, int]:
+    def _collect(
+        self, series_id: int, st: _SeriesState, frame_n: int
+    ) -> tuple[int, int, np.ndarray, Base, int, int]:
+        """Close one frame: fix its semantics/base, advance the knowledge
+        base (epoch order is collect order), reserve its slot in the sealed
+        log, and leave the residual-encoding work to ``_drain_pending``."""
         frame_vals = st.buf[:frame_n].copy()
         if self.incremental:
             segments = st.segments
@@ -507,15 +542,46 @@ class ShrinkStreamCodec:
             else:
                 vmin, vmax = global_range(frame_vals)
         base = construct_base(segments, frame_n, float(vmin), float(vmax), self.config)
-        cs = encode_with_base(
-            frame_vals, base, self.eps_targets, self.decimals, backend=self.backend
-        )
-        payload = cs_to_bytes(cs)
         self.kb.ingest_base(base)
         t_lo, t_hi = st.start, st.start + frame_n
-        self._sealed.append((series_id, t_lo, t_hi, self.kb.epoch, payload))
+        slot = len(self._sealed)
+        self._sealed.append((series_id, t_lo, t_hi, self.kb.epoch, b""))
         st.drop_prefix(frame_n)
-        return (series_id, t_lo, t_hi)
+        return (slot, series_id, frame_vals, base, t_lo, t_hi)
+
+    def _drain_pending(self) -> None:
+        """Residual-encode every deferred frame and fill its reserved
+        payload slot.  Equal-length frames (the common case: full frames
+        collected across ingest calls) share one fused batch pass; odd
+        sizes (partial flush frames) encode singly.  The batched path
+        produces bytes identical to the per-frame one."""
+        pending, self._pending = self._pending, []
+        self._pending_n = 0
+        if not pending:
+            return
+        by_size: dict[int, list[tuple[int, int, np.ndarray, Base, int, int]]] = {}
+        for p in pending:
+            by_size.setdefault(p[2].size, []).append(p)
+        for group in by_size.values():
+            if len(group) == 1:
+                _, _, frame_vals, base, _, _ = group[0]
+                cs_list = [
+                    encode_with_base(
+                        frame_vals, base, self.eps_targets, self.decimals,
+                        backend=self.backend,
+                    )
+                ]
+            else:
+                cs_list = encode_frames_with_bases(
+                    np.stack([p[2] for p in group]),
+                    [p[3] for p in group],
+                    self.eps_targets,
+                    self.decimals,
+                    backend=self.backend,
+                )
+            for (slot, _sid, _vals, _base, _lo, _hi), cs in zip(group, cs_list):
+                sid, lo, hi, epoch, _ = self._sealed[slot]
+                self._sealed[slot] = (sid, lo, hi, epoch, cs_to_bytes(cs))
 
 
 # --------------------------------------------------------------------- #

@@ -22,6 +22,8 @@ from .cone_scan import cone_scan_pallas
 from .flash_attention import flash_attention_pallas
 from .dequant import dequant_reconstruct_pallas, pyramid_reconstruct_pallas
 from .interval_stats import interval_stats_pallas
+from .rans import decode_rows as rans_decode_rows
+from .rans import encode_rows as rans_encode_rows
 from .residual_quant import pyramid_quant_pallas, residual_quant_pallas
 from .segment_agg import segment_agg_pallas
 
@@ -34,6 +36,8 @@ __all__ = [
     "pyramid_reconstruct",
     "cone_scan",
     "cone_scan_segments",
+    "rans_decode_rows",
+    "rans_encode_rows",
     "segment_agg",
     "use_interpret",
 ]

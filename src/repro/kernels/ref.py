@@ -28,6 +28,8 @@ __all__ = [
     "pyramid_reconstruct_ref",
     "cone_scan_ref",
     "segment_agg_ref",
+    "rans_encode_ref",
+    "rans_decode_ref",
 ]
 
 
@@ -253,3 +255,109 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool =
         s = jnp.where(kpos <= qpos, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Interleaved K-lane rANS (the device entropy engine's step machines)
+# --------------------------------------------------------------------- #
+#
+# Layout shared with core.entropy and kernels/rans.py: symbol i of a stream
+# lives in lane i % K at step i // K, states are uint32 in [2^16, 2^32)
+# with 16-bit renormalization and M = 2^12 probability bits.  Rows are
+# independent (stream, plane) pairs; per-row tables carry a reserved 257th
+# "identity" symbol (freq = M, cum = 0) whose rANS transform is exactly
+# x -> x and whose renorm threshold (f << 20) - 1 wraps to the uint32 max,
+# so padded steps and rows are byte-exact no-ops — that is what lets the
+# host pad step counts and row counts to powers of two for jit-cache reuse
+# without changing a single emitted word.
+
+_RANS_PROB_BITS = 12
+_RANS_M = 1 << _RANS_PROB_BITS
+_RANS_L = 1 << 16
+
+
+def rans_encode_ref(
+    sym_cube: jax.Array, f_ext: jax.Array, c_ext: jax.Array, unroll: int = 8
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Encode step machine: walk steps backward (rANS is LIFO), all R*K
+    states advancing as one [R, K] vector op per step.
+
+    sym_cube[T, R, K] int32 in [0, 256] (256 = identity pad symbol),
+    f_ext/c_ext[R, 257] uint32 (row tables + identity column).  Returns
+    (states[R, K] uint32, need[T, R, K] bool, vals[T, R, K] uint16): step
+    t's renormalizing lanes are ``need[t]`` and the 16-bit words they
+    emitted are ``vals[t][need[t]]`` — already indexed by DECODE step, so
+    flat boolean extraction in (row, step asc, lane asc) order yields the
+    wire's word stream directly.
+    """
+    r, k = sym_cube.shape[1], sym_cube.shape[2]
+    f_flat = f_ext.reshape(-1)
+    c_flat = c_ext.reshape(-1)
+    row_off = (jnp.arange(r, dtype=jnp.int32) * 257)[:, None]
+    x0 = jnp.full((r, k), _RANS_L, jnp.uint32)
+
+    def body(x, syms):
+        idx = syms + row_off
+        f = f_flat[idx]
+        c = c_flat[idx]
+        # renorm threshold minus one: x >= f << 20  <=>  x > (f << 20) - 1;
+        # f == 2^12 wraps to 0xFFFFFFFF -> "never renormalize"
+        need = x > (f << jnp.uint32(32 - _RANS_PROB_BITS)) - jnp.uint32(1)
+        val = x.astype(jnp.uint16)  # truncating low-16 store
+        x = jnp.where(need, x >> jnp.uint32(16), x)
+        div = x // f
+        rem = x - div * f
+        x = (div << jnp.uint32(_RANS_PROB_BITS)) + rem + c
+        return x, (need, val)
+
+    x, (need, vals) = jax.lax.scan(body, x0, sym_cube, reverse=True, unroll=unroll)
+    return x, need, vals
+
+
+def rans_decode_ref(
+    states: jax.Array,
+    slot2sym: jax.Array,
+    f_tab: jax.Array,
+    c_tab: jax.Array,
+    words: jax.Array,
+    act: jax.Array,
+    unroll: int = 4,
+) -> jax.Array:
+    """Decode step machine: walk steps forward; within a step the
+    renormalizing lanes consume words in ascending lane order (a lane-axis
+    cumsum indexes the row's word stream).
+
+    states[R, K] uint32 (final encoder states), slot2sym[R, M] int32,
+    f_tab/c_tab[R, 256] uint32, words[R, W] uint16 (row-padded),
+    act[T, R, K] bool marks live symbol positions — padded steps, padded
+    rows, and the last step's tail lanes must neither emit symbols nor
+    consume words.  Returns syms[T, R, K] uint8.
+    """
+    r, k = states.shape
+    maxw = words.shape[1]
+    s2s_flat = slot2sym.reshape(-1)
+    f_flat = f_tab.reshape(-1)
+    c_flat = c_tab.reshape(-1)
+    w_flat = words.reshape(-1)
+    row_off_m = (jnp.arange(r, dtype=jnp.int32) * _RANS_M)[:, None]
+    row_off_s = (jnp.arange(r, dtype=jnp.int32) * 256)[:, None]
+    row_off_w = (jnp.arange(r, dtype=jnp.int32) * maxw)[:, None]
+    pos0 = jnp.zeros((r,), jnp.int32)
+
+    def body(carry, a):
+        x, pos = carry
+        slot = (x & jnp.uint32(_RANS_M - 1)).astype(jnp.int32)
+        s = s2s_flat[slot + row_off_m]
+        f = f_flat[s + row_off_s]
+        c = c_flat[s + row_off_s]
+        x2 = f * (x >> jnp.uint32(_RANS_PROB_BITS)) + slot.astype(jnp.uint32) - c
+        need = (x2 < _RANS_L) & a
+        kidx = pos[:, None] + jnp.cumsum(need.astype(jnp.int32), axis=1) - 1
+        w = w_flat[jnp.clip(kidx, 0, None) + row_off_w]
+        x2 = jnp.where(need, (x2 << jnp.uint32(16)) | w.astype(jnp.uint32), x2)
+        pos = pos + need.sum(axis=1, dtype=jnp.int32)
+        x = jnp.where(a, x2, x)
+        return (x, pos), s.astype(jnp.uint8)
+
+    (_, _), syms = jax.lax.scan(body, (states, pos0), act, unroll=unroll)
+    return syms

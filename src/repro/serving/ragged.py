@@ -78,8 +78,8 @@ class RaggedBatcher:
                       this (None disables; flush on deadline/finalize only).
     flush_deadline_s: latency trigger — flush when the oldest pending
                       sample has waited this long (None disables).
-    max_buckets:      percentile length-buckets per flush (see
-                      ``ShrinkCodec.compress_batch``).
+    max_buckets:      percentile length-buckets per flush (None = scale
+                      with series count; see ``ShrinkCodec.compress_batch``).
     semantics:        scan route forwarded to ``compress_batch`` ("auto" |
                       "numpy" | "pallas").
     kb:               share a KnowledgeBase across batchers/codecs.
@@ -94,7 +94,7 @@ class RaggedBatcher:
         backend: str = "rans",
         flush_samples: int | None = 262_144,
         flush_deadline_s: float | None = None,
-        max_buckets: int = 4,
+        max_buckets: int | None = None,
         semantics: str = "auto",
         kb: KnowledgeBase | None = None,
         clock: Callable[[], float] = time.monotonic,

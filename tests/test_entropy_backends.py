@@ -127,6 +127,10 @@ def test_rans_speed_advantage_over_rc():
     import time
 
     q = np.round(_RNG.standard_normal(50_000) * 200).astype(np.int64)
+    # steady-state comparison: the first rans call may lazily import the
+    # device engine and jit-compile its scans — warm that up outside the
+    # timed region
+    entropy.decode_ints(entropy.encode_ints(q, backend="rans"))
     t0 = time.perf_counter()
     blob_rc = entropy.encode_ints(q, backend="rc")
     entropy.decode_ints(blob_rc)
@@ -136,3 +140,80 @@ def test_rans_speed_advantage_over_rc():
     entropy.decode_ints(blob_ra)
     t_ra = time.perf_counter() - t0
     assert t_ra * 3 < t_rc, f"rans {t_ra:.3f}s vs rc {t_rc:.3f}s"
+
+
+def test_normalize_freqs_255_rare_symbols_regression():
+    """255 symbols with count 1 plus one dominant symbol: normalization
+    must shrink the dominant symbol's share, never steal a rare symbol's
+    last unit (the old round-robin could drive present symbols to 0,
+    making their streams undecodable)."""
+    counts = np.ones(256, dtype=np.int64)
+    counts[0] = 10**9
+    freqs = entropy._rans_normalize_freqs(counts)
+    assert int(freqs.sum()) == entropy._RANS_M
+    assert (freqs[1:] >= 1).all()
+    assert freqs[0] == entropy._RANS_M - 255
+    # and the resulting table round-trips an actual worst-case stream
+    q = np.concatenate([np.zeros(100_000, np.int64), np.arange(255) + 1])
+    blob = entropy.encode_ints(q, backend="rans")
+    np.testing.assert_array_equal(entropy.decode_ints(blob), q)
+
+
+def test_normalize_freqs_rows_matches_scalar():
+    """The row-vectorized normalizer the batched encoders use must be
+    byte-identical per row to the scalar function on adversarial mixes:
+    uniform, dominant+rare, single-symbol, sparse, huge counts, empty."""
+    rng = np.random.default_rng(7)
+    rows = [
+        np.ones(256, dtype=np.int64),
+        np.zeros(256, dtype=np.int64),
+        rng.integers(0, 1000, 256).astype(np.int64),
+    ]
+    dom = np.ones(256, dtype=np.int64)
+    dom[17] = 10**9
+    rows.append(dom)
+    single = np.zeros(256, dtype=np.int64)
+    single[200] = 12345
+    rows.append(single)
+    sparse = np.zeros(256, dtype=np.int64)
+    sparse[rng.choice(256, 7, replace=False)] = rng.integers(1, 2**40, 7)
+    rows.append(sparse)
+    rows.append(rng.integers(0, 2**30, 256).astype(np.int64))
+    mat = np.stack(rows)
+    got = entropy._rans_normalize_freqs_rows(mat)
+    for r in range(mat.shape[0]):
+        np.testing.assert_array_equal(
+            got[r], entropy._rans_normalize_freqs(mat[r]), err_msg=f"row {r}"
+        )
+
+
+def test_normalize_freqs_property():
+    """For any histogram: present symbols keep freq >= 1, absent symbols
+    stay 0, and the table sums to exactly M."""
+    pytest.importorskip("hypothesis", reason="property test needs hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def _histograms(draw):
+        n_present = draw(st.integers(min_value=1, max_value=256))
+        idx = draw(
+            st.lists(
+                st.integers(min_value=0, max_value=255),
+                min_size=n_present, max_size=n_present, unique=True,
+            )
+        )
+        counts = np.zeros(256, dtype=np.int64)
+        for i in idx:
+            counts[i] = draw(st.integers(min_value=1, max_value=2**40))
+        return counts
+
+    @given(_histograms())
+    @settings(max_examples=300, deadline=None)
+    def check(counts):
+        freqs = entropy._rans_normalize_freqs(counts)
+        assert int(freqs.sum()) == entropy._RANS_M
+        present = counts > 0
+        assert (freqs[present] >= 1).all()
+        assert (freqs[~present] == 0).all()
+
+    check()
