@@ -1,0 +1,104 @@
+"""Fleet benchmarks: sharded serving scaling and multi-tenant admission.
+
+``fleet_json`` drives :func:`repro.launch.serve.run_fleet_sim` — the same
+seeded Poisson mixed workload behind ``--mode fleet`` — once on 1 shard
+and once on 4 shards over identical traffic, and reports:
+
+* per-request ingest/query latency (p50/p99, wall clock);
+* aggregate ingest throughput under the **critical-path model**: on this
+  single-CPU container the shards execute sequentially, so the aggregate
+  rate a one-worker-per-shard deployment would sustain is
+  ``total bytes / max(per-shard busy time)`` — the slowest shard is the
+  fleet's critical path (docs/fleet.md documents the model and its
+  assumptions honestly; nothing here pretends to be a multi-core wall
+  clock);
+* the cross-shard differential + shard-kill chaos tallies, which double
+  as a zero-silent-corruption gate inside the bench itself.
+
+Claims:
+
+``C_fleet_scaling``      — 1 -> 4 shards grows aggregate critical-path
+                           ingest throughput >= 1.5x (hash placement over
+                           enough series balances the shards; perfect
+                           balance would be 4x).
+``C_fleet_no_silent``    — the bench's differential checks find zero
+                           silent corruptions and zero cross-shard byte
+                           mismatches (sharding is semantically
+                           invisible, measured not just unit-tested).
+"""
+from __future__ import annotations
+
+from repro.launch.serve import run_fleet_sim
+
+from .datasets import save_result
+
+
+def fleet_json(quick: bool = False) -> dict:
+    kw = (
+        dict(series=16, ticks=60, queries=96, flush_samples=1024)
+        if quick
+        else dict(series=48, ticks=240, queries=256, flush_samples=2048)
+    )
+    base = run_fleet_sim(n_shards=1, check=False, kill=False, **kw)
+    sharded = run_fleet_sim(n_shards=4, check=True, kill=True, **kw)
+    out = {
+        "quick": quick,
+        "workload": {
+            "series": sharded["series"],
+            "samples": sharded["samples"],
+            "mb": round(sharded["mb"], 3),
+            "quota_rejected_ingest": sharded["ingest"]["rejected_quota"],
+        },
+        "one_shard": {
+            "agg_mb_s": round(base["ingest"]["agg_mb_s"], 2),
+            "critical_path_s": round(base["ingest"]["critical_path_s"], 4),
+            "ingest_p50_ms": round(base["ingest"]["p50_ms"], 4),
+            "ingest_p99_ms": round(base["ingest"]["p99_ms"], 4),
+            "query_p50_ms": round(base["query"]["p50_ms"], 4),
+            "query_p99_ms": round(base["query"]["p99_ms"], 4),
+        },
+        "four_shards": {
+            "agg_mb_s": round(sharded["ingest"]["agg_mb_s"], 2),
+            "critical_path_s": round(sharded["ingest"]["critical_path_s"], 4),
+            "busy_s": sharded["ingest"]["busy_s"],
+            "ingest_p50_ms": round(sharded["ingest"]["p50_ms"], 4),
+            "ingest_p99_ms": round(sharded["ingest"]["p99_ms"], 4),
+            "query_p50_ms": round(sharded["query"]["p50_ms"], 4),
+            "query_p99_ms": round(sharded["query"]["p99_ms"], 4),
+            "queries": {
+                k: sharded["query"][k] for k in ("ok", "degraded", "error", "SILENT")
+            },
+            "shard_kill": sharded["kill"],
+            "kb_syncs": sharded["kb"]["syncs"],
+        },
+        "scaling_1_to_4": round(
+            sharded["ingest"]["agg_mb_s"] / base["ingest"]["agg_mb_s"], 3
+        ),
+        "silent": sharded["silent"],
+        "byte_mismatch": sharded["byte_mismatch"],
+    }
+    save_result("fleet", out)
+    return out
+
+
+def validate_claims(fl: dict) -> dict:
+    checks = {
+        "C_fleet_scaling": {
+            "scaling_1_to_4": fl["scaling_1_to_4"],
+            "one_shard_mb_s": fl["one_shard"]["agg_mb_s"],
+            "four_shard_mb_s": fl["four_shards"]["agg_mb_s"],
+            "pass": fl["scaling_1_to_4"] >= 1.5,
+        },
+        "C_fleet_no_silent": {
+            "silent": fl["silent"],
+            "byte_mismatch": fl["byte_mismatch"],
+            "queries_checked": fl["four_shards"]["queries"]["ok"]
+            + fl["four_shards"]["queries"]["degraded"]
+            + fl["four_shards"]["queries"]["error"],
+            "pass": fl["silent"] == 0
+            and fl["byte_mismatch"] == 0
+            and fl["four_shards"]["queries"]["ok"] > 0,
+        },
+    }
+    save_result("claims_fleet", checks)
+    return checks

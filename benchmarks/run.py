@@ -16,6 +16,7 @@ import time
 from . import (
     bench_analytics,
     bench_compression,
+    bench_fleet,
     bench_progressive,
     bench_ragged,
     bench_robustness,
@@ -232,6 +233,35 @@ def main(argv=None) -> int:
         f"{cc['silent']} SILENT"
     )
     checks.update(bench_robustness.validate_claims(rob))
+
+    print("\n== Sharded serving fleet (scaling, tenancy, cross-shard diff) ==")
+    fl = bench_fleet.fleet_json(quick=args.quick)
+    engine["fleet"] = fl
+    one, four = fl["one_shard"], fl["four_shards"]
+    print(
+        f"  workload[{fl['workload']['series']} series, "
+        f"{fl['workload']['samples']:,} samples, {fl['workload']['mb']:.1f}MB, "
+        f"{fl['workload']['quota_rejected_ingest']} quota-rejected]"
+    )
+    print(
+        f"  1 shard : {one['agg_mb_s']:6.1f}MB/s  "
+        f"ingest p50={one['ingest_p50_ms']:.2f}ms p99={one['ingest_p99_ms']:.2f}ms  "
+        f"query p50={one['query_p50_ms']:.2f}ms p99={one['query_p99_ms']:.2f}ms"
+    )
+    print(
+        f"  4 shards: {four['agg_mb_s']:6.1f}MB/s  "
+        f"ingest p50={four['ingest_p50_ms']:.2f}ms p99={four['ingest_p99_ms']:.2f}ms  "
+        f"query p50={four['query_p50_ms']:.2f}ms p99={four['query_p99_ms']:.2f}ms  "
+        f"(critical-path scaling {fl['scaling_1_to_4']:.2f}x)"
+    )
+    q, k = four["queries"], four["shard_kill"]
+    print(
+        f"  diff: {q['ok']} ok / {q['degraded']} degraded / {q['error']} typed / "
+        f"{q['SILENT']} SILENT; shard-kill [{k.get('fault', '')}] "
+        f"{k['ok']} ok / {k['degraded']} degraded / {k['error']} typed / "
+        f"{k['SILENT']} SILENT; byte mismatches={fl['byte_mismatch']}"
+    )
+    checks.update(bench_fleet.validate_claims(fl))
     # machine-readable perf trajectory for future PRs to diff against; only
     # full-size runs update the repo-root trajectory (quick numbers live in
     # artifacts/bench via save_result and must not clobber the baseline)

@@ -11,6 +11,7 @@ from .errors import (  # noqa: F401
     DeadlineExceededError,
     FormatError,
     LayerCorruptError,
+    QuotaExceededError,
     RangeCoverageError,
     ShrinkError,
     TransientError,
@@ -76,5 +77,6 @@ from .streaming import (  # noqa: F401
     decode_range,
     decode_series,
     read_knowledge_base,
+    routing_metadata,
 )
 from . import entropy, serialize  # noqa: F401

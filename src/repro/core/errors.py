@@ -19,6 +19,7 @@ the corrupt unit instead of failing the whole query.  The taxonomy:
     ├── ``TransientError``     retryable (injected flake, timeout, I/O)
     ├── ``DeadlineExceededError``  per-request deadline blew
     ├── ``BackpressureError``  bounded queue full, request shed
+    │   └── ``QuotaExceededError``  per-tenant admission quota exhausted
     └── ``CircuitOpenError``   per-frame breaker open, decode skipped
 
 Deliberately ``ValueError`` at the root: the pre-taxonomy API contract
@@ -44,6 +45,7 @@ __all__ = [
     "TransientError",
     "DeadlineExceededError",
     "BackpressureError",
+    "QuotaExceededError",
     "CircuitOpenError",
 ]
 
@@ -146,6 +148,14 @@ class DeadlineExceededError(ShrinkError):
 class BackpressureError(ShrinkError):
     """The bounded admission queue is full and the request could not be
     shed to degraded (coarse-tier) service."""
+
+
+class QuotaExceededError(BackpressureError):
+    """A tenant's admission quota (token bucket) is exhausted and the
+    request could not be shed to a coarser tier.  Subclasses
+    :class:`BackpressureError`: quota exhaustion IS backpressure, scoped
+    to one tenant instead of the whole gateway — handlers that shed or
+    retry-later on backpressure keep working unchanged."""
 
 
 class CircuitOpenError(ShrinkError):

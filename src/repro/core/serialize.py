@@ -49,6 +49,7 @@ __all__ = [
     "FramedWriter",
     "parse_framed_container",
     "frame_payload",
+    "kb_snapshot_id",
 ]
 
 _BASE_MAGIC = b"SHRB"
@@ -490,6 +491,17 @@ def parse_framed_container(blob: bytes) -> tuple[list[FrameMeta], bytes]:
             f"corrupt SHRKS container: footer parse failed: {e}"
         ) from e
     return metas, kb_bytes
+
+
+def kb_snapshot_id(kb_bytes: bytes) -> int:
+    """Routing identity of a container's serialized knowledge-base
+    snapshot: the CRC-32 of the footer's ``SHKB`` blob (0 for containers
+    written without one).  Two containers carrying byte-identical KB
+    snapshots — e.g. replicas of one shard — share an id; a snapshot that
+    gained entries gets a new one.  This identifies a concrete *serialized
+    snapshot*; for the insertion-order-invariant semantic identity use
+    ``KnowledgeBase.snapshot_id()`` (``core/streaming.py``)."""
+    return zlib.crc32(bytes(kb_bytes)) & 0xFFFFFFFF if kb_bytes else 0
 
 
 def frame_payload(blob: bytes, meta: FrameMeta, verify_crc: bool = True) -> bytes:

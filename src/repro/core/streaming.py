@@ -52,6 +52,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import struct
+import zlib
 
 import numpy as np
 
@@ -70,6 +71,7 @@ from .serialize import (
     _read_svarint,
     _write_svarint,
     frame_payload,
+    kb_snapshot_id,
     parse_framed_container,
     read_varint,
     write_varint,
@@ -89,6 +91,7 @@ __all__ = [
     "decode_range",
     "decode_series",
     "read_knowledge_base",
+    "routing_metadata",
 ]
 
 _INF = math.inf
@@ -186,6 +189,40 @@ class KnowledgeBase:
             self.entries[eid].refs += e.refs
             remap.append(eid)
         return remap
+
+    def canonical(self) -> dict[tuple, int]:
+        """Insertion-order-invariant view: ``{(level, origin_idx,
+        slope_key...): refs}``.  Two KBs that hold the same lines with the
+        same total refcounts — e.g. the single-process KB versus the merge
+        of shard KBs in ANY order — have equal canonical maps even though
+        their positional entry ids differ."""
+        out: dict[tuple, int] = {}
+        for e in self.entries:
+            key = (e.level, e.origin_idx) + _slope_key(e.slope, e.slope_digits)
+            out[key] = out.get(key, 0) + e.refs
+        return out
+
+    def snapshot_id(self) -> int:
+        """Semantic snapshot identity: CRC-32 over the *sorted* canonical
+        entries (plus the config triple), so it is invariant under entry
+        insertion order and therefore under KB merge order.  Used by the
+        fleet to tag KB sync epochs; the companion
+        ``serialize.kb_snapshot_id`` identifies one concrete serialized
+        blob instead."""
+        buf = bytearray()
+        buf += struct.pack(
+            "<ddB", self.config.eps_b, self.config.lam, self.config.beta_levels
+        )
+        for key, refs in sorted(self.canonical().items()):
+            level, oidx, digits, scaled = key
+            buf += struct.pack("<Bq", level & 0xFF, oidx)
+            buf.append(digits & 0xFF)
+            if digits == _RAW_SLOPE:
+                buf += scaled  # packed f64 bytes
+            else:
+                buf += struct.pack("<q", scaled)
+            buf += struct.pack("<q", refs)
+        return zlib.crc32(bytes(buf)) & 0xFFFFFFFF
 
     def release(self, entry_ids: list[int]) -> None:
         """Drop one reference per id (e.g. a frame was deleted)."""
@@ -650,3 +687,27 @@ def read_knowledge_base(blob: bytes) -> KnowledgeBase | None:
     ``None`` for containers written without one."""
     _, kb_bytes = parse_framed_container(blob)
     return KnowledgeBase.from_bytes(kb_bytes) if kb_bytes else None
+
+
+def routing_metadata(blob: bytes) -> dict:
+    """The routing-relevant view of a ``SHRKS`` container: which series it
+    holds, every frame's KB epoch, and the ids of the KB snapshot riding
+    in its footer.  The fleet router uses this to verify the decode
+    invariant *before* placing a shard in service: every frame's
+    ``kb_epoch`` must be <= the footer KB's entry count, i.e. the shipped
+    snapshot already contains every line the frame references
+    (``self_contained``).  A container whose KB lags its frames — e.g. a
+    replica paired with a stale KB snapshot — is routable only against a
+    newer snapshot with a matching ``kb_semantic_id`` lineage."""
+    metas, kb_bytes = parse_framed_container(blob)
+    kb = KnowledgeBase.from_bytes(kb_bytes) if kb_bytes else None
+    max_epoch = max((m.kb_epoch for m in metas), default=0)
+    return {
+        "frames": [(m.series_id, m.t_lo, m.t_hi, m.kb_epoch) for m in metas],
+        "series_ids": sorted({m.series_id for m in metas}),
+        "kb_entries": kb.epoch if kb is not None else 0,
+        "kb_snapshot_id": kb_snapshot_id(kb_bytes),
+        "kb_semantic_id": kb.snapshot_id() if kb is not None else 0,
+        "max_frame_epoch": max_epoch,
+        "self_contained": kb is not None and max_epoch <= kb.epoch,
+    }

@@ -26,6 +26,13 @@ ragged multi-sensor gateway ingest through the admission scheduler.
     # non-zero on ANY silent corruption
     PYTHONPATH=src python -m repro.launch.serve --mode chaos \
         --series 4 --points 16384 --frame-len 2048 --fault-rate 0.01
+
+    # sharded multi-tenant fleet: Poisson mixed workload (ingest + range +
+    # analytics) over N shards with per-tenant admission quotas; p50/p99
+    # latencies, critical-path aggregate MB/s, cross-shard differential
+    # check vs the 1-shard oracle, and a shard-kill chaos tail — exits
+    # non-zero on any silent corruption or cross-shard byte mismatch
+    PYTHONPATH=src python -m repro.launch.serve --mode fleet --shards 4
 """
 from __future__ import annotations
 
@@ -381,11 +388,276 @@ def _serve_chaos(args) -> int:
     return 0 if silent == 0 else 1
 
 
+class _SimClock:
+    """Deterministic monotonic clock for quota/deadline decisions: the sim
+    advances it a fixed step per tick, so admission outcomes replay
+    byte-identically from the seed (wall latencies are measured separately
+    with ``perf_counter``)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _gen_traffic(series: int, ticks: int, seed: int):
+    """Poisson sensor mix: per-series arrival probability and mean chunk
+    size span an order of magnitude; each admitted chunk continues that
+    series' random walk.  Returns (per-tick [(sid, chunk)], full history)."""
+    rng = np.random.default_rng(seed)
+    rates = 10.0 ** rng.uniform(-0.8, 0.0, size=series)
+    means = rng.integers(24, 160, size=series)
+    last = np.zeros(series)
+    traffic, history = [], {i: [] for i in range(series)}
+    for _ in range(ticks):
+        tick = []
+        for sid in range(series):
+            if rng.random() < rates[sid]:
+                m = 1 + int(rng.poisson(means[sid]))
+                chunk = np.round(last[sid] + np.cumsum(rng.standard_normal(m) * 0.05), 4)
+                last[sid] = chunk[-1]
+                tick.append((sid, chunk))
+                history[sid].append(chunk)
+        traffic.append(tick)
+    return traffic, history
+
+
+def _pcts(ms: list[float]) -> dict:
+    if not ms:
+        return {"p50_ms": 0.0, "p99_ms": 0.0}
+    a = np.asarray(ms)
+    return {"p50_ms": float(np.percentile(a, 50)), "p99_ms": float(np.percentile(a, 99))}
+
+
+def _ingest_fleet(traffic, n_shards: int, flush_samples: int, tick_dt: float = 0.01):
+    """Drive one fleet through the traffic, attributing each submit's wall
+    time to the owning shard (the critical-path throughput model: on one
+    host the shards run sequentially; a real fleet runs them on the mesh's
+    "data" axis, so aggregate rate = total bytes / max per-shard busy)."""
+    from ..core import ShrinkConfig
+    from ..core.errors import QuotaExceededError
+    from ..serving import ShrinkFleet, TenantQuota
+
+    clk = _SimClock()
+    # four tenants round-robin over series; t3 runs on a tight bucket so
+    # quota rejection/shed paths are exercised deterministically
+    quotas = {
+        f"t{k}": TenantQuota(rate_per_s=4e6, burst=4e6, clock=clk) for k in range(3)
+    }
+    quotas["t3"] = TenantQuota(rate_per_s=2_000.0, burst=3_000.0, clock=clk)
+    fleet = ShrinkFleet(
+        ShrinkConfig(eps_b=0.4, lam=1e-4),
+        eps_targets=[8e-3],
+        n_shards=n_shards,
+        flush_samples=flush_samples,
+        tenant_of=lambda sid: f"t{sid % 4}",
+        quotas=quotas,
+        clock=clk,
+    )
+    busy = [0.0] * n_shards
+    lat_ms, admitted, rejected = [], {}, 0
+    for tick in traffic:
+        for sid, chunk in tick:
+            shard = fleet.shard_of(sid)
+            t0 = time.perf_counter()
+            try:
+                fleet.submit(sid, chunk)
+            except QuotaExceededError:
+                rejected += 1
+                continue
+            finally:
+                dt = time.perf_counter() - t0
+                busy[shard] += dt
+            lat_ms.append(dt * 1e3)
+            admitted.setdefault(sid, []).append(chunk)
+        clk.t += tick_dt
+        fleet.poll()
+    # seal: each shard pays for compressing its own residual pending pool
+    # (finalize is idempotent, so fleet.seal() below reuses these containers)
+    for i, b in enumerate(fleet.batchers):
+        t0 = time.perf_counter()
+        b.finalize()
+        busy[i] += time.perf_counter() - t0
+    fleet.seal()
+    return fleet, busy, lat_ms, admitted, rejected
+
+
+def run_fleet_sim(
+    n_shards: int = 4,
+    series: int = 32,
+    ticks: int = 120,
+    queries: int = 192,
+    flush_samples: int = 2048,
+    seed: int = 0,
+    check: bool = True,
+    kill: bool = True,
+) -> dict:
+    """The fleet simulation behind ``--mode fleet`` and the ``fleet``
+    BENCH section: Poisson mixed workload through a sharded multi-tenant
+    fleet, p50/p99 ingest+query latency, critical-path aggregate MB/s,
+    cross-shard differential vs the 1-shard oracle (``check``), and a
+    shard-kill chaos tail (``kill``).  Everything is seeded; the returned
+    dict's ``silent``/``byte_mismatch`` MUST be zero."""
+    from ..core import BYTES_PER_ROW
+    from ..serving import RangeQuery
+    from ..testing import ChaosInjector
+
+    eps = 8e-3
+    traffic, _ = _gen_traffic(series, ticks, seed)
+    fleet, busy, ingest_ms, admitted, rejected = _ingest_fleet(
+        traffic, n_shards, flush_samples
+    )
+    full = {sid: np.concatenate(cs) for sid, cs in admitted.items()}
+    samples = sum(v.size for v in full.values())
+    mb = samples * BYTES_PER_ROW / 1e6
+    critical = max(busy) if busy else 1e-12
+
+    def check_range(q, tally) -> None:
+        if q.error is not None:
+            tally["error"] += 1
+            return
+        err = float(np.abs(q.result - full[q.series_id][q.t0 : q.t1]).max())
+        if err > max(q.achieved, q.eps) * (1 + 1e-9):
+            tally["SILENT"] += 1
+        else:
+            tally["degraded" if q.degraded else "ok"] += 1
+
+    # mixed query workload: 70% range / 20% aggregate / 10% threshold count
+    qrng = np.random.default_rng(seed + 1)
+    sids = sorted(s for s, v in full.items() if v.size >= 16)
+    tally = {"ok": 0, "degraded": 0, "error": 0, "SILENT": 0}
+    query_ms = []
+    for qid in range(queries):
+        sid = int(qrng.choice(sids))
+        n = full[sid].size
+        lo = int(qrng.integers(0, n - 8))
+        hi = int(min(n, lo + 8 + qrng.integers(0, 4096)))
+        kind = qid % 10
+        t0 = time.perf_counter()
+        if kind < 7:
+            q = fleet.query(RangeQuery(qid=qid, series_id=sid, t0=lo, t1=hi, eps=eps))
+            query_ms.append((time.perf_counter() - t0) * 1e3)
+            check_range(q, tally)
+            continue
+        sl = full[sid][lo:hi]
+        if kind < 9:
+            ans = fleet.aggregate(sid, ("sum", "min")[kind % 2], lo, hi, eps=eps)
+            truth = float(sl.sum() if kind % 2 == 0 else sl.min())
+        else:
+            c = float(qrng.uniform(sl.min(), sl.max() + 1e-9))
+            ans = fleet.count_where(sid, "gt", c, lo, hi, eps=None)
+            truth = float((sl > c).sum())
+        query_ms.append((time.perf_counter() - t0) * 1e3)
+        if ans.lo - 1e-9 <= truth <= ans.hi + 1e-9:
+            tally["degraded" if ans.degraded else "ok"] += 1
+        else:
+            tally["SILENT"] += 1
+
+    # cross-shard differential: every series' frames byte-identical to the
+    # 1-shard oracle built from the same traffic
+    byte_mismatch = 0
+    if check and n_shards > 1:
+        oracle, _, _, _, _ = _ingest_fleet(traffic, 1, flush_samples)
+        for sid in sorted(full):
+            if fleet.series_frames(sid) != oracle.series_frames(sid):
+                byte_mismatch += 1
+        if fleet.global_kb.canonical() != oracle.global_kb.canonical():
+            byte_mismatch += 1
+
+    # shard-kill chaos tail: corrupt one shard, healthy shards must stay
+    # exact and the dead shard typed/flagged — never silent
+    kill_tally = {"ok": 0, "degraded": 0, "error": 0, "SILENT": 0}
+    fault_detail = ""
+    if kill and n_shards > 1:
+        chaos = ChaosInjector(seed=seed + 7)
+        fault = chaos.kill_shard(fleet, shard=0, mode="corrupt")
+        fault_detail = fault.detail
+        for qid in range(min(queries, 64)):
+            sid = int(qrng.choice(sids))
+            n = full[sid].size
+            lo = int(qrng.integers(0, n - 8))
+            hi = int(min(n, lo + 8 + qrng.integers(0, 2048)))
+            q = fleet.query(
+                RangeQuery(qid=10_000 + qid, series_id=sid, t0=lo, t1=hi, eps=eps)
+            )
+            check_range(q, kill_tally)
+
+    st = fleet.fleet_stats()
+    return {
+        "n_shards": n_shards,
+        "series": series,
+        "samples": samples,
+        "mb": mb,
+        "ingest": {
+            "chunks": len(ingest_ms),
+            "rejected_quota": rejected,
+            "busy_s": [round(b, 4) for b in busy],
+            "critical_path_s": critical,
+            "agg_mb_s": mb / critical,
+            **_pcts(ingest_ms),
+        },
+        "query": {"count": queries, **_pcts(query_ms), **tally},
+        "kill": {"fault": fault_detail, **kill_tally},
+        "kb": {
+            "syncs": st["kb_syncs"],
+            "global_entries": fleet.global_kb.epoch,
+            "semantic_id": fleet.global_kb.snapshot_id(),
+        },
+        "byte_mismatch": byte_mismatch,
+        "silent": tally["SILENT"] + kill_tally["SILENT"],
+    }
+
+
+def _serve_fleet(args) -> int:
+    """Sharded fleet simulation (see :func:`run_fleet_sim`); prints the
+    latency/throughput summary and fails on any silent corruption or
+    cross-shard byte divergence."""
+    scale = 0.25 if args.quick else 1.0
+    r = run_fleet_sim(
+        n_shards=args.shards,
+        series=max(8, int(args.series * 4 * scale)),
+        ticks=max(30, int(args.ticks * scale)),
+        queries=max(48, int(args.queries * scale)),
+        flush_samples=args.flush_samples,
+        seed=args.chaos_seed,
+    )
+    ing, q, k = r["ingest"], r["query"], r["kill"]
+    print(
+        f"fleet: {r['n_shards']} shards, {r['series']} series, "
+        f"{r['samples']:,} samples ({r['mb']:.1f} MB), "
+        f"{ing['chunks']} chunks admitted, {ing['rejected_quota']} quota-rejected"
+    )
+    print(
+        f"ingest: p50={ing['p50_ms']:.2f}ms p99={ing['p99_ms']:.2f}ms, "
+        f"critical path {ing['critical_path_s']:.2f}s -> {ing['agg_mb_s']:.1f} MB/s "
+        f"aggregate (busy per shard: {ing['busy_s']})"
+    )
+    print(
+        f"query: {q['count']} mixed (range/aggregate/count) "
+        f"p50={q['p50_ms']:.2f}ms p99={q['p99_ms']:.2f}ms — "
+        f"{q['ok']} ok, {q['degraded']} degraded, {q['error']} typed errors, "
+        f"{q['SILENT']} SILENT"
+    )
+    if k["fault"]:
+        print(
+            f"shard-kill [{k['fault']}]: {k['ok']} ok, {k['degraded']} degraded, "
+            f"{k['error']} typed errors, {k['SILENT']} SILENT"
+        )
+    print(
+        f"kb: {r['kb']['syncs']} syncs, {r['kb']['global_entries']} global entries; "
+        f"cross-shard diff vs 1-shard oracle: {r['byte_mismatch']} mismatches"
+    )
+    bad = r["silent"] + r["byte_mismatch"]
+    print(f"silent corruptions + byte mismatches: {bad}" + ("" if bad == 0 else "  <-- FAIL"))
+    return 0 if bad == 0 else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--mode",
-        choices=["model", "range", "ingest", "analytics", "chaos"],
+        choices=["model", "range", "ingest", "analytics", "chaos", "fleet"],
         default="model",
     )
     # model mode
@@ -416,8 +688,14 @@ def main(argv=None) -> int:
                     help="corrupt containers to generate (phase 1)")
     ap.add_argument("--queries-per-fault", type=int, default=8)
     ap.add_argument("--chaos-seed", type=int, default=0)
+    # fleet mode
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--quick", action="store_true",
+                    help="scaled-down fleet sim (CI smoke)")
     args = ap.parse_args(argv)
 
+    if args.mode == "fleet":
+        return _serve_fleet(args)
     if args.mode == "chaos":
         return _serve_chaos(args)
     if args.mode == "ingest":

@@ -1,3 +1,5 @@
-"""Distribution: logical-axis sharding, param partitioning, collectives."""
+"""Distribution: logical-axis sharding, param partitioning, collectives,
+and fleet partitioning (series->shard placement for the serving fleet)."""
 from .sharding import AxisRules, axis_rules, make_rules, shard  # noqa: F401
 from .partition import param_specs, param_shardings, fsdp_axes_for  # noqa: F401
+from .fleet import FleetPlan, plan_fleet, shard_of  # noqa: F401

@@ -14,6 +14,15 @@ that turns that traffic into efficient batched compression:
   - *deadline*: the oldest pending sample has waited ``flush_deadline_s``
     (latency bound — a slow sensor cannot stall the gateway forever).
   ``poll()`` checks the deadline without new data (call it from a timer).
+* ``scope="series"`` re-interprets BOTH triggers per series: a series
+  seals a frame when ITS OWN pending samples reach ``flush_samples`` or
+  its own oldest pending sample ages past ``flush_deadline_s``, and a
+  flush seals only the due series (co-pending neighbors keep buffering).
+  Frame boundaries are then a pure function of each series' own ingest
+  history — independent of which other series share the batcher — which
+  is the invariant the sharded fleet (``serving/fleet.py``) relies on to
+  make partitioning semantically invisible.  Due series flushing at the
+  same instant still share one ragged ``compress_batch``.
 * A flush runs ONE ragged ``ShrinkCodec.compress_batch`` over every pending
   buffer — percentile length-bucketing into padded lanes, masked cone
   scans, one shared rANS entropy pass (see ``docs/architecture.md``) — and
@@ -51,6 +60,7 @@ __all__ = ["RaggedBatcher"]
 @dataclasses.dataclass
 class _PendingSeries:
     start: int  # absolute sample index of the buffer's first sample
+    oldest: Optional[float] = None  # clock() when the buffer became nonempty
     chunks: list = dataclasses.field(default_factory=list)
     samples: int = 0
 
@@ -82,6 +92,11 @@ class RaggedBatcher:
                       with series count; see ``ShrinkCodec.compress_batch``).
     semantics:        scan route forwarded to ``compress_batch`` ("auto" |
                       "numpy" | "pallas").
+    scope:            "batch" (default) applies the triggers to the whole
+                      pending pool and a flush seals every pending series;
+                      "series" applies both triggers per series and seals
+                      only the due ones (shard-invariant frame boundaries
+                      — see the module docstring).
     kb:               share a KnowledgeBase across batchers/codecs.
     clock:            monotonic-seconds source (injectable for tests).
     """
@@ -96,6 +111,7 @@ class RaggedBatcher:
         flush_deadline_s: float | None = None,
         max_buckets: int | None = None,
         semantics: str = "auto",
+        scope: str = "batch",
         kb: KnowledgeBase | None = None,
         clock: Callable[[], float] = time.monotonic,
     ):
@@ -107,6 +123,9 @@ class RaggedBatcher:
             raise ConfigError(
                 f"flush_deadline_s must be >= 0, got {flush_deadline_s}"
             )
+        if scope not in ("batch", "series"):
+            raise ConfigError(f"scope must be 'batch' or 'series', got {scope!r}")
+        self.scope = scope
         self.codec = ShrinkCodec(config=config, backend=backend)
         self.eps_targets = list(eps_targets)
         self.decimals = decimals
@@ -120,7 +139,6 @@ class RaggedBatcher:
         self._pending: dict[int, _PendingSeries] = {}
         self._series_pos: dict[int, int] = {}  # next absolute sample index
         self._pending_samples = 0
-        self._oldest_submit: Optional[float] = None
         self._frames: list[tuple[int, int, int]] = []
         self._flushes = 0
         self._samples_in = 0
@@ -142,39 +160,79 @@ class RaggedBatcher:
             st = self._pending.get(sid)
             if st is None:
                 st = self._pending[sid] = _PendingSeries(
-                    start=self._series_pos.setdefault(sid, 0)
+                    start=self._series_pos.setdefault(sid, 0),
+                    oldest=self._clock(),
                 )
             st.append(vals)
             self._pending_samples += int(vals.size)
             self._samples_in += int(vals.size)
-            if self._oldest_submit is None:
-                self._oldest_submit = self._clock()
-        return self.flush() if self.due() else []
+        return self._maybe_flush()
 
     def due(self) -> bool:
-        """True when a flush trigger (size or deadline) has fired."""
-        if self._pending_samples == 0:
+        """True when a flush trigger (size or deadline) has fired.  Always
+        False once finalized: a late deadline timer must not re-seal."""
+        if self._finalized or self._pending_samples == 0:
             return False
+        if self.scope == "series":
+            return bool(self.due_series())
         if self.flush_samples is not None and self._pending_samples >= self.flush_samples:
             return True
-        return (
-            self.flush_deadline_s is not None
-            and self._oldest_submit is not None
-            and self._clock() - self._oldest_submit >= self.flush_deadline_s
-        )
+        if self.flush_deadline_s is None:
+            return False
+        oldest = min(ps.oldest for ps in self._pending.values())
+        return self._clock() - oldest >= self.flush_deadline_s
+
+    def due_series(self) -> list[int]:
+        """The series whose own size/deadline trigger has fired (meaningful
+        under ``scope="series"``; [] once finalized)."""
+        if self._finalized or not self._pending:
+            return []
+        now: Optional[float] = None
+        out = []
+        for sid, ps in self._pending.items():
+            if self.flush_samples is not None and ps.samples >= self.flush_samples:
+                out.append(sid)
+                continue
+            if self.flush_deadline_s is not None and ps.oldest is not None:
+                if now is None:
+                    now = self._clock()
+                if now - ps.oldest >= self.flush_deadline_s:
+                    out.append(sid)
+        return sorted(out)
 
     def poll(self) -> list[tuple[int, int, int]]:
         """Deadline check with no new data (drive from a timer loop)."""
+        return self._maybe_flush()
+
+    def _maybe_flush(self) -> list[tuple[int, int, int]]:
+        if self.scope == "series":
+            due = self.due_series()
+            return self.flush(due) if due else []
         return self.flush() if self.due() else []
 
     # -- flush / finalize ----------------------------------------------- #
-    def flush(self) -> list[tuple[int, int, int]]:
-        """Compress every pending buffer as one ragged batch and seal each
-        as a SHRKS frame; returns (series_id, t_lo, t_hi) per frame."""
-        if not self._pending:
+    def flush(self, series_ids=None) -> list[tuple[int, int, int]]:
+        """Compress pending buffers as one ragged batch and seal each as a
+        SHRKS frame; returns (series_id, t_lo, t_hi) per frame.
+        ``series_ids`` restricts the flush to a subset (None = all).
+
+        A flush after ``finalize`` is a NO-OP (returns []), and the buffers
+        being flushed are detached from the pending pool *before* any
+        compression work: a ``flush_deadline_s`` timer firing ``poll``
+        concurrently with ``finalize`` (or reentrantly from inside the
+        compression callback) can no longer double-seal the pending pool —
+        the second flush simply finds nothing pending."""
+        if self._finalized or not self._pending:
             return []
-        sids = sorted(self._pending)
-        arrs = [self._pending[sid].take() for sid in sids]
+        if series_ids is None:
+            sids = sorted(self._pending)
+        else:
+            sids = sorted(s for s in set(series_ids) if s in self._pending)
+            if not sids:
+                return []
+        taken = [(sid, self._pending.pop(sid)) for sid in sids]
+        self._pending_samples -= sum(ps.samples for _, ps in taken)
+        arrs = [ps.take() for _, ps in taken]
         css = self.codec.compress_batch(
             arrs,
             eps_targets=self.eps_targets,
@@ -183,19 +241,16 @@ class RaggedBatcher:
             max_buckets=self.max_buckets,
         )
         sealed = []
-        for sid, vals, cs in zip(sids, arrs, css):
+        for (sid, ps), vals, cs in zip(taken, arrs, css):
             payload = cs_to_bytes(cs)
             self.kb.ingest_base(cs.base)
-            t_lo = self._pending[sid].start
+            t_lo = ps.start
             t_hi = t_lo + int(vals.size)
             self._writer.add_frame(sid, t_lo, t_hi, self.kb.epoch, payload)
             self._payload_bytes += len(payload)
             self._series_pos[sid] = t_hi
             sealed.append((sid, t_lo, t_hi))
         self._frames.extend(sealed)
-        self._pending.clear()
-        self._pending_samples = 0
-        self._oldest_submit = None
         self._flushes += 1
         return sealed
 

@@ -10,6 +10,7 @@ from .chaos import (  # noqa: F401
     FlakyCallable,
     drop_frame,
     flip_byte,
+    kill_shard,
     list_frames,
     smash_frame_crc,
     truncate,

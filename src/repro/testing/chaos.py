@@ -14,7 +14,12 @@ as its oracle and assert the reader's reaction to the mutant:
   container with a coverage gap — the reader must detect the gap, not a
   broken checksum);
 * :class:`FlakyCallable` — wrap any decoder callable in seeded transient
-  failures and injected latency (for retry/circuit-breaker tests).
+  failures and injected latency (for retry/circuit-breaker tests);
+* :func:`kill_shard`     — take one shard of a serving fleet out (container
+  lost outright, or corrupted by any single-blob fault above); the fleet
+  must degrade SCOPED: healthy shards stay byte-exact, the dead shard's
+  queries come back as typed errors or flagged in-bound answers, never a
+  silent wrong byte (tests/test_chaos.py::TestShardKill).
 
 :class:`ChaosInjector` draws faults from a seeded RNG so a whole chaos
 campaign replays byte-identically from its seed (the CI ``chaos`` job and
@@ -45,6 +50,7 @@ __all__ = [
     "truncate",
     "smash_frame_crc",
     "drop_frame",
+    "kill_shard",
     "list_frames",
 ]
 
@@ -56,9 +62,11 @@ class Fault:
     """What a single injection did — enough to reproduce it by hand."""
 
     kind: str  # 'flip' | 'truncate' | 'crc_smash' | 'frame_drop' | 'flaky'
+    #     | 'shard_kill'
     offset: Optional[int] = None  # byte offset (flip), cut length (truncate)
     bit: Optional[int] = None
     frame_index: Optional[int] = None
+    shard: Optional[int] = None  # which fleet shard a shard_kill hit
     detail: str = ""
 
 
@@ -152,6 +160,49 @@ def drop_frame(blob: bytes, frame_index: int) -> tuple[bytes, Fault]:
     )
 
 
+def kill_shard(
+    fleet, shard: int, mode: str = "lost", injector: "ChaosInjector | None" = None
+) -> Fault:
+    """Take one shard of a serving fleet out of action.
+
+    ``fleet`` is duck-typed (anything with ``seal()`` and
+    ``inject_shard_blob(shard, blob)`` — in practice
+    :class:`repro.serving.ShrinkFleet`), keeping this module free of a
+    serving dependency.  Modes:
+
+    * ``"lost"``    — the shard's container is gone (replaced by empty
+      bytes): every query to it must come back a typed error;
+    * ``"corrupt"`` — one seeded single-blob fault (flip / truncate /
+      crc_smash / frame_drop) is applied to the shard's container: queries
+      must come back typed errors or flagged degraded answers with valid
+      bounds.
+
+    Either way the blast radius is ONE shard — the differential tests
+    assert every other shard still serves byte-exact.
+    """
+    blobs = fleet.seal()
+    if not 0 <= shard < len(blobs):
+        raise IndexError(f"shard {shard} outside fleet of {len(blobs)}")
+    if mode == "lost":
+        mutant = b""
+        fault = Fault(
+            kind="shard_kill", shard=shard,
+            detail=f"shard {shard}: container lost (replaced by empty blob)",
+        )
+    elif mode == "corrupt":
+        inj = injector if injector is not None else ChaosInjector(0)
+        mutant, inner = inj.corrupt(blobs[shard])
+        fault = Fault(
+            kind="shard_kill", shard=shard, offset=inner.offset,
+            bit=inner.bit, frame_index=inner.frame_index,
+            detail=f"shard {shard}: {inner.detail}",
+        )
+    else:
+        raise ValueError(f"unknown kill mode {mode!r}: expected 'lost'|'corrupt'")
+    fleet.inject_shard_blob(shard, mutant)
+    return fault
+
+
 # --------------------------------------------------------------------- #
 # decoder wrappers
 # --------------------------------------------------------------------- #
@@ -235,6 +286,16 @@ class ChaosInjector:
         if kind == "frame_drop":
             return drop_frame(blob, idx)
         raise ValueError(f"unknown fault kind {kind!r}")
+
+    def kill_shard(self, fleet, shard: int | None = None, mode: str | None = None) -> Fault:
+        """Kill a (randomly drawn, unless pinned) shard of ``fleet`` in a
+        (randomly drawn, unless pinned) mode, seeded from this stream."""
+        n = len(fleet.seal())
+        if shard is None:
+            shard = self.rng.randrange(n)
+        if mode is None:
+            mode = self.rng.choice(("lost", "corrupt"))
+        return kill_shard(fleet, shard, mode=mode, injector=self)
 
     def flaky(
         self,

@@ -53,6 +53,7 @@ from repro.testing import (
     FlakyCallable,
     drop_frame,
     flip_byte,
+    kill_shard,
     list_frames,
     smash_frame_crc,
     truncate,
@@ -460,3 +461,121 @@ def test_analytics_strict_raises_on_corrupt_frame(blob, fine_eps):
     eng = AnalyticsEngine(mutant)  # degraded_ok defaults to False
     with pytest.raises(CorruptFrameError):
         eng.aggregate(m.series_id, "mean", m.t_lo, m.t_hi, eps=fine_eps)
+
+
+# ------------------------------------------------------------ shard kill
+# Chaos under sharding: killing/corrupting ONE shard of a serving fleet
+# must degrade scoped to that shard — healthy shards keep serving
+# byte-exact answers, the dead shard's queries come back as typed errors
+# or honestly-flagged degraded answers, and NOTHING is ever silently
+# wrong (the fleet-level extension of the single-gateway contract above).
+def _mini_fleet(n_shards=4, seed=3):
+    from repro.serving import ShrinkFleet
+
+    rng = np.random.default_rng(seed)
+    cfg = ShrinkConfig(eps_b=0.5, lam=1e-4)
+    series = {
+        sid: np.round(np.cumsum(rng.standard_normal(200) * 0.1), 4)
+        for sid in range(8)
+    }
+    fleet = ShrinkFleet(
+        cfg, eps_targets=[0.05], n_shards=n_shards,
+        flush_samples=64, assignment=lambda sid: sid % n_shards,
+    )
+    for sid, v in series.items():
+        for i in range(0, 200, 48):
+            fleet.submit(sid, v[i : i + 48])
+    fleet.seal()
+    return fleet, series
+
+
+def test_kill_shard_lost_scopes_typed_errors_to_that_shard():
+    fleet, series = _mini_fleet()
+    baseline = {sid: fleet.series_frames(sid) for sid in series}
+    fault = kill_shard(fleet, 1, mode="lost")
+    assert fault.kind == "shard_kill" and fault.shard == 1
+
+    for sid, v in series.items():
+        q = fleet.query(RangeQuery(qid=sid, series_id=sid, t0=5, t1=195, eps=0.05))
+        if sid % 4 == 1:  # the dead shard: typed, never silent
+            assert q.error is not None, sid
+            assert q.error.split(":")[0].endswith("Error")
+        else:  # healthy shards: exact same bytes and in-bound answers
+            assert q.error is None, (sid, q.error)
+            assert fleet.series_frames(sid) == baseline[sid]
+            assert float(np.abs(q.result - v[5:195]).max()) <= 0.05 + 1e-9
+    assert 1 in fleet.shards_down()
+    assert fleet.fleet_stats()["shard_down_queries"] == 2  # series 1 and 5
+
+
+def test_kill_shard_corrupt_never_silent():
+    """Seeded sweep over corruption modes: every post-kill answer is
+    either typed, or flagged degraded within its own reported bound, or
+    plain correct — across ALL shards, killed or not."""
+    for seed in range(6):
+        fleet, series = _mini_fleet(seed=seed)
+        inj = ChaosInjector(seed=seed)
+        fault = inj.kill_shard(fleet, shard=2, mode="corrupt")
+        assert fault.kind == "shard_kill" and fault.shard == 2
+        for sid, v in series.items():
+            try:
+                q = fleet.query(
+                    RangeQuery(qid=sid, series_id=sid, t0=0, t1=200, eps=0.05)
+                )
+            except ShrinkError:
+                pytest.fail("fleet.query must park errors on q.error, not raise")
+            if q.error is not None:
+                assert sid % 4 == 2, (seed, sid, q.error)  # scoped to shard 2
+                continue
+            err = float(np.abs(q.result - v).max())
+            assert err <= max(q.achieved, q.eps) * (1 + 1e-9), (seed, sid)
+            if sid % 4 != 2:
+                assert not q.degraded  # healthy shards never even degrade
+
+
+def test_kill_shard_random_draw_is_seeded():
+    fleet_a, _ = _mini_fleet()
+    fleet_b, _ = _mini_fleet()
+    fa = ChaosInjector(seed=11).kill_shard(fleet_a)
+    fb = ChaosInjector(seed=11).kill_shard(fleet_b)
+    assert (fa.shard, fa.kind, fa.detail) == (fb.shard, fb.kind, fb.detail)
+
+
+def test_kill_shard_validates_arguments():
+    fleet, _ = _mini_fleet(n_shards=2)
+    with pytest.raises(IndexError):
+        kill_shard(fleet, 7, mode="lost")
+    with pytest.raises(ValueError):
+        kill_shard(fleet, 0, mode="nuke")
+
+
+def test_killed_shard_analytics_flagged_or_typed():
+    fleet, series = _mini_fleet()
+    kill_shard(fleet, 0, mode="corrupt", injector=ChaosInjector(seed=4))
+    for sid, v in series.items():
+        try:
+            ans = fleet.aggregate(sid, "mean", eps=0.05)
+        except ShrinkError:
+            assert sid % 4 == 0, sid  # typed failures only on the dead shard
+            continue
+        truth = float(v.mean())
+        if not ans.degraded:
+            assert ans.lo - 1e-9 <= truth <= ans.hi + 1e-9, sid
+
+
+def test_repair_restores_killed_shard():
+    """inject_shard_blob is also the repair path: restoring the pristine
+    container brings the shard back byte-exact."""
+    fleet, series = _mini_fleet()
+    pristine = fleet.shard_blobs[3]
+    baseline = {sid: fleet.series_frames(sid) for sid in series if sid % 4 == 3}
+    kill_shard(fleet, 3, mode="lost")
+    q = fleet.query(RangeQuery(qid=0, series_id=3, t0=0, t1=200, eps=0.05))
+    assert q.error is not None
+    fleet.inject_shard_blob(3, pristine)
+    assert fleet.shards_down() == {}
+    for sid in baseline:
+        assert fleet.series_frames(sid) == baseline[sid]
+    q = fleet.query(RangeQuery(qid=1, series_id=3, t0=0, t1=200, eps=0.05))
+    assert q.error is None
+    assert float(np.abs(q.result - series[3]).max()) <= 0.05 + 1e-9

@@ -1,0 +1,369 @@
+"""Cross-shard differential contract for the sharded serving fleet.
+
+The fleet's load-bearing invariant is that sharding is semantically
+invisible: for ANY partition of series across ANY shard count, every
+frame's payload bytes equal the single-process oracle's, range queries
+decode to identical floats, and analytics intervals agree.  This suite
+pins that deterministically for shard counts {1, 2, 4} over ragged mixes
+(including empty and length-1 series), plus the multi-tenant admission
+quotas (token bucket on an injectable clock), KB replication/sync epochs,
+routing metadata, and fleet lifecycle edges."""
+import numpy as np
+import pytest
+
+from repro.core import QuotaExceededError, ShrinkConfig
+from repro.core.errors import BatcherFinalizedError, ConfigError
+from repro.core.serialize import frame_payload, parse_framed_container
+from repro.core.streaming import KnowledgeBase, routing_metadata
+from repro.parallel import plan_fleet, shard_of
+from repro.serving import RangeQuery, RaggedBatcher, ShrinkFleet, TenantQuota
+from repro.serving.batching import RangeQueryBatcher
+from repro.analytics import AnalyticsEngine
+
+_RNG = np.random.default_rng(7)
+_CFG = ShrinkConfig(eps_b=0.5, lam=1e-4)
+_EPS = [0.5, 0.05]
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _walk(n: int) -> np.ndarray:
+    return np.round(np.cumsum(_RNG.standard_normal(n) * 0.1), 4)
+
+
+def _chunks(v: np.ndarray, step: int) -> list[np.ndarray]:
+    return [v[i : i + step] for i in range(0, len(v), step)]
+
+
+def _mixed_series() -> dict[int, np.ndarray]:
+    lengths = [257, 1, 40, 999, 2, 300, 64, 513]
+    return {sid: _walk(n) for sid, n in enumerate(lengths)}
+
+
+def _oracle_frames(series, chunk_step, flush=64):
+    """Single-process oracle: one RaggedBatcher (per-series flush scope)
+    fed the same per-series chunk sequences."""
+    b = RaggedBatcher(_CFG, eps_targets=_EPS, flush_samples=flush, scope="series")
+    pending = {sid: _chunks(v, chunk_step) for sid, v in series.items()}
+    while any(pending.values()):
+        for sid in sorted(pending):
+            if pending[sid]:
+                b.submit(sid, pending[sid].pop(0))
+    blob = b.finalize()
+    metas, _ = parse_framed_container(blob)
+    out = {sid: [] for sid in series}
+    for m in sorted(metas, key=lambda m: (m.series_id, m.t_lo)):
+        out[m.series_id].append((m.t_lo, m.t_hi, frame_payload(blob, m)))
+    return out, blob, b.kb
+
+
+def _run_fleet(series, chunk_step, n_shards, flush=64, **kw):
+    f = ShrinkFleet(
+        _CFG, eps_targets=_EPS, n_shards=n_shards, flush_samples=flush, **kw
+    )
+    pending = {sid: _chunks(v, chunk_step) for sid, v in series.items()}
+    while any(pending.values()):
+        for sid in sorted(pending):
+            if pending[sid]:
+                f.submit(sid, pending[sid].pop(0))
+    f.seal()
+    return f
+
+
+# ------------------------------------------------------- placement layer
+def test_shard_of_stable_and_in_range():
+    for n in (1, 2, 4, 7):
+        for sid in range(200):
+            s = shard_of(sid, n)
+            assert 0 <= s < n
+            assert s == shard_of(sid, n)  # pure function of (sid, n)
+    # all shards actually used for a contiguous id range
+    assert {shard_of(s, 4) for s in range(64)} == {0, 1, 2, 3}
+
+
+def test_plan_fleet_assignment_forms():
+    p = plan_fleet(4)
+    assert p.shard_of(11) == shard_of(11, 4)
+    p = plan_fleet(4, assignment={11: 2})
+    assert p.shard_of(11) == 2
+    assert p.shard_of(12) == shard_of(12, 4)  # unknown ids fall back to hash
+    p = plan_fleet(3, assignment=lambda sid: sid % 3)
+    assert [p.shard_of(s) for s in range(6)] == [0, 1, 2, 0, 1, 2]
+    with pytest.raises(ValueError):
+        plan_fleet(3, assignment=lambda sid: 5).shard_of(0)
+    with pytest.raises(ValueError):
+        plan_fleet(0)
+    assert p.describe()["n_shards"] == 3
+
+
+# --------------------------------------------- the differential invariant
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_fleet_frames_byte_identical_to_oracle(n_shards):
+    series = _mixed_series()
+    oracle, _, okb = _oracle_frames(series, chunk_step=37)
+    f = _run_fleet(series, chunk_step=37, n_shards=n_shards)
+    for sid in series:
+        assert f.series_frames(sid) == oracle[sid], (n_shards, sid)
+    # the fleet-global KB is semantically the oracle's KB
+    assert f.global_kb.canonical() == okb.canonical()
+    assert f.global_kb.snapshot_id() == okb.snapshot_id()
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_fleet_hostile_assignment_still_byte_identical(n_shards):
+    """An adversarial placement (everything piled onto shard 0 except one
+    series) must not change a single byte."""
+    series = _mixed_series()
+    oracle, _, _ = _oracle_frames(series, chunk_step=50)
+    assign = {sid: 0 for sid in series}
+    assign[3] = n_shards - 1
+    f = _run_fleet(series, chunk_step=50, n_shards=n_shards, assignment=assign)
+    for sid in series:
+        assert f.series_frames(sid) == oracle[sid], sid
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_fleet_range_queries_match_oracle_decode(n_shards):
+    series = _mixed_series()
+    _, oracle_blob, _ = _oracle_frames(series, chunk_step=37)
+    ob = RangeQueryBatcher(oracle_blob)
+    f = _run_fleet(series, chunk_step=37, n_shards=n_shards)
+    qid = 0
+    for sid, v in series.items():
+        if v.size < 3:
+            continue
+        q = f.query(RangeQuery(qid=qid, series_id=sid, t0=1, t1=v.size - 1, eps=0.05))
+        oq = ob.submit(
+            RangeQuery(qid=qid, series_id=sid, t0=1, t1=v.size - 1, eps=0.05)
+        )
+        (oq,) = ob.run()
+        qid += 1
+        assert q.error is None and oq.error is None
+        assert np.array_equal(q.result, oq.result), (n_shards, sid)
+        assert q.achieved == oq.achieved
+        # and both are within the requested bound vs raw data
+        assert float(np.abs(q.result - v[1:-1]).max()) <= 0.05 + 1e-9
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_fleet_analytics_match_oracle_engine(n_shards):
+    series = _mixed_series()
+    _, oracle_blob, _ = _oracle_frames(series, chunk_step=37)
+    eng = AnalyticsEngine(oracle_blob)
+    f = _run_fleet(series, chunk_step=37, n_shards=n_shards)
+    for sid, v in series.items():
+        if not v.size:
+            continue
+        for op in ("sum", "min", "max", "mean"):
+            a = f.aggregate(sid, op, eps=0.05)
+            o = eng.aggregate(sid, op, eps=0.05)
+            assert (a.lo, a.hi, a.exact) == (o.lo, o.hi, o.exact), (n_shards, sid, op)
+        c = f.count_where(sid, "gt", float(np.median(v)), eps=0.0)
+        oc = eng.count_where(sid, "gt", float(np.median(v)), eps=0.0)
+        assert (c.lo, c.hi, c.exact) == (oc.lo, oc.hi, oc.exact)
+        assert c.lo - 1e-9 <= float((v > np.median(v)).sum()) <= c.hi + 1e-9
+        assert f.topk_segments(sid, k=3) == eng.topk_segments(sid, k=3)
+
+
+def test_fleet_empty_and_len1_series():
+    series = {0: np.zeros(0), 1: _walk(1), 2: _walk(5)}
+    f = _run_fleet(series, chunk_step=3, n_shards=4)
+    assert f.series_frames(0) == []
+    fr1 = f.series_frames(1)
+    assert len(fr1) == 1 and fr1[0][:2] == (0, 1)
+    q = f.query(RangeQuery(qid=0, series_id=1, t0=0, t1=1, eps=0.05))
+    assert q.error is None
+    assert abs(float(q.result[0]) - float(series[1][0])) <= 0.05 + 1e-9
+
+
+def test_fleet_deadline_flush_is_per_series_on_injected_clock():
+    clk = _FakeClock()
+    f = ShrinkFleet(
+        _CFG, eps_targets=_EPS, n_shards=2, flush_samples=None,
+        flush_deadline_s=5.0, clock=clk,
+    )
+    f.submit(0, _walk(10))
+    clk.t = 3.0
+    f.submit(1, _walk(10))
+    assert f.poll() == []  # nothing due yet
+    clk.t = 5.0  # series 0 due, series 1 (submitted at t=3) not
+    sealed = f.poll()
+    assert [s[0] for s in sealed] == [0]
+    clk.t = 8.0
+    assert [s[0] for s in f.poll()] == [1]
+
+
+# ------------------------------------------------------------ KB syncing
+def test_kb_sync_epochs_and_merge_equivalence():
+    series = _mixed_series()
+    f = _run_fleet(series, chunk_step=37, n_shards=4, kb_sync_every=1)
+    # every flush triggered a sync; records carry monotone global entries
+    assert len(f.kb_syncs) >= 2
+    entries = [r["global_entries"] for r in f.kb_syncs]
+    assert entries == sorted(entries)
+    last = f.kb_syncs[-1]
+    assert last["shard_epochs"] == [b.kb.epoch for b in f.batchers]
+    assert last["semantic_id"] == f.global_kb.snapshot_id()
+    # rebuild by merging in reverse order: semantically identical
+    g = KnowledgeBase(_CFG)
+    for b in reversed(f.batchers):
+        g.merge(b.kb)
+    assert g.canonical() == f.global_kb.canonical()
+    assert g.snapshot_id() == f.global_kb.snapshot_id()
+
+
+def test_routing_metadata_self_contained_per_shard():
+    series = _mixed_series()
+    f = _run_fleet(series, chunk_step=37, n_shards=4)
+    routing = f.routing()
+    seen = set()
+    for shard, meta in enumerate(routing):
+        assert meta["self_contained"]
+        assert meta["max_frame_epoch"] <= meta["kb_entries"]
+        for sid, *_ in meta["frames"]:
+            assert f.shard_of(sid) == shard  # placement honored on disk
+        seen.update(meta["series_ids"])
+    assert seen == {sid for sid, v in series.items() if v.size}
+    # module-level routing_metadata agrees with the fleet's cached view
+    assert routing[0] == routing_metadata(f.shard_blobs[0])
+
+
+# ------------------------------------------------------- tenant admission
+def test_tenant_quota_token_bucket_on_fake_clock():
+    clk = _FakeClock()
+    tq = TenantQuota(rate_per_s=10.0, burst=50.0, clock=clk)
+    assert tq.available() == 50.0
+    assert tq.try_take(50.0)
+    assert not tq.try_take(1.0)  # empty, nothing consumed on refusal
+    clk.t = 2.0
+    assert tq.available() == pytest.approx(20.0)
+    assert tq.try_take(20.0)
+    clk.t = 100.0
+    assert tq.available() == 50.0  # refill caps at burst
+    with pytest.raises(ConfigError):
+        TenantQuota(rate_per_s=-1.0, burst=10.0)
+    with pytest.raises(ConfigError):
+        TenantQuota(rate_per_s=1.0, burst=0.0)
+
+
+def test_fleet_ingest_quota_typed_rejection_and_isolation():
+    clk = _FakeClock()
+    quotas = {
+        "tight": TenantQuota(rate_per_s=10.0, burst=100.0, clock=clk),
+        "rich": TenantQuota(rate_per_s=1e9, burst=1e9, clock=clk),
+    }
+    f = ShrinkFleet(
+        _CFG, eps_targets=_EPS, n_shards=2, flush_samples=64,
+        tenant_of=lambda sid: "tight" if sid == 0 else "rich",
+        quotas=quotas, clock=clk,
+    )
+    f.submit(0, _walk(100))
+    with pytest.raises(QuotaExceededError) as ei:
+        f.submit(0, _walk(10))
+    assert ei.value.series_id == 0
+    f.submit(1, _walk(5000))  # the other tenant is untouched
+    clk.t = 1.0  # 10 tokens refilled
+    f.submit(0, _walk(10))
+    st = f.fleet_stats()
+    assert st["quota_rejected_ingest"] == 1
+    assert st["samples_ingested"] == 5110
+
+
+def test_fleet_query_quota_sheds_to_coarse_flagged():
+    clk = _FakeClock()
+    f = ShrinkFleet(
+        _CFG, eps_targets=_EPS, n_shards=2, flush_samples=64,
+        # one shared bucket: ingest (200) + first query (150) fit, the
+        # second query (150 > 10 left) is shed
+        quotas={"default": TenantQuota(rate_per_s=1.0, burst=360.0, clock=clk)},
+        clock=clk,
+    )
+    f.submit(0, _walk(200))
+    f.seal()
+    q1 = f.query(RangeQuery(qid=0, series_id=0, t0=0, t1=150, eps=0.05))
+    assert q1.error is None and not q1.degraded  # within quota: exact tier
+    q2 = f.query(RangeQuery(qid=1, series_id=0, t0=0, t1=150, eps=0.05))
+    assert q2.error is None and q2.degraded  # over quota: coarse, flagged
+    assert q2.eps >= q1.eps
+    # the coarse answer still honors its bound (triangle: q1 is itself
+    # only achieved-of-q1 accurate, so compare against both bounds)
+    assert q2.achieved + q1.achieved + 1e-9 >= float(
+        np.abs(q2.result - q1.result).max()
+    )
+    assert f.fleet_stats()["quota_shed_queries"] == 1
+
+
+def test_fleet_query_quota_typed_rejection_without_coarse_tier():
+    clk = _FakeClock()
+    f = ShrinkFleet(
+        _CFG, eps_targets=_EPS, n_shards=2, flush_samples=64, coarse_eps=None,
+        quotas={"default": TenantQuota(rate_per_s=1.0, burst=50.0, clock=clk)},
+        clock=clk,
+    )
+    f.submit(0, _walk(50))
+    f.seal()
+    q = f.query(RangeQuery(qid=0, series_id=0, t0=0, t1=50, eps=0.05))
+    assert q.error is not None and q.error.startswith("QuotaExceededError")
+    with pytest.raises(QuotaExceededError):
+        f.enqueue(RangeQuery(qid=1, series_id=0, t0=0, t1=50, eps=0.05))
+    assert f.fleet_stats()["quota_rejected_queries"] == 2
+
+
+def test_fleet_aggregate_quota_sheds_to_segment_tier():
+    clk = _FakeClock()
+    f = ShrinkFleet(
+        _CFG, eps_targets=_EPS, n_shards=2, flush_samples=64,
+        # ingest (500) + first aggregate (500-sample span) fit; the second
+        # aggregate is shed to the segment tier
+        quotas={"default": TenantQuota(rate_per_s=1.0, burst=1100.0, clock=clk)},
+        clock=clk,
+    )
+    v = _walk(500)
+    f.submit(0, v)
+    f.seal()
+    a1 = f.aggregate(0, "sum", eps=0.05)
+    a2 = f.aggregate(0, "sum", eps=0.05)  # over quota -> segment tier
+    assert not a1.degraded and a2.degraded
+    truth = float(v.sum())
+    for a in (a1, a2):  # both intervals still contain the truth
+        assert a.lo - 1e-9 <= truth <= a.hi + 1e-9
+    assert a2.hi - a2.lo >= a1.hi - a1.lo  # coarser, never wrong
+
+
+# ------------------------------------------------------------- lifecycle
+def test_fleet_seal_idempotent_and_ingest_after_seal_raises():
+    f = _run_fleet({0: _walk(40)}, chunk_step=16, n_shards=2)
+    blobs = f.seal()
+    assert f.seal() == blobs and f.shard_blobs == blobs
+    with pytest.raises(BatcherFinalizedError):
+        f.submit(0, _walk(4))
+
+
+def test_fleet_enqueue_run_drains_all_shards():
+    series = _mixed_series()
+    f = _run_fleet(series, chunk_step=37, n_shards=4)
+    n = 0
+    for sid, v in series.items():
+        if v.size >= 2:
+            f.enqueue(RangeQuery(qid=n, series_id=sid, t0=0, t1=v.size, eps=0.05))
+            n += 1
+    done = f.run()
+    assert len(done) == n and len(f.completed) == n
+    for q in done:
+        assert q.error is None
+    assert f.fleet_stats()["queries"] == n
+
+
+def test_fleet_stats_shape():
+    f = _run_fleet({0: _walk(100), 1: _walk(80)}, chunk_step=30, n_shards=2)
+    st = f.fleet_stats()
+    assert st["n_shards"] == 2 and st["shards_down"] == []
+    assert len(st["shards"]) == 2 and len(st["gateways"]) == 2
+    assert st["samples_ingested"] == 180
+    assert st["frames_sealed"] == sum(s["frames"] for s in st["shards"])

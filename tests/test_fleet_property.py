@@ -1,0 +1,169 @@
+"""Property-based tests (hypothesis) for the sharded serving fleet.
+
+The contract being quantified over, not sampled: for ANY set of series,
+ANY chunking of each, ANY interleaving of those chunks' arrivals, ANY
+shard count, and ANY series->shard assignment, the fleet's sealed frames
+are byte-identical per series to the single-process oracle's — sharding
+and scheduling are semantically invisible.  Plus the algebraic property
+the fleet's KB replication leans on: ``KnowledgeBase.merge`` is
+order-invariant up to the canonical (ref-counted line multiset) view, so
+any shard-sync ordering converges to the same global dictionary.
+Skipped without the ``hypothesis`` dev extra; CI runs the ``ci`` profile
+(derandomized, tests/conftest.py).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ShrinkConfig
+from repro.core.serialize import frame_payload, parse_framed_container
+from repro.core.streaming import KnowledgeBase
+from repro.serving import RaggedBatcher, ShrinkFleet
+
+_CFG = ShrinkConfig(eps_b=0.5, lam=1e-4)
+_EPS = [0.05]
+
+
+def _walks(lengths, seed):
+    rng = np.random.default_rng(seed)
+    return {
+        sid: np.round(np.cumsum(rng.standard_normal(n) * 0.1), 4)
+        for sid, n in enumerate(lengths)
+    }
+
+
+@st.composite
+def _fleet_scenario(draw):
+    """Series lengths + per-series chunk cuts + a global interleaving of
+    chunk arrivals + shard count + an arbitrary explicit assignment."""
+    lengths = draw(st.lists(st.integers(0, 120), min_size=1, max_size=6))
+    seed = draw(st.integers(0, 2**16))
+    cuts = []
+    for n in lengths:
+        k = 0 if n <= 1 else draw(st.integers(0, min(n - 1, 5)))
+        pts = sorted(draw(st.lists(
+            st.integers(1, n - 1), min_size=k, max_size=k, unique=True
+        ))) if k else []
+        cuts.append([0] + pts + [n])
+    # arrival order: a permutation of all (series, chunk_index) events,
+    # stable-repaired so each series still sees its own chunks in order
+    events = [(sid, i) for sid, c in enumerate(cuts) for i in range(len(c) - 1)]
+    order = draw(st.permutations(events))
+    fixed = []
+    next_chunk = [0] * len(lengths)
+    for sid, _ in order:
+        fixed.append((sid, next_chunk[sid]))
+        next_chunk[sid] += 1
+    n_shards = draw(st.integers(1, 4))
+    assignment = {
+        sid: draw(st.integers(0, n_shards - 1)) for sid in range(len(lengths))
+    }
+    flush = draw(st.sampled_from([16, 64, None]))
+    return lengths, seed, cuts, fixed, n_shards, assignment, flush
+
+
+def _oracle_frames(series, cuts, flush):
+    b = RaggedBatcher(
+        _CFG, eps_targets=_EPS, flush_samples=flush, scope="series"
+    )
+    for sid, v in series.items():
+        c = cuts[sid]
+        for i in range(len(c) - 1):
+            b.submit(sid, v[c[i] : c[i + 1]])
+    blob = b.finalize()
+    metas, _ = parse_framed_container(blob)
+    out = {sid: [] for sid in series}
+    for m in sorted(metas, key=lambda m: (m.series_id, m.t_lo)):
+        out[m.series_id].append((m.t_lo, m.t_hi, frame_payload(blob, m)))
+    return out, b.kb
+
+
+@given(_fleet_scenario())
+@settings(max_examples=60, deadline=None)
+def test_any_assignment_any_interleaving_byte_identical(scenario):
+    lengths, seed, cuts, arrival, n_shards, assignment, flush = scenario
+    series = _walks(lengths, seed)
+    oracle, okb = _oracle_frames(series, cuts, flush)
+
+    fleet = ShrinkFleet(
+        _CFG, eps_targets=_EPS, n_shards=n_shards,
+        flush_samples=flush, assignment=assignment,
+    )
+    for sid, i in arrival:  # the drawn interleaving of chunk arrivals
+        c = cuts[sid]
+        fleet.submit(sid, series[sid][c[i] : c[i + 1]])
+    fleet.seal()
+
+    for sid in series:
+        assert fleet.series_frames(sid) == oracle[sid], (sid, n_shards, assignment)
+    assert fleet.global_kb.canonical() == okb.canonical()
+    assert fleet.global_kb.snapshot_id() == okb.snapshot_id()
+    for meta in fleet.routing():
+        assert meta["self_contained"]
+
+
+@st.composite
+def _kb_pool(draw):
+    """A pool of shard KBs built from random walks, plus a permutation."""
+    n_kbs = draw(st.integers(2, 5))
+    seeds = [draw(st.integers(0, 2**16)) for _ in range(n_kbs)]
+    lens = [draw(st.integers(2, 150)) for _ in range(n_kbs)]
+    perm = draw(st.permutations(list(range(n_kbs))))
+    return seeds, lens, perm
+
+
+def _kb_from_walk(seed, n):
+    rng = np.random.default_rng(seed)
+    v = np.round(np.cumsum(rng.standard_normal(n) * 0.1), 4)
+    b = RaggedBatcher(_CFG, eps_targets=_EPS, flush_samples=None)
+    b.submit(0, v)
+    b.finalize()
+    return b.kb
+
+
+@given(_kb_pool())
+@settings(max_examples=40, deadline=None)
+def test_kb_merge_is_order_invariant(pool):
+    seeds, lens, perm = pool
+    kbs = [_kb_from_walk(s, n) for s, n in zip(seeds, lens)]
+
+    fwd = KnowledgeBase(_CFG)
+    for kb in kbs:
+        fwd.merge(kb)
+    anyorder = KnowledgeBase(_CFG)
+    for i in perm:
+        anyorder.merge(kbs[i])
+
+    # positional entry ids are order-dependent; the ref-counted line
+    # multiset (and therefore the semantic snapshot id) must not be
+    assert fwd.canonical() == anyorder.canonical()
+    assert fwd.snapshot_id() == anyorder.snapshot_id()
+    assert fwd.stats()["total_refs"] == anyorder.stats()["total_refs"]
+    # merge also never loses a line some shard holds
+    for kb in kbs:
+        for key, refs in kb.canonical().items():
+            assert fwd.canonical().get(key, 0) >= refs
+
+
+@given(st.integers(0, 2**16), st.integers(1, 4), st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_kb_merge_associativity_via_fleet_sync(seed, na, nb):
+    """Pairwise-merging shard groups then merging the groups equals one
+    flat merge — the property that lets a real fleet gossip KB syncs
+    hierarchically."""
+    kbs = [_kb_from_walk(seed + i, 40 + 10 * i) for i in range(na + nb)]
+    flat = KnowledgeBase(_CFG)
+    for kb in kbs:
+        flat.merge(kb)
+    left, right = KnowledgeBase(_CFG), KnowledgeBase(_CFG)
+    for kb in kbs[:na]:
+        left.merge(kb)
+    for kb in kbs[na:]:
+        right.merge(kb)
+    grouped = KnowledgeBase(_CFG)
+    grouped.merge(left)
+    grouped.merge(right)
+    assert grouped.canonical() == flat.canonical()
+    assert grouped.snapshot_id() == flat.snapshot_id()

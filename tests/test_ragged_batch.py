@@ -308,3 +308,82 @@ def test_batcher_rejects_use_after_finalize():
         b.submit(0, np.ones(4))
     with pytest.raises(ValueError):
         RaggedBatcher(cfg, eps_targets=[0.0])  # lossless without decimals
+
+
+def test_flush_after_finalize_is_noop():
+    """Regression: a ``flush_deadline_s`` timer that fires after
+    ``finalize`` (the race window of any real deployment, where the timer
+    loop and the shutdown path interleave) must be a no-op — it used to
+    reach the sealed writer and double-seal the pending pool."""
+    clock = _FakeClock()
+    cfg = ShrinkConfig(eps_b=0.5, lam=1e-3)
+    b = RaggedBatcher(
+        cfg, eps_targets=[1e-2], flush_samples=None, flush_deadline_s=5.0, clock=clock
+    )
+    v = np.round(np.cumsum(_RNG.standard_normal(64) * 0.1), 4)
+    b.submit(0, v)
+    blob = b.finalize()
+    frames = list(b.sealed_frames)
+    clock.t = 100.0  # the deadline is long past due when the timer fires
+    assert b.due() is False
+    assert b.due_series() == []
+    assert b.poll() == []
+    assert b.flush() == []
+    assert b.sealed_frames == frames  # nothing double-sealed
+    assert b.finalize() == blob  # container unchanged
+
+
+def test_reentrant_flush_during_compression_cannot_double_seal():
+    """Regression for the deadline/finalize double-seal: a flush trigger
+    firing *while a flush is compressing* (timer thread, or anything the
+    compression path calls back into) must find an empty pending pool —
+    the buffers are detached before compression starts."""
+    clock = _FakeClock()
+    cfg = ShrinkConfig(eps_b=0.5, lam=1e-3)
+    b = RaggedBatcher(
+        cfg, eps_targets=[1e-2], flush_samples=None, flush_deadline_s=5.0, clock=clock
+    )
+    v = np.round(np.cumsum(_RNG.standard_normal(80) * 0.1), 4)
+    b.submit(0, v)
+    clock.t = 10.0  # deadline fired; the poll below starts the flush
+
+    inner: dict = {"polls": [], "finalized_inside": False}
+    real = b.codec.compress_batch
+
+    def reentrant(arrs, **kw):
+        # a concurrent timer tick AND a concurrent shutdown, mid-flush
+        inner["polls"].append(b.poll())
+        inner["flush"] = b.flush()
+        return real(arrs, **kw)
+
+    b.codec.compress_batch = reentrant
+    sealed = b.poll()
+    b.codec.compress_batch = real
+
+    assert sealed == [(0, 0, 80)]
+    assert inner["polls"] == [[]] and inner["flush"] == []  # reentrants no-op
+    assert b.sealed_frames == [(0, 0, 80)]  # exactly once
+    blob = b.finalize()
+    got = decode_range(blob, 0, 0, 80, 1e-2)
+    assert float(np.abs(got - v).max()) <= 1e-2 * (1 + 1e-9)
+
+
+def test_scope_series_flush_isolation():
+    """Under ``scope="series"`` a series' flush trigger is a pure function
+    of its OWN ingest history — co-batched series neither trigger it nor
+    get dragged into its frames early (the property that makes fleet
+    sharding byte-invariant; see tests/test_fleet.py)."""
+    series = _ragged_series([100, 100])
+    cfg = _cfg_for_batcher(series)
+    # batch scope: the aggregate pool (32+32 >= 64) seals BOTH series,
+    # even though neither alone reached the threshold
+    b = RaggedBatcher(cfg, eps_targets=[1e-2], flush_samples=64, scope="batch")
+    assert b.submit(0, series[0][:32]) == []
+    assert {s for s, _, _ in b.submit(1, series[1][:32])} == {0, 1}
+    # series scope: each series seals alone, exactly when ITS 64 arrive
+    s = RaggedBatcher(cfg, eps_targets=[1e-2], flush_samples=64, scope="series")
+    assert s.submit(0, series[0][:32]) == []
+    assert s.submit(1, series[1][:64]) == [(1, 0, 64)]  # 0 untouched
+    assert s.submit(0, series[0][32:64]) == [(0, 0, 64)]
+    with pytest.raises(ValueError):
+        RaggedBatcher(cfg, eps_targets=[1e-2], scope="frame")  # unknown scope
