@@ -15,6 +15,7 @@ import time
 
 from . import (
     bench_analytics,
+    bench_backends,
     bench_compression,
     bench_fleet,
     bench_progressive,
@@ -132,6 +133,25 @@ def main(argv=None) -> int:
         f"speedup={bp['batch_speedup']:.2f}x"
     )
     checks.update(bench_throughput.validate_engine_claims(engine))
+
+    print("\n== Adaptive entropy dispatch (cost-model routing vs all-rans) ==")
+    adaptive = bench_backends.adaptive_json(quick=args.quick)
+    engine["adaptive"] = adaptive
+    mix = "  ".join(
+        f"{b}={d['streams']}" for b, d in sorted(adaptive["adaptive"]["routing"].items())
+    )
+    print(
+        f"  corpus[{adaptive['series']}x{adaptive['points_per_series']}] "
+        f"adaptive={adaptive['adaptive']['archive_bytes']:,}B "
+        f"all-rans={adaptive['forced_rans']['archive_bytes']:,}B "
+        f"(cr_ratio={adaptive['cr_ratio']:.3f})"
+    )
+    print(
+        f"  encode: adaptive={adaptive['adaptive']['encode_mb_s']:.2f}MB/s "
+        f"all-rans={adaptive['forced_rans']['encode_mb_s']:.2f}MB/s "
+        f"(speed_ratio={adaptive['speed_ratio']:.2f})  streams: {mix}"
+    )
+    checks.update(bench_backends.validate_claims(adaptive))
 
     print("\n== Streaming ingest (chunked scan + framed container) ==")
     stream = bench_streaming.streaming_json(quick=args.quick)

@@ -18,6 +18,18 @@ The paper uses Turbo Range Coder (an arithmetic coder).  This module provides:
   renormalization, one conditional emission per symbol).  This is the fast
   production path; the adaptive range coder stays as the compatibility /
   compression-oracle path.
+* ``bitpack`` — tight fixed-width packing at ``span.bit_length()`` bits per
+  value (0 bits for constant streams).  No statistical modelling, so it is
+  never larger than ``raw`` and runs at memcpy-ish speed — the fast exit for
+  low-entropy tails and near-uniform planes where rANS tables don't pay.
+* ``backend='best'`` — adaptive dispatch: a one-pass cost model
+  (:func:`predict_backend_sizes`) predicts each backend's encoded size from
+  byte-plane histograms, a run-length probe, and the max-magnitude bit
+  width, and the stream goes to the predicted winner
+  (:func:`choose_backend`).  ``exhaustive=True`` restores the old
+  encode-with-everything-keep-smallest oracle.  Selection is encode-side
+  only — the tag byte keeps decode self-describing, so a mispredict can
+  only cost bytes, never correctness.
 
 All backends are lossless on int64 inputs and round-trip tested.
 """
@@ -29,6 +41,8 @@ import sys
 import warnings
 
 import numpy as np
+
+from .errors import CorruptFrameError, FormatError, TruncatedArchiveError
 
 try:  # optional fast backend
     import zstandard as _zstd
@@ -42,7 +56,11 @@ __all__ = [
     "encode_ints",
     "decode_ints",
     "encode_ints_batch",
+    "decode_ints_batch",
     "available_backends",
+    "backend_name",
+    "predict_backend_sizes",
+    "choose_backend",
 ]
 
 _MASK = 0xFFFFFFFF
@@ -902,9 +920,11 @@ def encode_ints_batch(
 ) -> list[bytes]:
     """Batched ``encode_ints`` over rows qs — an [S, n] array (equal-length
     rows) or a list of 1-D arrays (ragged); each returned blob is
-    byte-identical to ``encode_ints(qs[s], backend)``.  Only the ``rans``
-    backend has a genuinely batched fast path; everything else falls back
-    to a per-row loop."""
+    byte-identical to ``encode_ints(qs[s], backend)``.  ``rans`` runs the
+    genuinely fused state machines; ``best`` partitions the batch by the
+    cost model's per-stream pick and keeps the rans-bound group on those
+    same machines; ``zstd`` shares one compressor context across the
+    batch; everything else falls back to a per-row loop."""
     if isinstance(qs, np.ndarray):
         qs = np.ascontiguousarray(qs, dtype=np.int64)
         if qs.ndim != 2:
@@ -912,25 +932,32 @@ def encode_ints_batch(
         if backend == "rans":
             tag = bytes([_BACKENDS["rans"]])
             return [tag + blob for blob in _rans_encode_batch(qs)]
-        return [encode_ints(q, backend=backend) for q in qs]
-    arrs = [
-        q
-        if isinstance(q, np.ndarray)
-        and q.ndim == 1
-        and q.dtype == np.int64
-        and q.flags.c_contiguous
-        else np.ascontiguousarray(np.asarray(q).ravel(), dtype=np.int64)
-        for q in qs
-    ]
+        arrs = list(qs)  # row views: contiguous int64 by construction
+    else:
+        arrs = [
+            q
+            if isinstance(q, np.ndarray)
+            and q.ndim == 1
+            and q.dtype == np.int64
+            and q.flags.c_contiguous
+            else np.ascontiguousarray(np.asarray(q).ravel(), dtype=np.int64)
+            for q in qs
+        ]
     if not arrs:
         return []
-    if backend != "rans":
-        return [encode_ints(q, backend=backend) for q in arrs]
-    n0 = arrs[0].size
-    if all(a.size == n0 for a in arrs):  # rectangular in disguise
-        return encode_ints_batch(np.stack(arrs), backend=backend)
-    tag = bytes([_BACKENDS["rans"]])
-    return [tag + blob for blob in _rans_encode_batch_ragged(arrs)]
+    if backend == "rans":
+        n0 = arrs[0].size
+        if all(a.size == n0 for a in arrs):  # rectangular in disguise
+            return encode_ints_batch(np.stack(arrs), backend=backend)
+        tag = bytes([_BACKENDS["rans"]])
+        return [tag + blob for blob in _rans_encode_batch_ragged(arrs)]
+    if backend == "best":
+        return _adaptive_encode_batch(arrs)
+    if backend == "zstd" and _zstd is not None:
+        ctx = _zstd.ZstdCompressor(level=19)
+        tag = bytes([_BACKENDS["zstd"]])
+        return [tag + _zstd_encode(q, compressor=ctx) for q in arrs]
+    return [encode_ints(q, backend=backend) for q in arrs]
 
 
 def _rans_decode(data: bytes) -> np.ndarray:
@@ -1016,7 +1043,51 @@ def _raw_decode(data: bytes) -> np.ndarray:
     return vals.astype(np.int64) + lo
 
 
-def _zstd_encode(q: np.ndarray, level: int = 19) -> bytes:
+def _bitpack_encode(q: np.ndarray) -> bytes:
+    """Tight fixed-width packing: values biased by the stream minimum,
+    packed LSB-first at ``span.bit_length()`` bits each.  A constant (or
+    empty) stream has width 0 and costs only the 17-byte header, so this
+    is never larger than ``raw`` (which always pays >= 1 bit per value)
+    and there is no statistical modelling to mispredict."""
+    lo = int(q.min()) if q.size else 0
+    span = (int(q.max()) - lo) if q.size else 0
+    width = span.bit_length()
+    header = struct.pack("<qQB", lo, q.size, width)
+    if width == 0:
+        return header
+    vals = (q - lo).astype(np.uint64)  # wraps mod 2^64: exact unsigned bias
+    bitmat = ((vals[:, None] >> np.arange(width, dtype=np.uint64)) & 1).astype(np.uint8)
+    return header + np.packbits(bitmat.reshape(-1), bitorder="little").tobytes()
+
+
+def _bitpack_decode(data: bytes) -> np.ndarray:
+    if len(data) < 17:
+        raise TruncatedArchiveError(
+            f"bitpack stream truncated: {len(data)} byte header, need 17"
+        )
+    lo, count, width = struct.unpack_from("<qQB", data, 0)
+    if width > 64:
+        raise FormatError(f"bitpack width byte {width} out of range (max 64)")
+    nbytes = (count * width + 7) // 8
+    if len(data) < 17 + nbytes:
+        raise TruncatedArchiveError(
+            f"bitpack stream truncated: payload {len(data) - 17} bytes, "
+            f"need {nbytes} for {count} values at width {width}"
+        )
+    if len(data) > 17 + nbytes:
+        raise CorruptFrameError(
+            f"bitpack stream has {len(data) - 17 - nbytes} trailing bytes"
+        )
+    if width == 0:
+        return np.full(count, lo, dtype=np.int64)
+    packed = np.frombuffer(data, dtype=np.uint8, offset=17)
+    bitvec = np.unpackbits(packed, bitorder="little")[: count * width]
+    bitmat = bitvec.reshape(count, width).astype(np.uint64)
+    vals = (bitmat << np.arange(width, dtype=np.uint64)).sum(axis=1, dtype=np.uint64)
+    return vals.astype(np.int64) + lo
+
+
+def _zstd_encode(q: np.ndarray, level: int = 19, compressor=None) -> bytes:
     assert _zstd is not None
     lo = int(q.min()) if q.size else 0
     span = (int(q.max()) - lo) if q.size else 0
@@ -1029,11 +1100,12 @@ def _zstd_encode(q: np.ndarray, level: int = 19) -> bytes:
     else:
         dt, code = np.uint64, 3
     body = (q - lo).astype(dt).tobytes()
-    comp = _zstd.ZstdCompressor(level=level).compress(body)
+    ctx = compressor if compressor is not None else _zstd.ZstdCompressor(level=level)
+    comp = ctx.compress(body)
     return struct.pack("<qQB", lo, q.size, code) + comp
 
 
-def _zstd_decode(data: bytes) -> np.ndarray:
+def _zstd_decode(data: bytes, decompressor=None) -> np.ndarray:
     if _zstd is None:
         raise RuntimeError(
             "this stream was encoded with the zstd backend; install the "
@@ -1041,25 +1113,116 @@ def _zstd_decode(data: bytes) -> np.ndarray:
         )
     lo, count, code = struct.unpack_from("<qQB", data, 0)
     dt = [np.uint8, np.uint16, np.uint32, np.uint64][code]
-    body = _zstd.ZstdDecompressor().decompress(data[17:])
+    ctx = decompressor if decompressor is not None else _zstd.ZstdDecompressor()
+    body = ctx.decompress(data[17:])
     return np.frombuffer(body, dtype=dt).astype(np.int64) + lo
 
 
-_BACKENDS = {"rc": 0, "zstd": 1, "raw": 2, "rans": 3}
+_BACKENDS = {"rc": 0, "zstd": 1, "raw": 2, "rans": 3, "bitpack": 4}
 _REV = {v: k for k, v in _BACKENDS.items()}
 
 
 def available_backends() -> list[str]:
-    out = ["rc", "rans", "raw"]
+    out = ["rc", "rans", "raw", "bitpack"]
     if _zstd is not None:
         out.insert(2, "zstd")
     return out
 
 
-def encode_ints(q: np.ndarray, backend: str = "best") -> bytes:
-    """Losslessly encode an int64 array.  Returns tagged bytes."""
+def backend_name(tag: int) -> str | None:
+    """Backend name for a stream's leading tag byte, or None if unknown."""
+    return _REV.get(tag)
+
+
+# ------------------------------------------------------------------ #
+# adaptive dispatch: cost model + per-stream routing
+# ------------------------------------------------------------------ #
+
+# rc is excluded from adaptive candidates: it is an O(n)-python oracle, never
+# a production route.  zstd (level 19) is much slower than the packers and
+# the rANS machine, so it must win the size prediction by a decisive margin
+# before the dispatcher sends a stream its way.
+_ZSTD_MARGIN = 0.9
+# order-0 plane entropy is a lower bound on what the real coder emits (table
+# quantization, 16-bit renorm granularity), so the rANS prediction is
+# inflated a touch: near-ties then go to the packers, whose closed-form
+# predictions are exact and therefore cannot be the wrong pick.
+_RANS_PRED_INFLATE = 1.02
+_ZSTD_FRAME_OVERHEAD = 13  # magic + frame header + checksum, roughly
+
+
+def predict_backend_sizes(q: np.ndarray) -> dict[str, int]:
+    """Predicted encoded sizes (tag byte included) per backend, from one
+    O(n) feature pass: byte-plane histograms of the zigzagged stream (->
+    order-0 entropy per plane and the zero-high-plane count), a run-length
+    probe, and the max-magnitude bit width.  ``raw`` and ``bitpack`` are
+    exact closed forms of their wire layouts; ``rans`` and ``zstd`` are
+    estimates (see :func:`choose_backend` for how ties are biased)."""
+    q = np.ascontiguousarray(q, dtype=np.int64)
+    n = int(q.size)
+    lo = int(q.min()) if n else 0
+    span = (int(q.max()) - lo) if n else 0
+    width = span.bit_length()
+    pred = {
+        "raw": 1 + 17 + (n * max(1, width) + 7) // 8,
+        "bitpack": 1 + 17 + (n * width + 7) // 8,
+    }
+    med = int(np.median(q)) if n else 0
+    zz = _zigzag(q - med)
+    zmax = int(zz.max()) if n else 0
+    nplanes = max(1, (zmax.bit_length() + 7) // 8)
+    k = max(1, min(_RANS_K, n))
+    rans = 18  # <qQBB header
+    info_bits = 0.0
+    nlog2n = n * np.log2(n) if n else 0.0
+    for p in range(nplanes):
+        sym = ((zz >> np.uint64(8 * p)) & np.uint64(0xFF)).astype(np.int64)
+        counts = np.bincount(sym)
+        nz = counts[counts > 0]
+        rans += 32 + 2 * nz.size + 4 * k + 4
+        if n:
+            info_bits += float(nlog2n - (nz * np.log2(nz)).sum())
+    rans += int(info_bits / 8)
+    pred["rans"] = 1 + int(rans * _RANS_PRED_INFLATE) + 8
+    if _zstd is not None and n:
+        wbytes = 1 if width <= 8 else 2 if width <= 16 else 4 if width <= 32 else 8
+        runs = int((q[1:] != q[:-1]).sum()) + 1
+        # zstd sees the (q - lo) bytes: bounded below by their information
+        # content (~ the plane entropies) and by what run-collapsing LZ
+        # matches leave behind, whichever bites first
+        pred["zstd"] = (
+            1 + 17 + _ZSTD_FRAME_OVERHEAD + min(int(info_bits / 8), runs * (wbytes + 2))
+        )
+    return pred
+
+
+def choose_backend(q: np.ndarray) -> str:
+    """The cost model's pick for one stream.  Pure and deterministic per
+    stream, so scalar and batched adaptive paths produce byte-identical
+    blobs.  Ties go to the cheapest-to-encode exact-cost backend."""
+    pred = predict_backend_sizes(q)
+    best = "bitpack"
+    for cand in ("rans", "raw"):
+        if pred[cand] < pred[best]:
+            best = cand
+    z = pred.get("zstd")
+    if z is not None and z < _ZSTD_MARGIN * pred[best]:
+        best = "zstd"
+    return best
+
+
+def encode_ints(q: np.ndarray, backend: str = "best", exhaustive: bool = False) -> bytes:
+    """Losslessly encode an int64 array.  Returns tagged bytes.
+
+    ``backend='best'`` routes through the adaptive cost model (one O(n)
+    feature pass, then exactly one encode).  ``exhaustive=True`` restores
+    the brute-force oracle: encode with every candidate, keep the smallest
+    — the compression-ratio ceiling, at ~4x the encode cost."""
     q = np.ascontiguousarray(q, dtype=np.int64)
     if backend == "best":
+        if not exhaustive:
+            c = choose_backend(q)
+            return bytes([_BACKENDS[c]]) + _dispatch_encode(q, c)
         cands = ["rans"]
         # rc is O(n) python — skip it for very large streams; rans/zstd are
         # within a few % of its size at numpy/C speed
@@ -1068,6 +1231,7 @@ def encode_ints(q: np.ndarray, backend: str = "best") -> bytes:
         if _zstd is not None:
             cands.append("zstd")
         cands.append("raw")
+        cands.append("bitpack")
         blobs = [(len(b := _dispatch_encode(q, c)), c, b) for c in cands]
         _, c, b = min(blobs, key=lambda t: t[0])
         return bytes([_BACKENDS[c]]) + b
@@ -1087,11 +1251,46 @@ def _dispatch_encode(q: np.ndarray, backend: str) -> bytes:
         return _zstd_encode(q)
     if backend == "raw":
         return _raw_encode(q)
+    if backend == "bitpack":
+        return _bitpack_encode(q)
     raise ValueError(f"unknown backend {backend!r}")
 
 
+def _adaptive_encode_batch(arrs: list[np.ndarray]) -> list[bytes]:
+    """``backend='best'`` over a batch: choose per stream with the cost
+    model (the same pure per-stream decision the scalar path makes, so
+    batch and scalar outputs stay byte-identical), then partition by
+    choice — the rans-bound group keeps the fused rect/ragged machines
+    (device engine included), the zstd group shares one compressor, and
+    the packers loop (each already vectorized per stream)."""
+    out: list[bytes] = [b""] * len(arrs)
+    groups: dict[str, list[int]] = {}
+    for i, q in enumerate(arrs):
+        groups.setdefault(choose_backend(q), []).append(i)
+    idxs = groups.pop("rans", None)
+    if idxs:
+        blobs = encode_ints_batch([arrs[i] for i in idxs], backend="rans")
+        for i, blob in zip(idxs, blobs):
+            out[i] = blob
+    idxs = groups.pop("zstd", None)
+    if idxs:
+        ctx = _zstd.ZstdCompressor(level=19)
+        tag = bytes([_BACKENDS["zstd"]])
+        for i in idxs:
+            out[i] = tag + _zstd_encode(arrs[i], compressor=ctx)
+    for c, idxs in groups.items():
+        tag = bytes([_BACKENDS[c]])
+        for i in idxs:
+            out[i] = tag + _dispatch_encode(arrs[i], c)
+    return out
+
+
 def decode_ints(data: bytes) -> np.ndarray:
-    tag = _REV[data[0]]
+    if not data:
+        raise TruncatedArchiveError("entropy stream is empty (missing tag byte)")
+    tag = _REV.get(data[0])
+    if tag is None:
+        raise FormatError(f"unknown entropy backend tag {data[0]}")
     body = data[1:]
     if tag == "rc":
         return _rc_decode(body)
@@ -1099,4 +1298,23 @@ def decode_ints(data: bytes) -> np.ndarray:
         return _rans_decode(body)
     if tag == "zstd":
         return _zstd_decode(body)
+    if tag == "bitpack":
+        return _bitpack_decode(body)
     return _raw_decode(body)
+
+
+def decode_ints_batch(blobs: list[bytes]) -> list[np.ndarray]:
+    """Batched ``decode_ints``: one shared ``ZstdDecompressor`` serves
+    every zstd-tagged stream in the batch (the scalar path pays a fresh
+    context per call)."""
+    ztag = _BACKENDS["zstd"]
+    ctx = None
+    out = []
+    for data in blobs:
+        if data and data[0] == ztag and _zstd is not None:
+            if ctx is None:
+                ctx = _zstd.ZstdDecompressor()
+            out.append(_zstd_decode(data[1:], decompressor=ctx))
+        else:
+            out.append(decode_ints(data))
+    return out

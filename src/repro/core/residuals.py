@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from . import entropy
 from .types import Base, ResidualStream
 from .base import base_predictions
 
@@ -325,3 +326,14 @@ def quantize_pyramid(
     :func:`quantize_pyramid_batch` (same code path, hence bit-identical)."""
     values = np.asarray(values, dtype=np.float64)
     return quantize_pyramid_batch(values[None, :], pred[None, :], tiers, decimals)[0]
+
+
+def encode_residuals_batch(
+    streams: list[ResidualStream], backend: str = "best"
+) -> list[bytes]:
+    """Entropy-encode a batch of residual streams in one fused pass — the
+    single funnel every pyramid producer (one-shot, rect-batch, ragged,
+    streaming drain) routes through.  ``backend='best'`` partitions the
+    batch per stream via the cost model and keeps the rans-bound group on
+    the fused state machines; see :func:`repro.core.entropy.encode_ints_batch`."""
+    return entropy.encode_ints_batch([st.q for st in streams], backend=backend)

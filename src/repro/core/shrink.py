@@ -55,6 +55,7 @@ from .base import (
     practical_eps_b,
 )
 from .residuals import (
+    encode_residuals_batch,
     normalize_tiers,
     quantize_pyramid,
     quantize_pyramid_batch,
@@ -355,7 +356,7 @@ class ShrinkCodec:
                 )
         # ONE entropy pass across every layer of every bucket and series:
         # the ragged rANS machine interleaves all of them
-        blobs = entropy.encode_ints_batch([st.q for _, _, st in todo], backend=self.backend)
+        blobs = encode_residuals_batch([st for _, _, st in todo], backend=self.backend)
         payloads: list[list[bytes | None]] = [[None] * len(tiers) for _ in range(s)]
         for (i, k, _), blob in zip(todo, blobs):
             payloads[i][k] = blob
@@ -529,7 +530,7 @@ def encode_with_base(
     tiers = normalize_tiers(eps_targets, decimals)
     streams = quantize_pyramid(values, pred, tiers, decimals)
     todo = [(k, st) for k, st in enumerate(streams) if st is not None]
-    blobs = entropy.encode_ints_batch([st.q for _, st in todo], backend=backend)
+    blobs = encode_residuals_batch([st for _, st in todo], backend=backend)
     payloads: list[bytes | None] = [None] * len(tiers)
     for (k, _), blob in zip(todo, blobs):
         payloads[k] = blob
@@ -571,7 +572,7 @@ def encode_frames_with_bases(
         for k, st in enumerate(layer_streams[i])
         if st is not None
     ]
-    blobs = entropy.encode_ints_batch([st.q for _, _, st in todo], backend=backend)
+    blobs = encode_residuals_batch([st for _, _, st in todo], backend=backend)
     payloads: list[list[bytes | None]] = [[None] * len(tiers) for _ in range(f_count)]
     for (i, k, _), blob in zip(todo, blobs):
         payloads[i][k] = blob

@@ -83,7 +83,7 @@ from .shrink import (
     encode_frames_with_bases,
     encode_with_base,
 )
-from .types import Base, FrameMeta, Segment, ShrinkConfig
+from .types import Base, FrameMeta, Segment, ShrinkConfig, merge_backend_stats
 
 __all__ = [
     "KnowledgeBase",
@@ -415,6 +415,8 @@ class ShrinkStreamCodec:
         # round-trip per call
         self._pending: list[tuple[int, int, np.ndarray, Base, int, int]] = []
         self._pending_n = 0
+        # running per-backend routing tally of every sealed layer payload
+        self._backend_stats: dict[str, dict[str, int]] = {}
 
     # -- ingest -------------------------------------------------------- #
     def ingest(self, values_chunk, series_id: int = 0) -> list[tuple[int, int, int]]:
@@ -481,6 +483,7 @@ class ShrinkStreamCodec:
             "samples_ingested": ingested,
             "samples_sealed": sum(hi - lo for _, lo, hi, _, _ in self._sealed),
             "payload_bytes": payload_bytes,
+            "backends": {b: dict(d) for b, d in self._backend_stats.items()},
             "kb": self.kb.stats(),
         }
 
@@ -617,6 +620,7 @@ class ShrinkStreamCodec:
                     backend=self.backend,
                 )
             for (slot, _sid, _vals, _base, _lo, _hi), cs in zip(group, cs_list):
+                merge_backend_stats(self._backend_stats, cs.backend_stats())
                 sid, lo, hi, epoch, _ = self._sealed[slot]
                 self._sealed[slot] = (sid, lo, hi, epoch, cs_to_bytes(cs))
 

@@ -195,6 +195,15 @@ class PyramidLayer:
     def nbytes(self) -> int:
         return len(self.payload) if self.payload is not None else 0
 
+    def backend(self) -> Optional[str]:
+        """Entropy backend that encoded this layer's payload (read off the
+        stream's leading tag byte), or None for identity/corrupt layers."""
+        if self.payload is None or not len(self.payload):
+            return None
+        from .entropy import backend_name  # lazy: keep types dependency-light
+
+        return backend_name(self.payload[0])
+
 
 @dataclasses.dataclass
 class ResidualPyramid:
@@ -233,6 +242,19 @@ class ResidualPyramid:
     def nbytes(self) -> int:
         return self.prefix_nbytes(len(self.layers) - 1)
 
+    def backend_stats(self) -> dict[str, dict[str, int]]:
+        """Per-backend ``{"streams": count, "bytes": payload bytes}`` over
+        this pyramid's layers — how the adaptive dispatcher routed them."""
+        out: dict[str, dict[str, int]] = {}
+        for layer in self.layers:
+            b = layer.backend()
+            if b is None:
+                continue
+            d = out.setdefault(b, {"streams": 0, "bytes": 0})
+            d["streams"] += 1
+            d["bytes"] += layer.nbytes()
+        return out
+
 
 @dataclasses.dataclass
 class CompressedSeries:
@@ -256,3 +278,20 @@ class CompressedSeries:
 
     def total_nbytes(self) -> int:
         return len(self.base_bytes) + self.pyramid.nbytes()
+
+    def backend_stats(self) -> dict[str, dict[str, int]]:
+        """Per-backend stream/byte counts of this series' residual layers."""
+        return self.pyramid.backend_stats()
+
+
+def merge_backend_stats(
+    acc: dict[str, dict[str, int]], more: dict[str, dict[str, int]]
+) -> dict[str, dict[str, int]]:
+    """Accumulate one ``backend_stats()`` result into ``acc`` (in place and
+    returned) — the running per-backend routing tally the streaming codec,
+    the ragged batcher, and the fleet surface in their ``stats()``."""
+    for b, d in more.items():
+        a = acc.setdefault(b, {"streams": 0, "bytes": 0})
+        a["streams"] += d["streams"]
+        a["bytes"] += d["bytes"]
+    return acc

@@ -59,7 +59,7 @@ from ..core.errors import (
 )
 from ..core.serialize import frame_payload, parse_framed_container
 from ..core.streaming import KnowledgeBase, routing_metadata
-from ..core.types import ShrinkConfig
+from ..core.types import ShrinkConfig, merge_backend_stats
 from ..parallel.fleet import FleetPlan, plan_fleet
 from .batching import RangeQuery
 from .gateway import FaultTolerantGateway, RetryPolicy
@@ -519,6 +519,10 @@ class ShrinkFleet:
         st["shards_down"] = sorted(self._down)
         st["global_kb"] = self.global_kb.stats() if self.global_kb.entries else {}
         st["shards"] = [b.stats() for b in self.batchers]
+        backends: dict[str, dict[str, int]] = {}
+        for shard in st["shards"]:
+            merge_backend_stats(backends, shard.get("backends", {}))
+        st["backends"] = backends
         st["gateways"] = [
             (gw.stats if gw is not None else None) for gw in self._gateways
         ]

@@ -52,7 +52,7 @@ from ..core.errors import BatcherFinalizedError, ConfigError
 from ..core.serialize import FramedWriter
 from ..core.shrink import ShrinkCodec, cs_to_bytes
 from ..core.streaming import KnowledgeBase
-from ..core.types import ShrinkConfig
+from ..core.types import ShrinkConfig, merge_backend_stats
 
 __all__ = ["RaggedBatcher"]
 
@@ -143,6 +143,7 @@ class RaggedBatcher:
         self._flushes = 0
         self._samples_in = 0
         self._payload_bytes = 0
+        self._backend_stats: dict[str, dict[str, int]] = {}
         self._finalized = False
         self._container: Optional[bytes] = None
 
@@ -242,6 +243,7 @@ class RaggedBatcher:
         )
         sealed = []
         for (sid, ps), vals, cs in zip(taken, arrs, css):
+            merge_backend_stats(self._backend_stats, cs.backend_stats())
             payload = cs_to_bytes(cs)
             self.kb.ingest_base(cs.base)
             t_lo = ps.start
@@ -279,5 +281,6 @@ class RaggedBatcher:
             "samples_ingested": self._samples_in,
             "samples_pending": self._pending_samples,
             "payload_bytes": self._payload_bytes,
+            "backends": {b: dict(d) for b, d in self._backend_stats.items()},
             "kb": self.kb.stats(),
         }

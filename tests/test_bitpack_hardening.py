@@ -1,0 +1,94 @@
+"""Negative-path tests for the ``bitpack`` entropy backend (tag id 4),
+mirroring ``test_serialize_hardening.py``: truncated payloads, trailing
+garbage, a bad width byte, and foreign tag bytes must each raise a typed
+:class:`ShrinkError` (a ``ValueError`` subclass) — never a raw
+``struct.error`` / ``IndexError``, and never garbage ints."""
+import numpy as np
+import pytest
+
+from repro.core import entropy
+from repro.core.errors import (
+    CorruptFrameError,
+    FormatError,
+    ShrinkError,
+    TruncatedArchiveError,
+)
+
+_RNG = np.random.default_rng(20250808)
+
+
+@pytest.fixture(scope="module")
+def blob():
+    q = np.round(_RNG.standard_normal(1000) * 300).astype(np.int64)
+    b = entropy.encode_ints(q, backend="bitpack")
+    assert b[0] == entropy._BACKENDS["bitpack"]
+    return b
+
+
+def test_truncated_at_every_boundary(blob):
+    """Every strict prefix (empty blob, mid-header, mid-payload) raises a
+    typed truncation error."""
+    for cut in range(len(blob)):
+        with pytest.raises(ShrinkError):
+            entropy.decode_ints(blob[:cut])
+    # the specific types at the interesting boundaries:
+    with pytest.raises(TruncatedArchiveError):
+        entropy.decode_ints(b"")  # no tag byte at all
+    with pytest.raises(TruncatedArchiveError):
+        entropy.decode_ints(blob[:10])  # inside the <qQB> header
+    with pytest.raises(TruncatedArchiveError):
+        entropy.decode_ints(blob[:-1])  # payload one byte short
+
+
+def test_trailing_bytes_rejected(blob):
+    """count * width pins the exact payload length; any trailing bytes mean
+    the stream is not what its header claims."""
+    with pytest.raises(CorruptFrameError):
+        entropy.decode_ints(blob + b"\x00")
+    with pytest.raises(CorruptFrameError):
+        entropy.decode_ints(blob + b"\xff" * 9)
+
+
+def test_trailing_bytes_rejected_width_zero():
+    """Width-0 (constant) streams have an empty payload — the length check
+    must still fire rather than silently ignoring extra bytes."""
+    q = np.full(64, 7, dtype=np.int64)
+    b = entropy.encode_ints(q, backend="bitpack")
+    assert len(b) == 18
+    with pytest.raises(CorruptFrameError):
+        entropy.decode_ints(b + b"\x01")
+
+
+def test_bad_width_byte(blob):
+    """The width byte is <= 64 by construction; 65..255 is a format error,
+    not an allocation of a 200-bit bit matrix."""
+    for bad_width in (65, 100, 255):
+        mutated = bytearray(blob)
+        mutated[17] = bad_width  # width byte: tag(1) + lo(8) + count(8)
+        with pytest.raises(FormatError):
+            entropy.decode_ints(bytes(mutated))
+
+
+def test_foreign_tag_byte(blob):
+    """An unknown backend tag raises FormatError instead of KeyError —
+    bitpack payloads can never be misparsed as a future backend's."""
+    for tag in (5, 17, 255):
+        with pytest.raises(FormatError):
+            entropy.decode_ints(bytes([tag]) + blob[1:])
+
+
+def test_corrupt_count_never_garbage(blob):
+    """Inflating the count field makes the payload short for the claimed
+    stream — a typed truncation error, never a misaligned decode."""
+    mutated = bytearray(blob)
+    mutated[9:17] = (2**40).to_bytes(8, "little")  # count field
+    with pytest.raises(TruncatedArchiveError):
+        entropy.decode_ints(bytes(mutated))
+
+
+def test_all_errors_are_value_errors(blob):
+    """Callers that predate the taxonomy catch ValueError; every typed
+    error here must still satisfy that contract."""
+    for data in (b"", blob[:5], blob + b"\x00", bytes([250]) + blob[1:]):
+        with pytest.raises(ValueError):
+            entropy.decode_ints(data)

@@ -33,7 +33,7 @@ def _adversarial_streams() -> dict[str, np.ndarray]:
 _STREAMS = _adversarial_streams()
 
 
-@pytest.mark.parametrize("backend", ["rc", "rans", "zstd", "raw", "best"])
+@pytest.mark.parametrize("backend", ["rc", "rans", "zstd", "raw", "bitpack", "best"])
 @pytest.mark.parametrize("name", sorted(_STREAMS))
 def test_roundtrip(backend, name):
     if backend == "zstd" and "zstd" not in entropy.available_backends():
@@ -88,7 +88,164 @@ def test_ragged_batch_encoder_routing():
 
 def test_available_backends_contains_vector_engine():
     out = entropy.available_backends()
-    assert "rans" in out and "rc" in out and "raw" in out
+    assert "rans" in out and "rc" in out and "raw" in out and "bitpack" in out
+
+
+# ------------------------------------------------------------------ #
+# bitpack backend
+# ------------------------------------------------------------------ #
+
+def test_bitpack_never_larger_than_raw():
+    """bitpack uses the same fixed width as raw but a 0-bit encoding for
+    constant streams, so it can never lose to raw on ANY stream."""
+    for name, q in _STREAMS.items():
+        bp = entropy.encode_ints(q, backend="bitpack")
+        raw = entropy.encode_ints(q, backend="raw")
+        assert len(bp) <= len(raw), name
+
+
+def test_bitpack_constant_stream_is_header_only():
+    q = np.full(100_000, -987654321, dtype=np.int64)
+    blob = entropy.encode_ints(q, backend="bitpack")
+    assert len(blob) == 1 + 17  # tag + <qQB> header, zero payload bits
+    np.testing.assert_array_equal(entropy.decode_ints(blob), q)
+
+
+# ------------------------------------------------------------------ #
+# adaptive dispatch (cost model)
+# ------------------------------------------------------------------ #
+
+def test_predictions_exact_for_packers():
+    """raw and bitpack predictions are closed forms of their wire layouts —
+    they must match the actual encoded size byte-for-byte, always.  This
+    is what makes a mispredicted tie harmless: the model can only err
+    toward an exactly-costed backend."""
+    for name, q in _STREAMS.items():
+        pred = entropy.predict_backend_sizes(q)
+        assert pred["raw"] == len(entropy.encode_ints(q, backend="raw")), name
+        assert pred["bitpack"] == len(entropy.encode_ints(q, backend="bitpack")), name
+
+
+def test_rans_prediction_bounded():
+    """The rANS estimate (order-0 plane entropy + exact header terms) must
+    stay within a bounded factor of the actual size on every adversarial
+    stream — a drifting cost model silently erodes compression ratio."""
+    for name, q in _STREAMS.items():
+        pred = entropy.predict_backend_sizes(q)["rans"]
+        actual = len(entropy.encode_ints(q, backend="rans"))
+        assert actual <= pred * 1.1 + 64, (name, actual, pred)
+        assert pred <= actual * 1.6 + 64, (name, actual, pred)
+
+
+def test_choose_backend_sane_picks():
+    rng = np.random.default_rng(3)
+    gauss = np.round(rng.standard_normal(50_000) * 200).astype(np.int64)
+    assert entropy.choose_backend(gauss) == "rans"  # statistical structure
+    const = np.full(10_000, 42, dtype=np.int64)
+    assert entropy.choose_backend(const) == "bitpack"  # 18 bytes total
+    uniform = rng.integers(-(2**45), 2**45, 50_000).astype(np.int64)
+    # near-uniform planes: entropy coding can't beat the bit width, and
+    # rANS would pay per-plane table headers on top
+    assert entropy.choose_backend(uniform) == "bitpack"
+
+
+def test_adaptive_batch_byte_identical_to_scalar():
+    """backend='best' through the batch API must equal the scalar adaptive
+    path blob-for-blob (rect and ragged), for mixes that route to
+    different backends — the same invariant the rans machines pin."""
+    rng = np.random.default_rng(5)
+    rect = np.stack([
+        np.round(rng.standard_normal(4096) * 150).astype(np.int64),  # rans
+        np.zeros(4096, dtype=np.int64),                              # bitpack
+        rng.integers(-(2**40), 2**40, 4096),                         # bitpack
+        np.round(rng.standard_normal(4096) * 3).astype(np.int64),    # rans
+    ])
+    for row, blob in zip(rect, entropy.encode_ints_batch(rect, backend="best")):
+        assert blob == entropy.encode_ints(row, backend="best")
+        np.testing.assert_array_equal(entropy.decode_ints(blob), row)
+    ragged = [
+        np.zeros(0, dtype=np.int64),
+        np.full(5, 9, dtype=np.int64),
+        np.round(rng.standard_normal(2000) * 99).astype(np.int64),
+        rng.integers(-(2**50), 2**50, 700),
+        _STREAMS["extremes"],
+    ]
+    for q, blob in zip(ragged, entropy.encode_ints_batch(ragged, backend="best")):
+        assert blob == entropy.encode_ints(q, backend="best")
+        np.testing.assert_array_equal(entropy.decode_ints(blob), q)
+
+
+def test_adaptive_matches_forced_rans_values():
+    """Deterministic mirror of the hypothesis campaign: whatever backend
+    the model picks, decoded values equal the forced-rans decode."""
+    rng = np.random.default_rng(11)
+    for trial in range(25):
+        n = int(rng.integers(0, 3000))
+        scale = float(rng.choice([0.0, 1.0, 100.0, 1e9, 1e17]))
+        q = np.round(rng.standard_normal(n) * scale).astype(np.int64)
+        via_best = entropy.decode_ints(entropy.encode_ints(q, backend="best"))
+        via_rans = entropy.decode_ints(entropy.encode_ints(q, backend="rans"))
+        np.testing.assert_array_equal(via_best, via_rans)
+        np.testing.assert_array_equal(via_best, q)
+
+
+def test_exhaustive_never_larger_than_adaptive():
+    """exhaustive=True is the brute-force size oracle; the cost-model pick
+    may tie it but never beat it."""
+    for name, q in _STREAMS.items():
+        if q.size > 30_000:
+            q = q[:30_000]  # exhaustive includes the python rc oracle
+        ex = len(entropy.encode_ints(q, backend="best", exhaustive=True))
+        ad = len(entropy.encode_ints(q, backend="best"))
+        assert ex <= ad, name
+
+
+def test_decode_ints_batch_mixed_backends():
+    rng = np.random.default_rng(13)
+    qs = [
+        np.round(rng.standard_normal(500) * 80).astype(np.int64)
+        for _ in range(3)
+    ] + [np.full(200, 5, dtype=np.int64), np.zeros(0, dtype=np.int64)]
+    blobs = [
+        entropy.encode_ints(q, backend=b)
+        for q, b in zip(qs, ["rans", "raw", "bitpack", "best", "rans"])
+    ]
+    for q, got in zip(qs, entropy.decode_ints_batch(blobs)):
+        np.testing.assert_array_equal(got, q)
+
+
+@pytest.mark.skipif(
+    "zstd" not in entropy.available_backends(), reason="zstandard not installed"
+)
+def test_zstd_batch_reuses_one_compressor(monkeypatch):
+    """The batch path must construct exactly ONE ZstdCompressor (and the
+    batched decode one ZstdDecompressor) regardless of batch size — the
+    per-stream-context regression this PR retired — without changing a
+    single output byte."""
+    rng = np.random.default_rng(17)
+    qs = [np.round(rng.standard_normal(400) * 50).astype(np.int64) for _ in range(8)]
+    scalar = [entropy.encode_ints(q, backend="zstd") for q in qs]
+
+    made = {"c": 0, "d": 0}
+    real_c, real_d = entropy._zstd.ZstdCompressor, entropy._zstd.ZstdDecompressor
+
+    def counting_c(*a, **k):
+        made["c"] += 1
+        return real_c(*a, **k)
+
+    def counting_d(*a, **k):
+        made["d"] += 1
+        return real_d(*a, **k)
+
+    monkeypatch.setattr(entropy._zstd, "ZstdCompressor", counting_c)
+    monkeypatch.setattr(entropy._zstd, "ZstdDecompressor", counting_d)
+    blobs = entropy.encode_ints_batch(qs, backend="zstd")
+    assert made["c"] == 1
+    assert blobs == scalar  # shared context changes nothing on the wire
+    got = entropy.decode_ints_batch(blobs)
+    assert made["d"] == 1
+    for q, v in zip(qs, got):
+        np.testing.assert_array_equal(v, q)
 
 
 def test_best_picks_a_small_backend():
