@@ -1,0 +1,196 @@
+"""KB-store benchmarks: cross-archive dictionary dedup, measured.
+
+The paper's compression-ratio-grows-with-data claim hinges on semantic
+lines repeating; per-archive KBs pay that dictionary once PER ARCHIVE.
+This bench builds a fleet-shaped corpus — many small archives whose
+segments tile a small shared motif bank, i.e. exactly the cross-archive
+repetition the store exists to harvest — twice over identical data:
+
+* **inline**: every archive self-contained (its own SHKB footer);
+* **shared**: every archive in ref mode against one :class:`KBStore`
+  (footer carries only the ``kb_snapshot_ref``), plus ONE latest SHKS
+  snapshot blob that amortizes the dictionary across the corpus.
+
+Every archive is then decoded both ways and compared exactly; the store
+is compacted, spilled, and reloaded, and the re-based containers are
+decoded again — any float mismatch counts as a differential failure, so
+the byte win can never be bought with silent corruption.
+
+Claims:
+
+``C_kbstore_cr``        — shared-store corpus bytes (ref containers +
+                          the one snapshot) <= 0.9x the per-archive
+                          inline corpus bytes over identical data.
+``C_kbstore_roundtrip`` — zero decode mismatches across ref-vs-inline,
+                          post-compaction, and post-spill/load paths,
+                          and every container KB view rebuilt from the
+                          store equals the writer's KB exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ShrinkConfig, ShrinkStreamCodec, decode_series
+from repro.core.semantics import global_range
+from repro.core.serialize import parse_framed_container, read_snapshot_ref
+from repro.serving import KBStore
+
+from .datasets import save_result
+
+_DECIMALS = 3
+
+
+def _motif_bank(n_motifs: int, motif_len: int, seed: int) -> list[np.ndarray]:
+    """A small bank of piecewise-linear motifs: each is a dozen-odd ramps,
+    so the semantic extractor summarizes it with a batch of KB lines that
+    recur identically wherever the motif is tiled — across archives, the
+    exact repetition the shared store harvests."""
+    rng = np.random.default_rng(seed)
+    bank = []
+    for _ in range(n_motifs):
+        knots = np.sort(
+            rng.choice(np.arange(4, motif_len - 4), size=15, replace=False)
+        )
+        xs = np.concatenate([[0], knots, [motif_len - 1]])
+        ys = np.round(rng.uniform(-4.0, 4.0, size=xs.size), 1)
+        bank.append(np.round(np.interp(np.arange(motif_len), xs, ys), _DECIMALS))
+    return bank
+
+
+def _archive_series(bank: list[np.ndarray], tiles: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.concatenate([bank[rng.integers(0, len(bank))] for _ in range(tiles)])
+
+
+def _corpus(n_archives: int, tiles: int, seed: int = 11) -> list[np.ndarray]:
+    bank = _motif_bank(n_motifs=8, motif_len=128, seed=seed)
+    return [_archive_series(bank, tiles, seed=seed + 1 + i) for i in range(n_archives)]
+
+
+def kbstore_json(quick: bool = False) -> dict:
+    import tempfile
+
+    n_archives, tiles = (32, 2) if quick else (64, 2)
+    series = _corpus(n_archives, tiles)
+    allv = np.concatenate(series)
+    vr = global_range(allv)
+    cfg = ShrinkConfig(eps_b=0.05 * (vr[1] - vr[0]), lam=1e-3)
+    eps = [0.02 * (vr[1] - vr[0])]
+
+    def encode(v, store=None, source=None):
+        # "best" = per-stream cost-model backend routing; small frames take
+        # the table-free bitpack path, so the dictionary (not entropy-coder
+        # overhead) dominates the archive byte budget
+        sc = ShrinkStreamCodec(
+            cfg, eps_targets=eps, decimals=_DECIMALS, backend="best",
+            value_range=vr, frame_len=tiles * 128, kb_store=store, source=source,
+        )
+        sc.ingest(v)
+        return sc, sc.finalize()
+
+    # pass 1: self-contained archives (the status quo)
+    inline_blobs = [encode(v)[1] for v in series]
+    inline_bytes = sum(len(b) for b in inline_blobs)
+    inline_kb_bytes = sum(
+        len(parse_framed_container(b)[1]) for b in inline_blobs
+    )
+
+    # pass 2: identical data through one shared store, ref-mode footers
+    store = KBStore(cfg)
+    ref_codecs = [
+        encode(v, store=store, source=f"ar{i}") for i, v in enumerate(series)
+    ]
+    ref_blobs = [store.container(f"ar{i}") for i in range(n_archives)]
+    snapshot_bytes = len(store.snapshots[-1].blob)
+    shared_bytes = sum(len(b) for b in ref_blobs) + snapshot_bytes
+
+    mismatches = 0
+    kb_mismatches = 0
+    for i, v in enumerate(series):
+        a = decode_series(inline_blobs[i], 0, eps[0])
+        b = decode_series(ref_blobs[i], 0, eps[0])
+        if not np.array_equal(a, b) or float(np.abs(a - v).max()) > eps[0] + 1e-9:
+            mismatches += 1
+        ref = read_snapshot_ref(ref_blobs[i])
+        kb = store.container_kb(ref)
+        sc = ref_codecs[i][0]
+        if kb.canonical() != sc.kb.canonical() or [
+            e.refs for e in kb.entries
+        ] != [e.refs for e in sc.kb.entries]:
+            kb_mismatches += 1
+
+    # lifecycle: detach a third of the corpus, compact, verify re-based
+    # containers decode identically, then spill + reload and re-resolve
+    dropped = list(range(0, n_archives, 3))
+    for i in dropped:
+        store.detach(f"ar{i}")
+    compact_rep = store.compact()
+    survivors = [i for i in range(n_archives) if i not in dropped]
+    for i in survivors:
+        if not np.array_equal(
+            decode_series(store.container(f"ar{i}"), 0, eps[0]),
+            decode_series(inline_blobs[i], 0, eps[0]),
+        ):
+            mismatches += 1
+    with tempfile.TemporaryDirectory() as d:
+        store.spill(d)
+        loaded = KBStore.load(d)
+        for i in survivors:
+            blob = store.container(f"ar{i}")
+            ref = read_snapshot_ref(blob)
+            kb = loaded.container_kb(ref)
+            if kb.canonical() != ref_codecs[i][0].kb.canonical():
+                kb_mismatches += 1
+
+    st = store.stats()
+    out = {
+        "quick": quick,
+        "corpus": {
+            "archives": n_archives,
+            "samples": int(allv.size),
+            "raw_mb": round(allv.nbytes / 1e6, 3),
+        },
+        "inline": {
+            "total_bytes": inline_bytes,
+            "kb_bytes": inline_kb_bytes,
+            "kb_share": round(inline_kb_bytes / inline_bytes, 4),
+        },
+        "shared": {
+            "container_bytes": shared_bytes - snapshot_bytes,
+            "snapshot_bytes": snapshot_bytes,
+            "total_bytes": shared_bytes,
+            "store_live_entries": st["live"],
+            "store_dedup_ratio": round(st["dedup_ratio"], 2),
+        },
+        "cr_shared_over_inline": round(shared_bytes / inline_bytes, 4),
+        "compaction": {
+            "dropped_entries": compact_rep["dropped"],
+            "rebased_containers": len(compact_rep["rebased"]),
+        },
+        "decode_mismatches": mismatches,
+        "kb_view_mismatches": kb_mismatches,
+    }
+    save_result("kbstore", out)
+    return out
+
+
+def validate_claims(kb: dict) -> dict:
+    checks = {
+        "C_kbstore_cr": {
+            "cr_shared_over_inline": kb["cr_shared_over_inline"],
+            "inline_bytes": kb["inline"]["total_bytes"],
+            "shared_bytes": kb["shared"]["total_bytes"],
+            "inline_kb_share": kb["inline"]["kb_share"],
+            "pass": kb["cr_shared_over_inline"] <= 0.9,
+        },
+        "C_kbstore_roundtrip": {
+            "decode_mismatches": kb["decode_mismatches"],
+            "kb_view_mismatches": kb["kb_view_mismatches"],
+            "rebased_containers": kb["compaction"]["rebased_containers"],
+            "pass": kb["decode_mismatches"] == 0
+            and kb["kb_view_mismatches"] == 0
+            and kb["compaction"]["rebased_containers"] > 0,
+        },
+    }
+    save_result("claims_kbstore", checks)
+    return checks

@@ -18,6 +18,7 @@ from . import (
     bench_backends,
     bench_compression,
     bench_fleet,
+    bench_kbstore,
     bench_progressive,
     bench_ragged,
     bench_robustness,
@@ -282,6 +283,31 @@ def main(argv=None) -> int:
         f"{k['SILENT']} SILENT; byte mismatches={fl['byte_mismatch']}"
     )
     checks.update(bench_fleet.validate_claims(fl))
+
+    print("\n== Cross-archive KB store (shared dictionary vs per-archive) ==")
+    kbs = bench_kbstore.kbstore_json(quick=args.quick)
+    engine["kbstore"] = kbs
+    print(
+        f"  corpus[{kbs['corpus']['archives']} archives, "
+        f"{kbs['corpus']['samples']:,} samples]  "
+        f"inline={kbs['inline']['total_bytes']:,}B "
+        f"(KB share {kbs['inline']['kb_share']:.1%})"
+    )
+    print(
+        f"  shared={kbs['shared']['total_bytes']:,}B "
+        f"({kbs['shared']['container_bytes']:,}B containers + "
+        f"{kbs['shared']['snapshot_bytes']:,}B snapshot; "
+        f"{kbs['shared']['store_live_entries']} live entries, "
+        f"dedup {kbs['shared']['store_dedup_ratio']:.1f}x)  "
+        f"CR={kbs['cr_shared_over_inline']:.3f}"
+    )
+    print(
+        f"  lifecycle: compacted {kbs['compaction']['dropped_entries']} entries, "
+        f"rebased {kbs['compaction']['rebased_containers']} containers; "
+        f"decode mismatches={kbs['decode_mismatches']}, "
+        f"KB-view mismatches={kbs['kb_view_mismatches']}"
+    )
+    checks.update(bench_kbstore.validate_claims(kbs))
     # machine-readable perf trajectory for future PRs to diff against; only
     # full-size runs update the repo-root trajectory (quick numbers live in
     # artifacts/bench via save_result and must not clobber the baseline)

@@ -96,12 +96,16 @@ class AnalyticsEngine:
         source: bytes | RangeQueryBatcher,
         cache_frames: int = 32,
         degraded_ok: bool = False,
+        kb_store=None,  # serving.kbstore.KBStore, forwarded to the batcher
     ):
         if isinstance(source, RangeQueryBatcher):
             self.batcher = source  # inherits the batcher's degraded_ok
         else:
             self.batcher = RangeQueryBatcher(
-                source, cache_frames=cache_frames, degraded_ok=degraded_ok
+                source,
+                cache_frames=cache_frames,
+                degraded_ok=degraded_ok,
+                kb_store=kb_store,
             )
         self._sketches: dict[int, _FrameSketch] = {}
         self.stats = {

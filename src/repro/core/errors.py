@@ -15,6 +15,8 @@ the corrupt unit instead of failing the whole query.  The taxonomy:
 ├── ``RangeCoverageError``     query range empty / not covered / gapped
 ├── ``ConfigError``            invalid construction parameters
 ├── ``BatcherFinalizedError``  use-after-finalize on an ingest batcher
+├── ``KBReferenceError``       knowledge-base refcount/id accounting broken (``entry=``)
+├── ``StaleSnapshotError``     kb_snapshot_ref does not resolve against the store
 └── serving/operational
     ├── ``TransientError``     retryable (injected flake, timeout, I/O)
     ├── ``DeadlineExceededError``  per-request deadline blew
@@ -42,6 +44,8 @@ __all__ = [
     "RangeCoverageError",
     "ConfigError",
     "BatcherFinalizedError",
+    "KBReferenceError",
+    "StaleSnapshotError",
     "TransientError",
     "DeadlineExceededError",
     "BackpressureError",
@@ -64,11 +68,13 @@ class ShrinkError(ValueError):
         frame_index: int | None = None,
         offset: int | None = None,
         layer: int | None = None,
+        entry: int | None = None,
     ):
         self.series_id = series_id
         self.frame_index = frame_index
         self.offset = offset
         self.layer = layer
+        self.entry = entry
         ctx = []
         if series_id is not None:
             ctx.append(f"series={series_id}")
@@ -78,6 +84,8 @@ class ShrinkError(ValueError):
             ctx.append(f"layer={layer}")
         if offset is not None:
             ctx.append(f"offset={offset}")
+        if entry is not None:
+            ctx.append(f"entry={entry}")
         super().__init__(message + (f" [{', '.join(ctx)}]" if ctx else ""))
         self.message = message
 
@@ -89,6 +97,7 @@ class ShrinkError(ValueError):
             "frame_index": self.frame_index,
             "offset": self.offset,
             "layer": self.layer,
+            "entry": self.entry,
         }
 
 
@@ -129,6 +138,20 @@ class ConfigError(ShrinkError):
 
 class BatcherFinalizedError(ShrinkError):
     """An ingest batcher was used after ``finalize()``."""
+
+
+class KBReferenceError(ShrinkError):
+    """Knowledge-base reference accounting is broken: a refcount would go
+    negative, an entry id is out of range, or an attach handle is unknown.
+    ``entry=`` names the offending KB entry id when one is known."""
+
+
+class StaleSnapshotError(ShrinkError):
+    """A ``kb_snapshot_ref`` does not resolve against the KB store: the
+    snapshot version is unknown (evicted, compacted away, or from another
+    store lineage), the semantic id disagrees, or a referenced entry id
+    was retired.  Containers carrying an inline footer KB fall back to it;
+    ref-only containers surface this error."""
 
 
 # --------------------------------------------------------------------- #

@@ -12,6 +12,7 @@ and the golden fixtures under ``tests/golden/``.
 """
 from __future__ import annotations
 
+import dataclasses
 import struct
 import zlib
 
@@ -50,6 +51,8 @@ __all__ = [
     "parse_framed_container",
     "frame_payload",
     "kb_snapshot_id",
+    "KBSnapshotRef",
+    "read_snapshot_ref",
 ]
 
 _BASE_MAGIC = b"SHRB"
@@ -62,7 +65,9 @@ _RAW_SLOPE = 255
 
 _STREAM_MAGIC = b"SHRKS"
 _STREAM_END_MAGIC = b"SHRE"
-_STREAM_VERSION = 1
+# v2 appended the kb_snapshot_ref section (flag byte + optional ref) to the
+# footer, after the inline knowledge-base section.  v1 blobs are rejected.
+_STREAM_VERSION = 2
 _TAIL_LEN = 8 + 4 + 4  # u64 footer offset + u32 footer crc + end magic
 
 
@@ -367,6 +372,30 @@ def decode_pyramid(data: bytes, strict: bool = True) -> ResidualPyramid:
 # --------------------------------------------------------------------- #
 # SHRKS framed stream container (layout table in the module docstring)
 # --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class KBSnapshotRef:
+    """Footer pointer from a container to a ``KBStore`` snapshot
+    (``serving.kbstore``): instead of (or in addition to) carrying the
+    whole knowledge base inline, the container records *which* store
+    snapshot holds its lines and how its container-local entry ids map
+    into that snapshot's id space.
+
+    ``remap[i]`` is the store entry id of container-local entry ``i``;
+    ``refs[i]`` is this container's reference count on that line — so a
+    resolver can rebuild the container's private KB view (positional ids,
+    exact refcounts) from the snapshot alone.  ``entries`` is the
+    snapshot's total id space and ``sem_id`` its order-invariant semantic
+    identity (``KnowledgeBase.snapshot_id`` over live lines) — both are
+    cross-checked at resolve time so a ref never silently binds to the
+    wrong snapshot."""
+
+    version: int
+    entries: int
+    sem_id: int
+    remap: tuple[int, ...] = ()
+    refs: tuple[int, ...] = ()
+
+
 class FramedWriter:
     """Append-only writer for the ``SHRKS`` container.
 
@@ -403,7 +432,9 @@ class FramedWriter:
         self._frames.append(meta)
         return meta
 
-    def finish(self, kb_bytes: bytes = b"") -> bytes:
+    def finish(
+        self, kb_bytes: bytes = b"", snapshot_ref: KBSnapshotRef | None = None
+    ) -> bytes:
         if self._finished:
             raise BatcherFinalizedError("container already finished")
         self._finished = True
@@ -419,6 +450,25 @@ class FramedWriter:
             footer += struct.pack("<I", m.crc32)
         write_varint(footer, len(kb_bytes))
         footer += kb_bytes
+        if snapshot_ref is None:
+            footer.append(0)
+        else:
+            if len(snapshot_ref.remap) != len(snapshot_ref.refs):
+                raise ConfigError(
+                    "kb_snapshot_ref remap/refs length mismatch "
+                    f"({len(snapshot_ref.remap)} != {len(snapshot_ref.refs)})"
+                )
+            footer.append(1)
+            write_varint(footer, snapshot_ref.version)
+            write_varint(footer, snapshot_ref.entries)
+            footer += struct.pack("<I", snapshot_ref.sem_id & 0xFFFFFFFF)
+            write_varint(footer, len(snapshot_ref.remap))
+            prev = 0
+            for sid in snapshot_ref.remap:
+                _write_svarint(footer, sid - prev)
+                prev = sid
+            for r in snapshot_ref.refs:
+                write_varint(footer, r)
         footer_offset = len(self._buf)
         self._buf += footer
         self._buf += struct.pack("<QI", footer_offset, zlib.crc32(bytes(footer)) & 0xFFFFFFFF)
@@ -426,17 +476,17 @@ class FramedWriter:
         return bytes(self._buf)
 
 
-def parse_framed_container(blob: bytes) -> tuple[list[FrameMeta], bytes]:
-    """Validate head/tail/footer of a ``SHRKS`` container and return
-    (frame directory, kb_bytes).  Raises a :class:`ShrinkError` subclass
-    on foreign, truncated, or corrupt input (including a footer CRC
-    mismatch).  Frame *payload* CRCs are NOT checked here — see
-    ``frame_payload``."""
+def _parse_footer(
+    blob: bytes,
+) -> tuple[list[FrameMeta], bytes, KBSnapshotRef | None]:
     blob = bytes(blob)
     if len(blob) < 6 or blob[:5] != _STREAM_MAGIC:
         raise FormatError("bad container magic: not a SHRKS blob")
     if blob[5] != _STREAM_VERSION:
-        raise FormatError(f"unsupported SHRKS version {blob[5]}")
+        raise FormatError(
+            f"unsupported SHRKS version {blob[5]} "
+            f"(this build reads v{_STREAM_VERSION} only)"
+        )
     if len(blob) < 6 + _TAIL_LEN:
         raise TruncatedArchiveError("truncated SHRKS container: missing tail")
     if blob[-4:] != _STREAM_END_MAGIC:
@@ -479,18 +529,83 @@ def parse_framed_container(blob: bytes) -> tuple[list[FrameMeta], bytes]:
                 )
             )
         kb_len, pos = read_varint(footer, pos)
-        if pos + kb_len != len(footer):
+        if pos + kb_len > len(footer):
             raise CorruptFrameError(
                 "corrupt SHRKS container: knowledge-base section length mismatch"
             )
         kb_bytes = bytes(footer[pos : pos + kb_len])
+        pos += kb_len
+        if pos >= len(footer):
+            raise TruncatedArchiveError(
+                "truncated SHRKS container: missing kb_snapshot_ref flag"
+            )
+        flag = footer[pos]
+        pos += 1
+        ref: KBSnapshotRef | None = None
+        if flag == 1:
+            version, pos = read_varint(footer, pos)
+            entries, pos = read_varint(footer, pos)
+            (sem_id,) = struct.unpack_from("<I", footer, pos)
+            pos += 4
+            n_ref, pos = read_varint(footer, pos)
+            remap: list[int] = []
+            prev = 0
+            for _ in range(n_ref):
+                d, pos = _read_svarint(footer, pos)
+                prev += d
+                if not 0 <= prev < entries:
+                    raise CorruptFrameError(
+                        "corrupt SHRKS container: kb_snapshot_ref remap id "
+                        f"{prev} outside snapshot id space [0, {entries})"
+                    )
+                remap.append(prev)
+            refs: list[int] = []
+            for _ in range(n_ref):
+                r, pos = read_varint(footer, pos)
+                refs.append(r)
+            ref = KBSnapshotRef(
+                version=version,
+                entries=entries,
+                sem_id=sem_id,
+                remap=tuple(remap),
+                refs=tuple(refs),
+            )
+        elif flag != 0:
+            raise CorruptFrameError(
+                f"corrupt SHRKS container: bad kb_snapshot_ref flag {flag}"
+            )
+        if pos != len(footer):
+            raise CorruptFrameError(
+                "corrupt SHRKS container: trailing bytes after footer "
+                f"({len(footer) - pos} byte(s))"
+            )
     except ShrinkError:
         raise
     except (IndexError, struct.error) as e:
         raise CorruptFrameError(
             f"corrupt SHRKS container: footer parse failed: {e}"
         ) from e
+    return metas, kb_bytes, ref
+
+
+def parse_framed_container(blob: bytes) -> tuple[list[FrameMeta], bytes]:
+    """Validate head/tail/footer of a ``SHRKS`` container and return
+    (frame directory, kb_bytes).  Raises a :class:`ShrinkError` subclass
+    on foreign, truncated, or corrupt input (including a footer CRC
+    mismatch).  Frame *payload* CRCs are NOT checked here — see
+    ``frame_payload``.  The optional ``kb_snapshot_ref`` footer field is
+    validated structurally here too; read it with
+    :func:`read_snapshot_ref`."""
+    metas, kb_bytes, _ = _parse_footer(blob)
     return metas, kb_bytes
+
+
+def read_snapshot_ref(blob: bytes) -> KBSnapshotRef | None:
+    """The container's ``kb_snapshot_ref`` footer field, or ``None`` for a
+    self-contained container.  Same validation/raising as
+    :func:`parse_framed_container`."""
+    _, _, ref = _parse_footer(blob)
+    return ref
 
 
 def kb_snapshot_id(kb_bytes: bytes) -> int:

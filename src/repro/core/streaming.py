@@ -60,7 +60,9 @@ from .base import construct_base, origin_index
 from .errors import (
     ConfigError,
     FormatError,
+    KBReferenceError,
     RangeCoverageError,
+    ShrinkError,
     TruncatedArchiveError,
     UnknownSeriesError,
 )
@@ -73,6 +75,7 @@ from .serialize import (
     frame_payload,
     kb_snapshot_id,
     parse_framed_container,
+    read_snapshot_ref,
     read_varint,
     write_varint,
 )
@@ -227,9 +230,17 @@ class KnowledgeBase:
     def release(self, entry_ids: list[int]) -> None:
         """Drop one reference per id (e.g. a frame was deleted)."""
         for eid in entry_ids:
+            if not 0 <= eid < len(self.entries):
+                raise KBReferenceError(
+                    f"release of unknown KB entry id {eid} "
+                    f"(knowledge base holds {len(self.entries)} entries)",
+                    entry=eid,
+                )
             e = self.entries[eid]
             if e.refs <= 0:
-                raise ValueError(f"refcount underflow on KB entry {eid}")
+                raise KBReferenceError(
+                    f"refcount underflow on KB entry {eid}", entry=eid
+                )
             e.refs -= 1
 
     def stats(self) -> dict:
@@ -292,12 +303,38 @@ class KnowledgeBase:
                     scaled, pos = _read_svarint(data, pos)
                     slope = scaled / 10**digits
                 refs, pos = read_varint(data, pos)
-                eid = kb._find_or_add(level, oidx, slope, int(digits))
-                kb.entries[eid].refs += refs
+                # Append positionally: entry i of the blob MUST become entry
+                # id i, because frames resolve refs against positional ids
+                # (kb_epoch).  A duplicate line would silently collapse via
+                # _find_or_add and shift every later id — reject it instead.
+                key = (level, oidx) + _slope_key(slope, int(digits))
+                if key in kb._index:
+                    raise FormatError(
+                        f"duplicate knowledge-base line at entry {len(kb.entries)} "
+                        f"(same line as entry {kb._index[key]}); no writer "
+                        "produces duplicates — positional entry ids would shift"
+                    )
+                kb._index[key] = len(kb.entries)
+                kb.entries.append(
+                    KBEntry(
+                        level=level,
+                        origin_idx=oidx,
+                        slope=slope,
+                        slope_digits=int(digits),
+                        refs=refs,
+                    )
+                )
+        except ShrinkError:
+            raise
         except (IndexError, struct.error) as e:
             raise TruncatedArchiveError(
                 f"truncated or corrupt knowledge-base blob: {e}"
             ) from e
+        if pos != len(data):
+            raise FormatError(
+                f"trailing garbage after knowledge-base entries "
+                f"({len(data) - pos} byte(s) past entry {n - 1 if n else 'header'})"
+            )
         return kb
 
 
@@ -370,6 +407,16 @@ class ShrinkStreamCodec:
     n_hint:       pins the interval length L (Alg. 2); defaults to
                   ``frame_len``.  Both unset forces the deferred scan.
     kb:           share a KnowledgeBase across codecs; default fresh.
+    kb_store:     a ``serving.kbstore.KBStore`` to attach the finalized
+                  container's KB to.  The container footer then carries a
+                  ``kb_snapshot_ref`` into the store, and — unless
+                  ``inline_kb=True`` — omits the inline KB entirely (the
+                  cross-archive dedup win).
+    inline_kb:    force the inline footer KB on (self-contained fallback
+                  alongside the ref) or off; default ``None`` = inline
+                  exactly when no ``kb_store`` is attached.
+    source:       stable attach handle for ``kb_store`` (defaults to a
+                  store-assigned handle).
 
     ``ingest`` returns the frames sealed during the call (as
     ``(series_id, t_lo, t_hi)`` tuples); ``flush`` seals partial frames;
@@ -386,11 +433,19 @@ class ShrinkStreamCodec:
         frame_len: int | None = None,
         n_hint: int | None = None,
         kb: KnowledgeBase | None = None,
+        kb_store=None,  # serving.kbstore.KBStore (duck-typed: core must not import serving)
+        inline_kb: bool | None = None,
+        source: str | None = None,
     ):
         if 0.0 in eps_targets and decimals is None:
             raise ConfigError("lossless eps target 0.0 requires `decimals`")
         if frame_len is not None and frame_len < 1:
             raise ConfigError(f"frame_len must be >= 1, got {frame_len}")
+        if inline_kb is False and kb_store is None:
+            raise ConfigError(
+                "inline_kb=False requires a kb_store (a container with "
+                "neither an inline KB nor a snapshot ref loses its dictionary)"
+            )
         self.config = config
         self.eps_targets = list(eps_targets)
         self.decimals = decimals
@@ -401,6 +456,10 @@ class ShrinkStreamCodec:
         self.frame_len = frame_len
         self.n_hint = int(n_hint) if n_hint is not None else None
         self.kb = kb if kb is not None else KnowledgeBase(config)
+        self.kb_store = kb_store
+        self.inline_kb = inline_kb
+        self._store_source = source
+        self._store_handle: str | None = None
         n_for_l = self.n_hint if self.n_hint is not None else frame_len
         self.incremental = self.value_range is not None and n_for_l is not None
         if self.incremental:
@@ -461,12 +520,28 @@ class ShrinkStreamCodec:
 
     def finalize(self) -> bytes:
         """Flush everything and emit the SHRKS framed container (frames in
-        seal order, knowledge base in the footer)."""
+        seal order, knowledge base in the footer).  With a ``kb_store``
+        attached, the KB is attached to the store instead and the footer
+        carries a ``kb_snapshot_ref`` (plus the inline KB only when
+        ``inline_kb=True``); the finished container is registered with the
+        store for compaction re-basing."""
         self.flush()
         w = FramedWriter()
         for sid, t_lo, t_hi, epoch, payload in self._sealed:
             w.add_frame(sid, t_lo, t_hi, epoch, payload)
-        return w.finish(self.kb.to_bytes())
+        ref = None
+        if self.kb_store is not None:
+            # a stable handle makes re-finalize a replace, not a double-count
+            rec = self.kb_store.attach_kb(
+                self.kb, source=self._store_handle or self._store_source
+            )
+            self._store_handle = rec.handle
+            ref = rec.ref
+        inline = self.inline_kb if self.inline_kb is not None else self.kb_store is None
+        blob = w.finish(self.kb.to_bytes() if inline else b"", snapshot_ref=ref)
+        if self.kb_store is not None:
+            self.kb_store.register_container(self._store_handle, blob)
+        return blob
 
     @property
     def sealed_frames(self) -> list[tuple[int, int, int, int]]:
@@ -702,8 +777,12 @@ def routing_metadata(blob: bytes) -> dict:
     snapshot already contains every line the frame references
     (``self_contained``).  A container whose KB lags its frames — e.g. a
     replica paired with a stale KB snapshot — is routable only against a
-    newer snapshot with a matching ``kb_semantic_id`` lineage."""
+    newer snapshot with a matching ``kb_semantic_id`` lineage.  Ref-mode
+    containers surface their ``kb_snapshot_ref`` under ``"kb_ref"``
+    (``None`` otherwise); resolving it needs the KB store
+    (``serving.kbstore.resolve_container_kb``)."""
     metas, kb_bytes = parse_framed_container(blob)
+    ref = read_snapshot_ref(blob)
     kb = KnowledgeBase.from_bytes(kb_bytes) if kb_bytes else None
     max_epoch = max((m.kb_epoch for m in metas), default=0)
     return {
@@ -714,4 +793,14 @@ def routing_metadata(blob: bytes) -> dict:
         "kb_semantic_id": kb.snapshot_id() if kb is not None else 0,
         "max_frame_epoch": max_epoch,
         "self_contained": kb is not None and max_epoch <= kb.epoch,
+        "kb_ref": (
+            {
+                "version": ref.version,
+                "entries": ref.entries,
+                "sem_id": ref.sem_id,
+                "n_remap": len(ref.remap),
+            }
+            if ref is not None
+            else None
+        ),
     }

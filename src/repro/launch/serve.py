@@ -282,6 +282,12 @@ def _serve_chaos(args) -> int:
     retry-with-backoff, the per-frame circuit breaker, deadline
     enforcement, and shed-to-coarse backpressure — again with every
     answer differentially checked.
+
+    Phase 3 (KB store): faults against the cross-archive store path —
+    byte flips and truncations of SHKS snapshot blobs must raise typed
+    errors, a stale ``kb_snapshot_ref`` must fall back to the inline
+    footer KB (both-mode container) or raise ``StaleSnapshotError``
+    (ref-only), and decode of the faulted containers must stay exact.
     """
     from ..core import BYTES_PER_ROW, ShrinkConfig, ShrinkStreamCodec
     from ..core.errors import ShrinkError
@@ -383,9 +389,188 @@ def _serve_chaos(args) -> int:
         f"{tally2['ok']} ok, {tally2['degraded']} degraded, "
         f"{tally2['error']} typed errors, {tally2['SILENT']} SILENT"
     )
-    silent = tally["SILENT"] + tally2["SILENT"]
+    # phase 3: the KB-store path — snapshot corruption and stale refs
+    from ..core.errors import StaleSnapshotError
+    from ..core.streaming import decode_series
+    from ..serving import KBStore
+    from ..serving.kbstore import resolve_container_kb, snapshot_from_bytes
+    from ..testing import flip_byte, stale_snapshot_ref, truncate
+
+    store = KBStore(cfg)
+
+    def _store_codec(source, inline):
+        sc = ShrinkStreamCodec(
+            cfg, eps_targets=[eps], backend="rans",
+            value_range=(vmin, vmax), frame_len=args.frame_len,
+            kb_store=store, inline_kb=inline, source=source,
+        )
+        sc.ingest(v[0])
+        return sc.finalize()
+
+    ref_only = _store_codec("ref-only", None)
+    both = _store_codec("both", True)
+    snap = store.snapshots[-1].blob
+    frng = np.random.default_rng(args.chaos_seed + 3)
+    tally3 = {"typed": 0, "fallback": 0, "SILENT": 0}
+    n_snap_faults = max(16, args.corruptions)
+    for _ in range(n_snap_faults):
+        if frng.random() < 0.5:
+            bad, _ = flip_byte(snap, int(frng.integers(0, len(snap))),
+                               bit=int(frng.integers(0, 8)))
+        else:
+            bad, _ = truncate(snap, int(frng.integers(0, len(snap))))
+        try:
+            snapshot_from_bytes(bad)
+            tally3["SILENT"] += 1  # corrupt snapshot decoded without complaint
+        except ShrinkError:
+            tally3["typed"] += 1
+    pristine = decode_series(ref_only, 0, eps)
+    stale_ref_only, _ = stale_snapshot_ref(ref_only)
+    try:
+        resolve_container_kb(stale_ref_only, store)
+        tally3["SILENT"] += 1  # a stale ref bound to the wrong snapshot
+    except StaleSnapshotError:
+        tally3["typed"] += 1
+    stale_both, _ = stale_snapshot_ref(both)
+    _, origin = resolve_container_kb(stale_both, store)
+    if origin == "inline-fallback":
+        tally3["fallback"] += 1
+    else:
+        tally3["SILENT"] += 1
+    for mutant in (stale_ref_only, stale_both):
+        if not np.array_equal(decode_series(mutant, 0, eps), pristine):
+            tally3["SILENT"] += 1  # a footer fault must never move frame bytes
+    print(
+        f"phase 3: {n_snap_faults} snapshot faults + 2 stale refs — "
+        f"{tally3['typed']} typed, {tally3['fallback']} inline fallbacks, "
+        f"{tally3['SILENT']} SILENT"
+    )
+
+    silent = tally["SILENT"] + tally2["SILENT"] + tally3["SILENT"]
     print(f"silent corruptions: {silent}" + ("" if silent == 0 else "  <-- FAIL"))
     return 0 if silent == 0 else 1
+
+
+def _serve_kbstore(args) -> int:
+    """Cross-archive KB store demo: many small archives tiling a shared
+    motif bank are encoded twice — self-contained (inline footer KB) and
+    in ref mode against one shared :class:`KBStore` — then every archive
+    is decoded both ways and compared exactly.  The store is then
+    exercised through its whole lifecycle: detach a third of the corpus,
+    ``compact()`` (re-basing the survivors, decode re-verified), spill the
+    snapshots to disk, and reload; refs from the re-based containers must
+    resolve against the loaded store to the writers' exact KB views.
+    Exits nonzero on any decode or KB-view mismatch."""
+    import tempfile
+
+    from ..core import ShrinkConfig, ShrinkStreamCodec
+    from ..core.errors import StaleSnapshotError
+    from ..core.semantics import global_range
+    from ..core.serialize import parse_framed_container, read_snapshot_ref
+    from ..core.streaming import decode_series
+    from ..serving import KBStore
+
+    n_arch = 8 if args.quick else 32
+    rng = np.random.default_rng(args.chaos_seed)
+    motif_len, tiles = 128, 2
+    bank = []
+    for _ in range(8):  # piecewise-linear motifs: recurring KB lines
+        knots = np.sort(rng.choice(np.arange(4, motif_len - 4), 15, replace=False))
+        xs = np.concatenate([[0], knots, [motif_len - 1]])
+        ys = np.round(rng.uniform(-4.0, 4.0, size=xs.size), 1)
+        bank.append(np.round(np.interp(np.arange(motif_len), xs, ys), 3))
+    series = [
+        np.concatenate([bank[rng.integers(0, len(bank))] for _ in range(tiles)])
+        for _ in range(n_arch)
+    ]
+    vr = global_range(np.concatenate(series))
+    cfg = ShrinkConfig(eps_b=0.05 * (vr[1] - vr[0]), lam=1e-3)
+    eps = 0.02 * (vr[1] - vr[0])
+
+    def encode(v, store=None, source=None):
+        sc = ShrinkStreamCodec(
+            cfg, eps_targets=[eps], decimals=3, backend="best",
+            value_range=vr, frame_len=tiles * motif_len,
+            kb_store=store, source=source,
+        )
+        sc.ingest(v)
+        return sc, sc.finalize()
+
+    inline = [encode(v)[1] for v in series]
+    store = KBStore(cfg)
+    writers = [encode(v, store, f"ar{i}")[0] for i, v in enumerate(series)]
+    inline_bytes = sum(len(b) for b in inline)
+    shared_bytes = (
+        sum(len(store.container(f"ar{i}")) for i in range(n_arch))
+        + len(store.snapshots[-1].blob)
+    )
+    st = store.stats()
+    print(
+        f"corpus: {n_arch} archives x {tiles * motif_len} samples; "
+        f"inline={inline_bytes:,}B (KB share "
+        f"{sum(len(parse_framed_container(b)[1]) for b in inline) / inline_bytes:.1%}), "
+        f"shared={shared_bytes:,}B -> CR={shared_bytes / inline_bytes:.3f}"
+    )
+    print(
+        f"store: {st['live']} live entries, dedup {st['dedup_ratio']:.1f}x, "
+        f"{st['snapshots']} snapshots"
+    )
+
+    bad = 0
+    for i in range(n_arch):
+        if not np.array_equal(
+            decode_series(inline[i], 0, eps),
+            decode_series(store.container(f"ar{i}"), 0, eps),
+        ):
+            bad += 1
+    print(f"differential decode (ref vs inline): {n_arch - bad}/{n_arch} exact")
+
+    dropped = list(range(0, n_arch, 3))
+    old_refs = {i: read_snapshot_ref(store.container(f"ar{i}")) for i in dropped}
+    for i in dropped:
+        store.detach(f"ar{i}")
+    rep = store.compact()
+    survivors = [i for i in range(n_arch) if i not in dropped]
+    for i in survivors:
+        if not np.array_equal(
+            decode_series(store.container(f"ar{i}"), 0, eps),
+            decode_series(inline[i], 0, eps),
+        ):
+            bad += 1
+    stale_ok = 0
+    for ref in old_refs.values():
+        try:
+            store.resolve(ref)
+        except StaleSnapshotError:
+            stale_ok += 1
+    print(
+        f"compact: dropped {rep['dropped']} entries "
+        f"({rep['entries_before']} -> {rep['entries_after']}), rebased "
+        f"{len(rep['rebased'])} containers, decode exact; "
+        f"{stale_ok}/{len(old_refs)} retired refs typed stale"
+    )
+    bad += len(old_refs) - stale_ok
+
+    with tempfile.TemporaryDirectory() as d:
+        paths = store.spill(d)
+        loaded = KBStore.load(d)
+        kb_bad = 0
+        for i in survivors:
+            ref = read_snapshot_ref(store.container(f"ar{i}"))
+            kb = loaded.container_kb(ref)
+            if kb.canonical() != writers[i].kb.canonical():
+                kb_bad += 1
+        print(
+            f"spill/load: {len(paths)} snapshot file(s), sem_id match: "
+            f"{loaded.sem_id() == store.sem_id()}, "
+            f"{len(survivors) - kb_bad}/{len(survivors)} KB views exact"
+        )
+        bad += kb_bad
+        if loaded.sem_id() != store.sem_id():
+            bad += 1
+
+    print(f"mismatches: {bad}" + ("" if bad == 0 else "  <-- FAIL"))
+    return 0 if bad == 0 else 1
 
 
 class _SimClock:
@@ -657,7 +842,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--mode",
-        choices=["model", "range", "ingest", "analytics", "chaos", "fleet"],
+        choices=["model", "range", "ingest", "analytics", "chaos", "fleet", "kbstore"],
         default="model",
     )
     # model mode
@@ -694,6 +879,8 @@ def main(argv=None) -> int:
                     help="scaled-down fleet sim (CI smoke)")
     args = ap.parse_args(argv)
 
+    if args.mode == "kbstore":
+        return _serve_kbstore(args)
     if args.mode == "fleet":
         return _serve_fleet(args)
     if args.mode == "chaos":

@@ -1,9 +1,10 @@
 """Serving: KV caches (+ SHRINK quantized), continuous batching, batched
 range-query decode over streamed SHRINK containers, the ragged
-multi-sensor ingest scheduler, the fault-tolerant gateway, and the
-sharded multi-tenant fleet."""
+multi-sensor ingest scheduler, the fault-tolerant gateway, the sharded
+multi-tenant fleet, and the persistent cross-archive KB store."""
 from .kvcache import QuantizedKV, dequantize_cache, promote_caches, quantize_cache  # noqa: F401
 from .batching import ContinuousBatcher, RangeQuery, RangeQueryBatcher, Request  # noqa: F401
 from .ragged import RaggedBatcher  # noqa: F401
 from .gateway import CircuitBreaker, FaultTolerantGateway, RetryPolicy  # noqa: F401
 from .fleet import ShrinkFleet, TenantQuota  # noqa: F401
+from .kbstore import AttachRecord, KBStore, StoreSnapshot, resolve_container_kb  # noqa: F401

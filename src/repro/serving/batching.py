@@ -34,7 +34,7 @@ from ..core.errors import (
     RangeCoverageError,
     UnknownSeriesError,
 )
-from ..core.serialize import frame_payload, parse_framed_container
+from ..core.serialize import frame_payload, parse_framed_container, read_snapshot_ref
 from ..core.shrink import ProgressiveDecoder, cs_from_bytes
 
 __all__ = ["Request", "ContinuousBatcher", "RangeQuery", "RangeQueryBatcher"]
@@ -181,10 +181,16 @@ class RangeQueryBatcher:
     intact still errors.
     """
 
-    def __init__(self, blob: bytes, cache_frames: int = 32, degraded_ok: bool = False):
+    def __init__(
+        self,
+        blob: bytes,
+        cache_frames: int = 32,
+        degraded_ok: bool = False,
+        kb_store=None,  # serving.kbstore.KBStore
+    ):
         self.degraded_ok = bool(degraded_ok)
         self._blob = bytes(blob)
-        metas, _ = parse_framed_container(self._blob)
+        metas, kb_bytes = parse_framed_container(self._blob)
         self._frames: dict[int, list] = {}
         for m in metas:
             self._frames.setdefault(m.series_id, []).append(m)
@@ -194,6 +200,21 @@ class RangeQueryBatcher:
         self._cache_frames = cache_frames
         self.queue: deque[RangeQuery] = deque()
         self.completed: list[RangeQuery] = []
+        # decode never needs the KB (frame payloads carry their bases), but
+        # a router wants the dictionary binding validated BEFORE serving:
+        # with a kb_store, resolve the container's kb_snapshot_ref now — a
+        # stale ref either falls back to the inline footer KB or raises a
+        # typed StaleSnapshotError here, never binds silently wrong.
+        if kb_store is not None:
+            from .kbstore import resolve_container_kb
+
+            _, kb_source = resolve_container_kb(self._blob, kb_store)
+        elif kb_bytes:
+            kb_source = "inline"
+        else:
+            kb_source = (
+                "ref-unresolved" if read_snapshot_ref(self._blob) else "none"
+            )
         self.stats = {
             "queries": 0,
             "frames_decoded": 0,
@@ -202,6 +223,7 @@ class RangeQueryBatcher:
             "layer_hits": 0,
             "errors": 0,
             "degraded": 0,
+            "kb_source": kb_source,
         }
 
     @property

@@ -149,6 +149,7 @@ class ShrinkFleet:
         quotas: Mapping[str, TenantQuota] | None = None,
         coarse_eps: Optional[float] = float("inf"),
         kb_sync_every: int | None = 4,
+        kb_store=None,  # serving.kbstore.KBStore: shards gossip into it on sync
         retry: RetryPolicy | None = None,
         max_queue: int = 256,
         cache_frames: int = 32,
@@ -176,6 +177,7 @@ class ShrinkFleet:
         self.quotas = dict(quotas) if quotas else {}
         self.coarse_eps = coarse_eps
         self.kb_sync_every = kb_sync_every
+        self.kb_store = kb_store
         self.global_kb = KnowledgeBase(config)
         self.kb_syncs: list[dict] = []
         self._flushes_since_sync = 0
@@ -271,7 +273,13 @@ class ShrinkFleet:
         point: per-shard entry counts + the global semantic snapshot id.
         Frames sealed before this sync reference only entries below their
         shard's recorded epoch, so any snapshot at/after the sync contains
-        their refs."""
+        their refs.  With a ``kb_store`` attached, every shard also
+        gossips its KB into the store under a stable ``shard<i>`` handle
+        (replace semantics — repeated syncs of a growing shard KB never
+        double-count) and the sync record carries the store's epoch-tagged
+        state; after the last sync the store's semantic id equals the
+        global KB's ``snapshot_id()`` whenever the shards are its only
+        sources (property-tested)."""
         g = KnowledgeBase(self.config)
         shard_epochs = []
         for b in self.batchers:
@@ -284,6 +292,13 @@ class ShrinkFleet:
             "shard_epochs": shard_epochs,
             "semantic_id": g.snapshot_id(),
         }
+        if self.kb_store is not None:
+            for i, b in enumerate(self.batchers):
+                self.kb_store.gossip(f"shard{i}", b.kb)
+            rec["store"] = {
+                "live": self.kb_store.live_count,
+                "sem_id": self.kb_store.sem_id(),
+            }
         self.kb_syncs.append(rec)
         self.stats["kb_syncs"] += 1
         self._flushes_since_sync = 0

@@ -98,6 +98,13 @@ class RaggedBatcher:
                       only the due ones (shard-invariant frame boundaries
                       — see the module docstring).
     kb:               share a KnowledgeBase across batchers/codecs.
+    kb_store:         a ``serving.kbstore.KBStore`` to attach the finalized
+                      container's KB to; the footer then carries a
+                      ``kb_snapshot_ref`` and (unless ``inline_kb=True``)
+                      omits the inline KB.
+    inline_kb:        force the inline footer KB on/off; default ``None``
+                      = inline exactly when no ``kb_store`` is attached.
+    source:           stable attach handle for ``kb_store``.
     clock:            monotonic-seconds source (injectable for tests).
     """
 
@@ -113,10 +120,18 @@ class RaggedBatcher:
         semantics: str = "auto",
         scope: str = "batch",
         kb: KnowledgeBase | None = None,
+        kb_store=None,  # serving.kbstore.KBStore
+        inline_kb: bool | None = None,
+        source: str | None = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         if 0.0 in eps_targets and decimals is None:
             raise ConfigError("lossless eps target 0.0 requires `decimals`")
+        if inline_kb is False and kb_store is None:
+            raise ConfigError(
+                "inline_kb=False requires a kb_store (a container with "
+                "neither an inline KB nor a snapshot ref loses its dictionary)"
+            )
         if flush_samples is not None and flush_samples < 1:
             raise ConfigError(f"flush_samples must be >= 1, got {flush_samples}")
         if flush_deadline_s is not None and flush_deadline_s < 0:
@@ -134,6 +149,10 @@ class RaggedBatcher:
         self.max_buckets = max_buckets
         self.semantics = semantics
         self.kb = kb if kb is not None else KnowledgeBase(config)
+        self.kb_store = kb_store
+        self.inline_kb = inline_kb
+        self._store_source = source
+        self._store_handle: str | None = None
         self._clock = clock
         self._writer = FramedWriter()
         self._pending: dict[int, _PendingSeries] = {}
@@ -265,7 +284,17 @@ class RaggedBatcher:
             return self._container
         self.flush()
         self._finalized = True
-        self._container = self._writer.finish(self.kb.to_bytes())
+        ref = None
+        if self.kb_store is not None:
+            rec = self.kb_store.attach_kb(self.kb, source=self._store_source)
+            self._store_handle = rec.handle
+            ref = rec.ref
+        inline = self.inline_kb if self.inline_kb is not None else self.kb_store is None
+        self._container = self._writer.finish(
+            self.kb.to_bytes() if inline else b"", snapshot_ref=ref
+        )
+        if self.kb_store is not None:
+            self.kb_store.register_container(self._store_handle, self._container)
         return self._container
 
     # -- introspection -------------------------------------------------- #

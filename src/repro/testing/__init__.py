@@ -13,5 +13,6 @@ from .chaos import (  # noqa: F401
     kill_shard,
     list_frames,
     smash_frame_crc,
+    stale_snapshot_ref,
     truncate,
 )

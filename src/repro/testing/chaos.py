@@ -36,8 +36,10 @@ from typing import Callable, Optional
 from ..core.errors import TransientError
 from ..core.serialize import (
     FramedWriter,
+    KBSnapshotRef,
     frame_payload,
     parse_framed_container,
+    read_snapshot_ref,
     read_varint,
 )
 from ..core.types import FrameMeta
@@ -50,6 +52,7 @@ __all__ = [
     "truncate",
     "smash_frame_crc",
     "drop_frame",
+    "stale_snapshot_ref",
     "kill_shard",
     "list_frames",
 ]
@@ -62,7 +65,7 @@ class Fault:
     """What a single injection did — enough to reproduce it by hand."""
 
     kind: str  # 'flip' | 'truncate' | 'crc_smash' | 'frame_drop' | 'flaky'
-    #     | 'shard_kill'
+    #     | 'shard_kill' | 'stale_ref'
     offset: Optional[int] = None  # byte offset (flip), cut length (truncate)
     bit: Optional[int] = None
     frame_index: Optional[int] = None
@@ -151,11 +154,46 @@ def drop_frame(blob: bytes, frame_index: int) -> tuple[bytes, Fault]:
             frame_payload(blob, m, verify_crc=False),
         )
     dropped = metas[frame_index]
-    return w.finish(kb_bytes), Fault(
+    # a ref-mode container stays ref-mode: carry the kb_snapshot_ref through
+    return w.finish(kb_bytes, snapshot_ref=read_snapshot_ref(blob)), Fault(
         kind="frame_drop", frame_index=frame_index,
         detail=(
             f"dropped frame {frame_index} (series {dropped.series_id}, "
             f"samples [{dropped.t_lo}, {dropped.t_hi}))"
+        ),
+    )
+
+
+def stale_snapshot_ref(blob: bytes) -> tuple[bytes, Fault]:
+    """Rewrite a container's ``kb_snapshot_ref`` so it no longer resolves:
+    the version is bumped past any real snapshot and the semantic id is
+    inverted.  The container itself stays fully valid (frames, CRCs,
+    inline KB all intact) — exactly the operational fault of a store
+    losing/compacting away a snapshot that containers still reference.
+    Readers must fall back to the inline footer KB when present, or raise
+    a typed :class:`StaleSnapshotError` — never bind to a wrong snapshot."""
+    metas, kb_bytes = parse_framed_container(blob)
+    ref = read_snapshot_ref(blob)
+    if ref is None:
+        raise ValueError("container carries no kb_snapshot_ref to stale")
+    w = FramedWriter()
+    for m in metas:
+        w.add_frame(
+            m.series_id, m.t_lo, m.t_hi, m.kb_epoch,
+            frame_payload(blob, m, verify_crc=False),
+        )
+    bad = KBSnapshotRef(
+        version=ref.version + 1_000_000,
+        entries=ref.entries,
+        sem_id=ref.sem_id ^ 0xFFFFFFFF,
+        remap=ref.remap,
+        refs=ref.refs,
+    )
+    return w.finish(kb_bytes, snapshot_ref=bad), Fault(
+        kind="stale_ref",
+        detail=(
+            f"kb_snapshot_ref v{ref.version} -> v{bad.version}, "
+            "sem_id inverted (snapshot can no longer resolve)"
         ),
     )
 

@@ -1,14 +1,18 @@
 """Golden wire-format fixture builders + regeneration script.
 
-The checked-in ``golden_v3.shrk`` / ``golden_v3.shrks`` fixtures pin the
-``SHRK`` and ``SHRKS`` byte layouts (v3 = SHRK v2 CRC-sealed container
-header carrying the SHRR v3 per-layer-CRC residual *pyramid* payload):
+The checked-in ``golden_v4.shrk`` / ``golden_v4.shrks`` fixtures pin the
+``SHRK`` and ``SHRKS`` byte layouts (v4 = SHRKS v2 footer with the
+``kb_snapshot_ref`` section, carrying SHRK v2 CRC-sealed frame payloads
+with the SHRR v3 per-layer-CRC residual *pyramid*):
 tests/test_golden_format.py rebuilds them from source and asserts byte
 equality, so any accidental change to the serializers (varint layout,
 header fields, CRC seals, rANS framing, pyramid directory, footer
 order...) fails CI instead of silently orphaning previously written data.
-``golden_v3_pyramid.shrk`` additionally pins a full 4-tier ladder
-({1e-1, 1e-2, 1e-3, lossless} of range) including an identity layer.
+``golden_v4_pyramid.shrk`` additionally pins a full 4-tier ladder
+({1e-1, 1e-2, 1e-3, lossless} of range) including an identity layer;
+``golden_v4_ref.shrks`` pins a KB-store-attached container (inline KB
+*and* ``kb_snapshot_ref`` footer field) and ``golden_v4.shks`` the store
+snapshot it references (the ``SHKS`` layout).
 
 Escape hatch for an INTENTIONAL format change: bump the format version in
 serialize.py, rename the fixtures to ``golden_v<new>.*`` here and in the
@@ -28,10 +32,12 @@ import sys
 import numpy as np
 
 HERE = pathlib.Path(__file__).resolve().parent
-GOLDEN_SHRK = HERE / "golden_v3.shrk"
-GOLDEN_SHRKS = HERE / "golden_v3.shrks"
-GOLDEN_RAGGED = HERE / "golden_v3_ragged.shrks"
-GOLDEN_PYRAMID = HERE / "golden_v3_pyramid.shrk"
+GOLDEN_SHRK = HERE / "golden_v4.shrk"
+GOLDEN_SHRKS = HERE / "golden_v4.shrks"
+GOLDEN_RAGGED = HERE / "golden_v4_ragged.shrks"
+GOLDEN_PYRAMID = HERE / "golden_v4_pyramid.shrk"
+GOLDEN_REF = HERE / "golden_v4_ref.shrks"
+GOLDEN_KBSTORE = HERE / "golden_v4.shks"
 GOLDEN_ANALYTICS = HERE / "golden_analytics.json"
 
 N = 1536
@@ -128,6 +134,30 @@ def build_ragged_shrks() -> bytes:
     return sc.finalize()
 
 
+def build_kbstore() -> tuple[bytes, bytes]:
+    """KB-store-attached SHRKS container + the SHKS store snapshot it
+    references.  Pins the SHRKS v2 ``kb_snapshot_ref`` footer section
+    (remap/refs delta coding) and the full SHKS snapshot layout
+    (tombstone gap coding, sem-id seal, CRC).  ``inline_kb=True`` keeps
+    the self-contained footer too, so the fixture also pins the
+    both-mode fallback shape."""
+    from repro.core import ShrinkStreamCodec
+    from repro.core.semantics import global_range
+    from repro.serving.kbstore import KBStore
+
+    v = golden_series()
+    store = KBStore(_cfg(v))
+    sc = ShrinkStreamCodec(
+        _cfg(v), eps_targets=EPS_TARGETS, decimals=DECIMALS, backend="rans",
+        value_range=global_range(v), frame_len=FRAME_LEN,
+        kb_store=store, inline_kb=True, source="golden",
+    )
+    for lo in range(0, N, 100):
+        sc.ingest(v[lo : lo + 100])
+    blob = sc.finalize()
+    return blob, store.snapshots[-1].blob
+
+
 def _ans(a) -> dict:
     """AggregateAnswer -> the stable golden record (everything a wire or
     planner drift would move: bounds, guarantee, provenance, work)."""
@@ -193,6 +223,9 @@ def main() -> None:
     GOLDEN_SHRKS.write_bytes(build_shrks())
     GOLDEN_RAGGED.write_bytes(build_ragged_shrks())
     GOLDEN_PYRAMID.write_bytes(build_pyramid_shrk())
+    ref_blob, snap_blob = build_kbstore()
+    GOLDEN_REF.write_bytes(ref_blob)
+    GOLDEN_KBSTORE.write_bytes(snap_blob)
     GOLDEN_ANALYTICS.write_text(
         json.dumps(build_analytics(), indent=2, sort_keys=True) + "\n"
     )
@@ -200,6 +233,8 @@ def main() -> None:
     print(f"wrote {GOLDEN_SHRKS} ({GOLDEN_SHRKS.stat().st_size} B)")
     print(f"wrote {GOLDEN_RAGGED} ({GOLDEN_RAGGED.stat().st_size} B)")
     print(f"wrote {GOLDEN_PYRAMID} ({GOLDEN_PYRAMID.stat().st_size} B)")
+    print(f"wrote {GOLDEN_REF} ({GOLDEN_REF.stat().st_size} B)")
+    print(f"wrote {GOLDEN_KBSTORE} ({GOLDEN_KBSTORE.stat().st_size} B)")
     print(f"wrote {GOLDEN_ANALYTICS} ({GOLDEN_ANALYTICS.stat().st_size} B)")
 
 

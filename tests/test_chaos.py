@@ -579,3 +579,103 @@ def test_repair_restores_killed_shard():
     q = fleet.query(RangeQuery(qid=1, series_id=3, t0=0, t1=200, eps=0.05))
     assert q.error is None
     assert float(np.abs(q.result - series[3]).max()) <= 0.05 + 1e-9
+
+
+# --------------------------------------------------------------------- #
+# KB store: snapshot blobs and stale refs
+# --------------------------------------------------------------------- #
+class TestKBStoreChaos:
+    """Faults against the KB-store path: corrupted SHKS snapshot blobs
+    must raise typed errors, stale kb_snapshot_refs must either fall back
+    to the inline footer KB or raise StaleSnapshotError — never bind a
+    silently wrong dictionary, and decode must stay exact throughout."""
+
+    @staticmethod
+    def _store_and_blobs():
+        from repro.core.semantics import global_range
+        from repro.serving import KBStore
+
+        v = _values()[0]
+        vmin, vmax = float(v.min()), float(v.max())
+        cfg = ShrinkConfig(eps_b=0.05 * (vmax - vmin), lam=1e-4)
+        store = KBStore(cfg)
+
+        def mk(source, inline):
+            sc = ShrinkStreamCodec(
+                cfg, eps_targets=[0.01 * (vmax - vmin)], backend="rans",
+                value_range=(vmin, vmax), frame_len=FRAME,
+                kb_store=store, inline_kb=inline, source=source,
+            )
+            sc.ingest(v)
+            return sc.finalize()
+
+        return store, v, mk("ref-only", None), mk("both", True)
+
+    def test_snapshot_flip_every_byte_is_typed(self):
+        from repro.serving.kbstore import snapshot_from_bytes
+
+        store, _, _, _ = self._store_and_blobs()
+        snap = store.snapshots[-1].blob
+        for off in range(len(snap)):
+            bad, _ = flip_byte(snap, off, bit=off % 8)
+            with pytest.raises(ShrinkError):
+                snapshot_from_bytes(bad)
+
+    def test_snapshot_truncate_every_cut_is_typed(self):
+        from repro.serving.kbstore import snapshot_from_bytes
+
+        store, _, _, _ = self._store_and_blobs()
+        snap = store.snapshots[-1].blob
+        for keep in range(len(snap)):
+            bad, fault = truncate(snap, keep)
+            assert fault.kind == "truncate"
+            with pytest.raises(ShrinkError):
+                snapshot_from_bytes(bad)
+
+    def test_snapshot_trailing_garbage_is_typed(self):
+        from repro.serving.kbstore import snapshot_from_bytes
+
+        store, _, _, _ = self._store_and_blobs()
+        snap = store.snapshots[-1].blob
+        with pytest.raises(ShrinkError):
+            snapshot_from_bytes(snap + b"\x00")
+
+    def test_stale_ref_ref_only_is_typed_never_silent(self):
+        from repro.core.errors import StaleSnapshotError
+        from repro.serving.kbstore import resolve_container_kb
+        from repro.testing import stale_snapshot_ref
+
+        from repro.core import decode_range
+
+        store, v, ref_only, _ = self._store_and_blobs()
+        bad, fault = stale_snapshot_ref(ref_only)
+        assert fault.kind == "stale_ref"
+        with pytest.raises(StaleSnapshotError):
+            resolve_container_kb(bad, store)
+        # ...but decode never needed the KB: frames still reconstruct
+        eps = 0.01 * float(v.max() - v.min())
+        got = decode_range(bad, 0, 0, N, eps)
+        assert np.array_equal(got, decode_range(ref_only, 0, 0, N, eps))
+
+    def test_stale_ref_with_inline_kb_falls_back(self):
+        from repro.core.streaming import read_knowledge_base
+        from repro.serving.kbstore import resolve_container_kb
+        from repro.testing import stale_snapshot_ref
+
+        store, _, _, both = self._store_and_blobs()
+        bad, _ = stale_snapshot_ref(both)
+        kb, origin = resolve_container_kb(bad, store)
+        assert origin == "inline-fallback"
+        inline = read_knowledge_base(both)
+        assert kb.canonical() == inline.canonical()
+
+    def test_load_rejects_corrupt_spill_file(self, tmp_path):
+        from repro.serving import KBStore
+
+        store, _, _, _ = self._store_and_blobs()
+        paths = store.spill(tmp_path)
+        blob = open(paths[0], "rb").read()
+        bad, _ = flip_byte(blob, len(blob) // 2)
+        open(paths[0], "wb").write(bad)
+        with pytest.raises(ShrinkError):
+            KBStore.load(tmp_path)

@@ -123,6 +123,52 @@ def test_analytics_answers_stable():
     )
 
 
+def test_kbstore_fixtures_bytes_stable():
+    expected_ref = _fixture(golden.GOLDEN_REF)
+    expected_snap = _fixture(golden.GOLDEN_KBSTORE)
+    got_ref, got_snap = golden.build_kbstore()
+    assert got_ref == expected_ref, (
+        "KB-store-attached SHRKS bytes changed — kb_snapshot_ref footer "
+        "regression (see tests/golden/regen.py for the intentional-change "
+        "procedure)"
+    )
+    assert got_snap == expected_snap, (
+        "SHKS store snapshot bytes changed — snapshot-layout regression "
+        "(see tests/golden/regen.py for the intentional-change procedure)"
+    )
+
+
+def test_kbstore_golden_fixtures_still_resolve(tmp_path):
+    """The checked-in ref container must decode, and its kb_snapshot_ref
+    must resolve against a store rebuilt from the checked-in SHKS blob to
+    the exact inline footer KB — guards both decoders against misreading
+    old store data even if re-encoding happens to match."""
+    from repro.core import decode_series
+    from repro.core.serialize import parse_framed_container, read_snapshot_ref
+    from repro.core.streaming import KnowledgeBase
+    from repro.serving.kbstore import KBStore, snapshot_from_bytes
+
+    blob = _fixture(golden.GOLDEN_REF)
+    v = golden.golden_series()
+    got = np.round(decode_series(blob, 0, 0.0), golden.DECIMALS)
+    assert np.array_equal(got, v)
+
+    snap_blob = _fixture(golden.GOLDEN_KBSTORE)
+    version, sem_id, master, tombs = snapshot_from_bytes(snap_blob)
+    assert tombs == set()
+    assert master.snapshot_id() == sem_id
+
+    (tmp_path / f"kbsnap_v{version:08d}.shks").write_bytes(snap_blob)
+    store = KBStore.load(tmp_path)
+    ref = read_snapshot_ref(blob)
+    assert ref is not None and ref.version == version
+    resolved = store.container_kb(ref)
+    _, inline_bytes = parse_framed_container(blob)
+    inline = KnowledgeBase.from_bytes(inline_bytes)
+    assert resolved.canonical() == inline.canonical()
+    assert [e.refs for e in resolved.entries] == [e.refs for e in inline.entries]
+
+
 def test_golden_fixture_still_decodes():
     """The checked-in container (not the rebuilt one) must decode: guards
     the decoder against changes that re-encode identically but misread

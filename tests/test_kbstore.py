@@ -1,0 +1,425 @@
+"""Deterministic contract for the persistent cross-archive KB store.
+
+Pins the full lifecycle: exact attach/detach reference accounting
+(replace semantics under a stable handle), typed release errors, LRU
+eviction with pinning, snapshot sealing + ref resolution (including the
+stale-ref proofs), byte-identical compaction re-basing, spill/load
+round-trips, the reader fallback ladder, and the fleet/codec/batcher
+integration points."""
+import numpy as np
+import pytest
+
+from repro.core import ShrinkConfig, ShrinkStreamCodec, decode_series
+from repro.core.errors import (
+    ConfigError,
+    KBReferenceError,
+    ShrinkError,
+    StaleSnapshotError,
+)
+from repro.core.serialize import (
+    KBSnapshotRef,
+    parse_framed_container,
+    read_snapshot_ref,
+)
+from repro.core.semantics import global_range
+from repro.core.streaming import KnowledgeBase, routing_metadata
+from repro.serving import KBStore, RaggedBatcher, ShrinkFleet
+from repro.serving.batching import RangeQueryBatcher
+from repro.serving.kbstore import (
+    resolve_container_kb,
+    snapshot_from_bytes,
+    snapshot_to_bytes,
+)
+
+_RNG = np.random.default_rng(42)
+_CFG = ShrinkConfig(eps_b=0.5, lam=1e-4)
+_EPS = [0.5, 0.05, 0.0]
+_DEC = 4  # every generated series lands on a 4-decimal grid
+
+
+def _walk(n: int) -> np.ndarray:
+    return np.round(np.cumsum(_RNG.standard_normal(n) * 0.1), 4)
+
+
+def _motif_series(n: int, seed: int) -> np.ndarray:
+    """Series tiling a tiny shared motif bank — guarantees cross-archive
+    KB line repetition (the store's reason to exist)."""
+    rng = np.random.default_rng(seed % 4)  # few distinct banks => overlap
+    bank = [np.round(rng.standard_normal(32) * 2.0, 2) for _ in range(4)]
+    rng2 = np.random.default_rng(seed)
+    out = np.concatenate([bank[rng2.integers(0, 4)] for _ in range(n // 32 + 1)])
+    return out[:n]
+
+
+def _codec_kb(v: np.ndarray) -> KnowledgeBase:
+    sc = ShrinkStreamCodec(
+        _CFG, eps_targets=_EPS, decimals=_DEC, value_range=global_range(v),
+        frame_len=256,
+    )
+    sc.ingest(v)
+    sc.finalize()
+    return sc.kb
+
+
+def _ref_codec(store, v, source, inline=None):
+    sc = ShrinkStreamCodec(
+        _CFG, eps_targets=_EPS, decimals=_DEC, value_range=global_range(v),
+        frame_len=256, kb_store=store, inline_kb=inline, source=source,
+    )
+    sc.ingest(v)
+    return sc, sc.finalize()
+
+
+class TestAttachDetach:
+    def test_attach_detach_exact_reversal(self):
+        store = KBStore(_CFG)
+        kb1 = _codec_kb(_motif_series(512, seed=1))
+        kb2 = _codec_kb(_motif_series(512, seed=2))
+        r1 = store.attach_kb(kb1, source="a")
+        before = store.stats()
+        r2 = store.attach_kb(kb2, source="b")
+        store.detach(r2.handle)
+        after = store.stats()
+        assert after["total_refs"] == before["total_refs"]
+        assert after["live"] >= before["live"]  # b's novel lines drop to 0 refs
+        store.detach(r1.handle)
+        assert store.stats()["total_refs"] == 0
+
+    def test_reattach_same_source_replaces_not_doubles(self):
+        store = KBStore(_CFG)
+        kb = _codec_kb(_motif_series(512, seed=3))
+        store.attach_kb(kb, source="shard0")
+        once = store.stats()["total_refs"]
+        for _ in range(3):
+            store.attach_kb(kb, source="shard0")
+        assert store.stats()["total_refs"] == once
+        assert len(store._handles) == 1
+
+    def test_attach_dedups_identical_lines(self):
+        store = KBStore(_CFG)
+        kb = _codec_kb(_motif_series(512, seed=4))
+        store.attach_kb(kb, source="a")
+        live_once = store.live_count
+        store.attach_kb(kb, source="b")  # identical KB, different handle
+        assert store.live_count == live_once  # no new lines
+        assert store.stats()["dedup_ratio"] > 1.0
+
+    def test_detach_unknown_handle_typed(self):
+        store = KBStore(_CFG)
+        with pytest.raises(KBReferenceError):
+            store.detach("nope")
+
+    def test_attach_whole_container(self):
+        store = KBStore(_CFG)
+        v = _motif_series(512, seed=5)
+        sc = ShrinkStreamCodec(
+            _CFG, eps_targets=_EPS, decimals=_DEC, value_range=global_range(v),
+            frame_len=256,
+        )
+        sc.ingest(v)
+        blob = sc.finalize()
+        rec = store.attach(blob, source="ar0")
+        assert store.container(rec.handle) == blob
+        assert store.stats()["total_refs"] > 0
+
+    def test_config_mismatch_rejected(self):
+        store = KBStore(_CFG)
+        kb = KnowledgeBase(ShrinkConfig(eps_b=9.0, lam=1e-4))
+        with pytest.raises(ConfigError):
+            store.attach_kb(kb)
+
+
+class TestReleaseTyped:
+    """Satellite: KnowledgeBase.release failures must be a typed
+    ShrinkError subclass carrying the offending entry id."""
+
+    def test_release_underflow_typed_with_entry_context(self):
+        kb = _codec_kb(_motif_series(256, seed=6))
+        eid = 0
+        kb.release([eid] * kb.entries[eid].refs)  # drain to zero
+        with pytest.raises(KBReferenceError) as ei:
+            kb.release([eid])
+        assert isinstance(ei.value, ShrinkError)
+        assert ei.value.context()["entry"] == eid
+        assert f"entry={eid}" in str(ei.value)
+
+    def test_release_out_of_range_typed(self):
+        kb = _codec_kb(_motif_series(256, seed=7))
+        bad = len(kb.entries) + 5
+        with pytest.raises(KBReferenceError) as ei:
+            kb.release([bad])
+        assert ei.value.context()["entry"] == bad
+
+
+class TestEviction:
+    def test_zero_ref_entries_evicted_lru(self):
+        store = KBStore(_CFG, max_entries=4)
+        kb = _codec_kb(_motif_series(2048, seed=8))
+        assert len(kb.entries) > 4
+        rec = store.attach_kb(kb, source="a")
+        assert store.live_count > 4  # pinned by the live attachment: soft bound
+        store.detach(rec.handle)
+        assert store.live_count <= 4
+        assert store.counters["evictions"] > 0
+        # eviction only touched zero-ref entries
+        for eid in store._tombstones:
+            assert store.kb.entries[eid].refs == 0
+
+    def test_eviction_tombstones_never_shift_ids(self):
+        store = KBStore(_CFG, max_entries=2)
+        kb1 = _codec_kb(_motif_series(1024, seed=9))
+        rec1 = store.attach_kb(kb1, source="a")
+        n_before = len(store.kb.entries)
+        store.detach(rec1.handle)
+        # tombstoning must not shrink the positional id space
+        assert len(store.kb.entries) == n_before
+
+    def test_pinned_entries_survive_eviction(self):
+        store = KBStore(_CFG, max_entries=1)
+        kb = _codec_kb(_motif_series(1024, seed=10))
+        rec = store.attach_kb(kb, source="a")
+        # live attachment pins every remapped id even at zero refs
+        for rid in store._remaps[rec.handle]:
+            assert rid not in store._tombstones
+
+
+class TestSnapshots:
+    def test_snapshot_roundtrip(self):
+        store = KBStore(_CFG)
+        store.attach_kb(_codec_kb(_motif_series(512, seed=11)), source="a")
+        snap = store.snapshots[-1]
+        version, sem, master, tombs = snapshot_from_bytes(snap.blob)
+        assert (version, sem) == (snap.version, snap.sem_id)
+        assert len(master.entries) == snap.entries
+        assert tombs == set()
+
+    def test_snapshot_roundtrip_with_tombstones(self):
+        live = _codec_kb(_motif_series(512, seed=12))
+        tombs = [1, 4, 5]
+        blob = snapshot_to_bytes(7, live.snapshot_id(), live, tombs)
+        version, sem, master, got_tombs = snapshot_from_bytes(blob)
+        assert version == 7 and got_tombs == set(tombs)
+        assert len(master.entries) == len(live.entries) + len(tombs)
+        # live entries keep their gap-adjusted positional slots
+        live_ids = [i for i in range(len(master.entries)) if i not in got_tombs]
+        for slot, e in zip(live_ids, live.entries):
+            assert master.entries[slot] == e
+
+    def test_resolve_proves_ref(self):
+        store = KBStore(_CFG)
+        kb = _codec_kb(_motif_series(512, seed=13))
+        rec = store.attach_kb(kb, source="a")
+        resolved = store.container_kb(rec.ref)
+        assert resolved.canonical() == kb.canonical()
+        assert [e.refs for e in resolved.entries] == [e.refs for e in kb.entries]
+
+    def test_unknown_version_stale(self):
+        store = KBStore(_CFG)
+        rec = store.attach_kb(_codec_kb(_motif_series(512, seed=14)), source="a")
+        bad = KBSnapshotRef(
+            version=rec.ref.version + 99, entries=rec.ref.entries,
+            sem_id=rec.ref.sem_id, remap=rec.ref.remap, refs=rec.ref.refs,
+        )
+        with pytest.raises(StaleSnapshotError):
+            store.resolve(bad)
+
+    def test_sem_id_mismatch_stale(self):
+        store = KBStore(_CFG)
+        rec = store.attach_kb(_codec_kb(_motif_series(512, seed=15)), source="a")
+        bad = KBSnapshotRef(
+            version=rec.ref.version, entries=rec.ref.entries,
+            sem_id=rec.ref.sem_id ^ 0xFFFF, remap=rec.ref.remap, refs=rec.ref.refs,
+        )
+        with pytest.raises(StaleSnapshotError):
+            store.resolve(bad)
+
+
+class TestRefContainers:
+    def test_ref_mode_omits_inline_kb_and_decodes(self):
+        store = KBStore(_CFG)
+        v = _motif_series(768, seed=16)
+        sc, blob = _ref_codec(store, v, source="ar0")
+        _, kb_bytes = parse_framed_container(blob)
+        assert kb_bytes == b""  # the cross-archive byte win
+        assert read_snapshot_ref(blob) is not None
+        got = np.round(decode_series(blob, 0, 0.0), 4)
+        assert np.array_equal(got, v)
+
+    def test_ref_mode_smaller_than_inline(self):
+        store = KBStore(_CFG)
+        v = _motif_series(768, seed=17)
+        _, ref_blob = _ref_codec(store, v, source="ar0")
+        sc2 = ShrinkStreamCodec(
+            _CFG, eps_targets=_EPS, decimals=_DEC, value_range=global_range(v),
+            frame_len=256,
+        )
+        sc2.ingest(v)
+        inline_blob = sc2.finalize()
+        assert len(ref_blob) < len(inline_blob)
+
+    def test_container_kb_matches_writer_kb(self):
+        store = KBStore(_CFG)
+        v = _motif_series(768, seed=18)
+        sc, blob = _ref_codec(store, v, source="ar0")
+        kb, origin = resolve_container_kb(blob, store)
+        assert origin == "store"
+        assert kb.canonical() == sc.kb.canonical()
+        assert [e.refs for e in kb.entries] == [e.refs for e in sc.kb.entries]
+
+    def test_both_mode_keeps_inline_and_ref(self):
+        store = KBStore(_CFG)
+        v = _motif_series(768, seed=19)
+        _, blob = _ref_codec(store, v, source="ar0", inline=True)
+        _, kb_bytes = parse_framed_container(blob)
+        assert kb_bytes and read_snapshot_ref(blob) is not None
+
+    def test_inline_false_without_store_rejected(self):
+        with pytest.raises(ConfigError):
+            ShrinkStreamCodec(_CFG, eps_targets=_EPS, inline_kb=False)
+
+    def test_refinalize_does_not_double_count(self):
+        store = KBStore(_CFG)
+        v = _motif_series(768, seed=20)
+        sc, blob1 = _ref_codec(store, v, source="ar0")
+        once = store.stats()["total_refs"]
+        blob2 = sc.finalize()  # replace semantics under the stable handle
+        assert store.stats()["total_refs"] == once
+        assert np.array_equal(
+            decode_series(blob2, 0, 0.0), decode_series(blob1, 0, 0.0)
+        )
+
+    def test_routing_metadata_exposes_ref(self):
+        store = KBStore(_CFG)
+        v = _motif_series(768, seed=21)
+        _, blob = _ref_codec(store, v, source="ar0")
+        md = routing_metadata(blob)
+        assert md["kb_ref"] is not None
+        assert md["kb_ref"]["version"] == read_snapshot_ref(blob).version
+
+    def test_resolve_ladder(self):
+        store = KBStore(_CFG)
+        v = _motif_series(768, seed=22)
+        _, ref_only = _ref_codec(store, v, source="a")
+        _, both = _ref_codec(store, v, source="b", inline=True)
+        sc3 = ShrinkStreamCodec(
+            _CFG, eps_targets=_EPS, decimals=_DEC, value_range=global_range(v),
+            frame_len=256,
+        )
+        sc3.ingest(v)
+        inline_only = sc3.finalize()
+        assert resolve_container_kb(ref_only, store)[1] == "store"
+        assert resolve_container_kb(both, None)[1] == "inline"
+        assert resolve_container_kb(inline_only, store)[1] == "inline"
+        with pytest.raises(StaleSnapshotError):  # ref-only, no store
+            resolve_container_kb(ref_only, None)
+
+
+class TestCompaction:
+    def test_compact_rebases_byte_identical_decode(self):
+        store = KBStore(_CFG)
+        v1 = _motif_series(768, seed=23)
+        v2 = _motif_series(768, seed=24)
+        sc1, blob1 = _ref_codec(store, v1, source="a")
+        sc2, blob2 = _ref_codec(store, v2, source="b")
+        dec1 = decode_series(blob1, 0, 0.0)
+        store.detach(sc2._store_handle)  # orphan b's lines
+        rep = store.compact()
+        assert rep["dropped"] >= 0
+        new_blob = store.container("a")
+        assert np.array_equal(decode_series(new_blob, 0, 0.0), dec1)
+        new_ref = read_snapshot_ref(new_blob)
+        assert new_ref.version == rep["version"]
+        kb = store.container_kb(new_ref)
+        assert kb.canonical() == sc1.kb.canonical()
+
+    def test_compact_retires_old_refs_by_design(self):
+        store = KBStore(_CFG)
+        v = _motif_series(768, seed=25)
+        _, blob = _ref_codec(store, v, source="a")
+        old_ref = read_snapshot_ref(blob)
+        store.compact()
+        with pytest.raises(StaleSnapshotError):
+            store.resolve(old_ref)
+
+    def test_compact_drops_tombstones(self):
+        store = KBStore(_CFG, max_entries=2)
+        rec = store.attach_kb(_codec_kb(_motif_series(1024, seed=26)), source="a")
+        store.detach(rec.handle)
+        assert store._tombstones or store.counters["evictions"] == 0
+        store.compact()
+        assert store._tombstones == set()
+        assert len(store.kb.entries) == store.live_count
+
+
+class TestSpillLoad:
+    def test_spill_load_roundtrip(self, tmp_path):
+        store = KBStore(_CFG)
+        v = _motif_series(768, seed=27)
+        _, blob = _ref_codec(store, v, source="a")
+        paths = store.spill(tmp_path)
+        assert paths and all(p.endswith(".shks") for p in paths)
+        loaded = KBStore.load(tmp_path)
+        assert loaded.sem_id() == store.sem_id()
+        ref = read_snapshot_ref(blob)
+        kb = loaded.container_kb(ref)
+        assert kb.canonical() == store.container_kb(ref).canonical()
+
+    def test_load_empty_dir_rejected(self, tmp_path):
+        from repro.core.errors import FormatError
+
+        with pytest.raises(FormatError):
+            KBStore.load(tmp_path)
+
+    def test_load_continues_version_counter(self, tmp_path):
+        store = KBStore(_CFG)
+        store.attach_kb(_codec_kb(_motif_series(512, seed=28)), source="a")
+        store.spill(tmp_path)
+        loaded = KBStore.load(tmp_path)
+        rec = loaded.attach_kb(_codec_kb(_motif_series(512, seed=29)), source="b")
+        assert rec.ref.version > store.snapshots[-1].version
+
+
+class TestIntegration:
+    def test_ragged_batcher_ref_mode(self):
+        store = KBStore(_CFG)
+        b = RaggedBatcher(
+            _CFG, eps_targets=_EPS, decimals=_DEC, flush_samples=None,
+            kb_store=store, source="rag0",
+        )
+        series = {0: _motif_series(300, seed=30), 1: _motif_series(70, seed=31)}
+        for sid, v in series.items():
+            b.submit(sid, v)
+        blob = b.finalize()
+        _, kb_bytes = parse_framed_container(blob)
+        assert kb_bytes == b"" and read_snapshot_ref(blob) is not None
+        for sid, v in series.items():
+            assert np.array_equal(np.round(decode_series(blob, sid, 0.0), 4), v)
+        assert store.container("rag0") == blob
+
+    def test_range_query_batcher_kb_source(self):
+        store = KBStore(_CFG)
+        v = _motif_series(512, seed=32)
+        _, blob = _ref_codec(store, v, source="a")
+        rb = RangeQueryBatcher(blob, kb_store=store)
+        assert rb.stats["kb_source"] == "store"
+        rb2 = RangeQueryBatcher(blob)
+        assert rb2.stats["kb_source"] == "ref-unresolved"
+
+    def test_fleet_gossip_feeds_store(self):
+        store = KBStore(_CFG)
+        fleet = ShrinkFleet(
+            _CFG, eps_targets=_EPS, decimals=_DEC, n_shards=2,
+            kb_sync_every=None, kb_store=store,
+        )
+        for sid in range(6):
+            fleet.submit(sid, _motif_series(200, seed=33 + sid))
+        fleet.seal()
+        rec = fleet.kb_syncs[-1]
+        assert rec["store"]["live"] == store.live_count
+        # shards are the store's only sources: its semantic id equals the
+        # merged global KB's snapshot id exactly
+        assert rec["store"]["sem_id"] == fleet.global_kb.snapshot_id()
+        # repeat sync: replace semantics keep refs conserved
+        refs_once = store.stats()["total_refs"]
+        fleet.sync_kbs()
+        assert store.stats()["total_refs"] == refs_once

@@ -1,0 +1,145 @@
+"""Property-based tests (hypothesis) for the KB wire format and store.
+
+The contracts: for ANY knowledge base, ``to_bytes -> from_bytes``
+preserves positional entry ids and the canonical map exactly (the id
+space is load-bearing — frames index into it); SHKS snapshot round-trips
+preserve (version, sem_id, entries, tombstones); store attach/detach
+conserves reference counts exactly for ANY attach/detach interleaving;
+and gossip order cannot change the store's semantic id.  Skipped without
+the ``hypothesis`` dev extra.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ShrinkConfig
+from repro.core.streaming import KBEntry, KnowledgeBase, _slope_key
+from repro.serving.kbstore import KBStore, snapshot_from_bytes, snapshot_to_bytes
+
+_CFG = ShrinkConfig(eps_b=0.5, lam=1e-4)
+
+
+def _mk_kb(lines) -> KnowledgeBase:
+    """Build a KB from (level, origin_idx, slope_scaled, digits, refs)
+    tuples, dropping duplicates (the wire format rejects them)."""
+    kb = KnowledgeBase(_CFG)
+    for level, oidx, scaled, digits, refs in lines:
+        slope = scaled / 10**digits
+        key = (level, oidx) + _slope_key(slope, digits)
+        if key in kb._index:
+            continue
+        kb._index[key] = len(kb.entries)
+        kb.entries.append(
+            KBEntry(level=level, origin_idx=oidx, slope=slope,
+                    slope_digits=digits, refs=refs)
+        )
+    return kb
+
+
+_line = st.tuples(
+    st.integers(min_value=0, max_value=6),        # level
+    st.integers(min_value=0, max_value=10_000),   # origin_idx
+    st.integers(min_value=-10**6, max_value=10**6),  # slope, scaled
+    st.integers(min_value=0, max_value=6),        # slope digits
+    st.integers(min_value=0, max_value=50),       # refs
+)
+_kb_strategy = st.lists(_line, min_size=0, max_size=40).map(_mk_kb)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_kb_strategy)
+def test_kb_roundtrip_preserves_positional_ids_and_canonical(kb):
+    """Satellite contract: serialization must never shift entry ids —
+    every decoded entry sits at its original positional id with identical
+    fields, and the canonical map (the semantic identity) is exact."""
+    back = KnowledgeBase.from_bytes(kb.to_bytes())
+    assert len(back.entries) == len(kb.entries)
+    for eid, (a, b) in enumerate(zip(kb.entries, back.entries)):
+        assert a == b, eid
+    assert back.canonical() == kb.canonical()
+    assert back.snapshot_id() == kb.snapshot_id()
+    # the lookup index agrees positionally too (same key -> same id)
+    assert back._index == kb._index
+
+
+@st.composite
+def _kb_and_tombstones(draw):
+    """A live KB plus a valid tombstone set: tombstone ids must lie inside
+    the combined positional id space [0, live + n_tomb)."""
+    kb = draw(_kb_strategy)
+    k = draw(st.integers(min_value=0, max_value=8))
+    total = len(kb.entries) + k
+    tombs = sorted(draw(
+        st.sets(st.integers(min_value=0, max_value=total - 1),
+                min_size=k, max_size=k)
+    )) if k else []
+    return kb, tombs
+
+
+@settings(max_examples=40, deadline=None)
+@given(_kb_and_tombstones(), st.integers(min_value=1, max_value=10**6))
+def test_shks_snapshot_roundtrip(kb_tombs, version):
+    """SHKS round-trip: (version, sem_id, live entries, tombstone set)
+    survive exactly; live entries land at their gap-adjusted positional
+    slots in the master view."""
+    kb, tombs = kb_tombs
+    blob = snapshot_to_bytes(version, kb.snapshot_id(), kb, tombs)
+    got_version, got_sem, master, got_tombs = snapshot_from_bytes(blob)
+    assert got_version == version
+    assert got_sem == kb.snapshot_id() & 0xFFFFFFFF
+    assert got_tombs == set(tombs)
+    assert len(master.entries) == len(kb.entries) + len(tombs)
+    live_ids = [
+        i for i in range(len(master.entries)) if i not in got_tombs
+    ]
+    for slot, e in zip(live_ids, kb.entries):
+        assert master.entries[slot] == e
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(_kb_strategy, min_size=1, max_size=5),
+    st.randoms(use_true_random=False),
+)
+def test_attach_detach_conserves_refs(kbs, rnd):
+    """For ANY interleaving of attaches and detaches, the store's total
+    live refcount equals the sum over currently-attached KBs — and
+    detaching everything returns it to zero."""
+    store = KBStore(_CFG)
+    attached = {}
+    ops = [("attach", i) for i in range(len(kbs))]
+    rnd.shuffle(ops)
+    for op, i in ops:
+        rec = store.attach_kb(kbs[i], source=f"s{i}")
+        attached[i] = rec.handle
+        if rnd.random() < 0.4:
+            store.detach(attached.pop(i))
+        expected = sum(
+            sum(e.refs for e in kbs[j].entries) for j in attached
+        )
+        assert store.stats()["total_refs"] == expected
+    for h in attached.values():
+        store.detach(h)
+    assert store.stats()["total_refs"] == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(_kb_strategy, min_size=1, max_size=5),
+    st.randoms(use_true_random=False),
+)
+def test_gossip_order_invariant_sem_id(kbs, rnd):
+    """The store's semantic id after gossiping a set of shard KBs cannot
+    depend on gossip order (mirrors the fleet's merge-order invariance)."""
+    order = list(range(len(kbs)))
+    store_a = KBStore(_CFG)
+    for i in order:
+        store_a.gossip(f"shard{i}", kbs[i])
+    rnd.shuffle(order)
+    store_b = KBStore(_CFG)
+    for i in order:
+        store_b.gossip(f"shard{i}", kbs[i])
+    assert store_a.sem_id() == store_b.sem_id()
+    assert store_a.live_count == store_b.live_count

@@ -213,3 +213,155 @@ def test_kb_from_bytes_negative():
     for cut in range(len(blob)):
         with pytest.raises(ValueError):
             KnowledgeBase.from_bytes(blob[:cut])
+
+
+def _populated_kb() -> KnowledgeBase:
+    from repro.core.streaming import KBEntry, _slope_key
+
+    kb = KnowledgeBase(ShrinkConfig(eps_b=0.5))
+    for level, oidx, slope, digits, refs in [
+        (0, 3, 1.25, 2, 4), (1, 7, -0.5, 1, 1), (0, 40, 0.0, 0, 9),
+    ]:
+        kb._index[(level, oidx) + _slope_key(slope, digits)] = len(kb.entries)
+        kb.entries.append(KBEntry(level=level, origin_idx=oidx, slope=slope,
+                                  slope_digits=digits, refs=refs))
+    return kb
+
+
+def test_kb_from_bytes_truncated_at_every_entry_boundary():
+    """A POPULATED blob (the empty one never exercises the entry loop)
+    must raise at every truncation point, and exact length must decode."""
+    blob = _populated_kb().to_bytes()
+    for cut in range(len(blob)):
+        with pytest.raises(ValueError):
+            KnowledgeBase.from_bytes(blob[:cut])
+    assert len(KnowledgeBase.from_bytes(blob).entries) == 3
+
+
+def test_kb_from_bytes_rejects_trailing_garbage():
+    """Frames index the KB positionally — a parser that tolerates extra
+    bytes would mask writer bugs and concatenation corruption."""
+    from repro.core.errors import FormatError
+
+    blob = _populated_kb().to_bytes()
+    for junk in (b"\x00", b"\xff" * 7, _populated_kb().to_bytes()):
+        with pytest.raises(FormatError, match="trailing"):
+            KnowledgeBase.from_bytes(blob + junk)
+    # the empty KB's blob must reject trailing bytes too
+    empty = KnowledgeBase(ShrinkConfig(eps_b=0.5)).to_bytes()
+    with pytest.raises(FormatError, match="trailing"):
+        KnowledgeBase.from_bytes(empty + b"\x00")
+
+
+def test_kb_from_bytes_rejects_duplicate_lines():
+    """A duplicate line would silently collapse via the merge path and
+    shift every later positional id — it must be a FormatError instead."""
+    import dataclasses
+
+    from repro.core.errors import FormatError
+
+    kb = _populated_kb()
+    kb.entries.append(dataclasses.replace(kb.entries[0]))  # bypass _index
+    blob = kb.to_bytes()
+    with pytest.raises(FormatError, match="duplicate"):
+        KnowledgeBase.from_bytes(blob)
+
+
+# -------------------------------------------------- SHRKS v2 ref section
+def _patched_footer(blob: bytes, mutate) -> bytes:
+    """Rewrite a container's footer through ``mutate`` and reseal the tail
+    CRC, so the footer-section parsers (not the CRC check) are what reject
+    the result."""
+    import struct
+    import zlib
+
+    footer_offset, _ = struct.unpack_from("<QI", blob, len(blob) - 16)
+    footer = bytearray(blob[footer_offset:-16])
+    mutate(footer)
+    return (
+        blob[:footer_offset]
+        + bytes(footer)
+        + struct.pack("<QI", footer_offset, zlib.crc32(bytes(footer)) & 0xFFFFFFFF)
+        + blob[-4:]
+    )
+
+
+def test_framed_rejects_v1_version_byte(shrks_blob):
+    """v1 containers (no kb_snapshot_ref section) must be rejected by
+    version, not misparsed."""
+    with pytest.raises(ValueError, match="version"):
+        parse_framed_container(shrks_blob[:5] + b"\x01" + shrks_blob[6:])
+
+
+def test_framed_rejects_bad_ref_flag(shrks_blob):
+    """The kb_snapshot_ref flag byte admits exactly {0, 1}."""
+    def bump_flag(footer):
+        assert footer[-1] == 0  # inline-only container: flag is last
+        footer[-1] = 2
+
+    with pytest.raises(ValueError, match="flag"):
+        parse_framed_container(_patched_footer(shrks_blob, bump_flag))
+
+
+def test_framed_rejects_missing_ref_flag(shrks_blob):
+    """A v2 footer that ends at the KB section (v1 shape) is truncated."""
+    def strip_flag(footer):
+        assert footer[-1] == 0
+        del footer[-1]
+
+    with pytest.raises(ValueError, match="flag"):
+        parse_framed_container(_patched_footer(shrks_blob, strip_flag))
+
+
+def test_framed_rejects_trailing_footer_bytes(shrks_blob):
+    def append_junk(footer):
+        footer += b"\x00\x00"
+
+    with pytest.raises(ValueError, match="trailing"):
+        parse_framed_container(_patched_footer(shrks_blob, append_junk))
+
+
+def test_framed_ref_section_negative():
+    """Ref-carrying footers: truncations inside the ref section raise, a
+    remap id outside the declared snapshot id space is corrupt, and the
+    parsed ref round-trips exactly."""
+    from repro.core.serialize import (
+        FramedWriter,
+        KBSnapshotRef,
+        read_snapshot_ref,
+    )
+
+    v = _series(300)
+    cfg = ShrinkConfig(eps_b=0.05 * float(v.max() - v.min()), lam=1e-3)
+    payload = cs_to_bytes(ShrinkCodec(config=cfg, backend="rans").compress(v, [1e-2]))
+    ref = KBSnapshotRef(version=3, entries=10, sem_id=0xDEADBEEF,
+                        remap=(0, 4, 9), refs=(2, 1, 7))
+    w = FramedWriter()
+    w.add_frame(0, 0, 300, 0, payload)
+    blob = w.finish(b"", snapshot_ref=ref)
+    assert read_snapshot_ref(blob) == ref
+
+    # truncate the footer inside the ref section (drop the last refs byte)
+    def chop(footer):
+        del footer[-1]
+
+    with pytest.raises(ValueError):
+        parse_framed_container(_patched_footer(blob, chop))
+
+    # a remap id >= entries must be rejected, not silently resolved
+    bad_ref = KBSnapshotRef(version=3, entries=10, sem_id=0xDEADBEEF,
+                            remap=(0, 4, 10), refs=(2, 1, 7))
+    w2 = FramedWriter()
+    w2.add_frame(0, 0, 300, 0, payload)
+    bad_blob = w2.finish(b"", snapshot_ref=bad_ref)
+    with pytest.raises(ValueError, match="remap"):
+        parse_framed_container(bad_blob)
+
+    # remap/refs length mismatch is a writer-side ConfigError
+    from repro.core.errors import ConfigError
+
+    w3 = FramedWriter()
+    w3.add_frame(0, 0, 300, 0, payload)
+    with pytest.raises(ConfigError, match="mismatch"):
+        w3.finish(b"", snapshot_ref=KBSnapshotRef(
+            version=1, entries=5, sem_id=0, remap=(0, 1), refs=(1,)))
